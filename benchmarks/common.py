@@ -1,0 +1,96 @@
+"""Shared benchmark harness.
+
+Experiments run against the functional cluster (exact RTs/op, real
+cache/index state) at a scaled-down key count; wall-clock figures come
+from the calibrated cost model (core.netmodel). Scaling keeps the
+paper's *ratios* (cache bytes : dataset bytes, working set : dataset)
+so cache dynamics are preserved.
+
+Paper setup (Sec. 5): 32 GB dataset, 1 KB values, 1 GB cache/KN (~1% of
+DPM), zipf {0.5, 0.99, 2.0}, 16 KNs max. Scale factor here: dataset
+100k keys (=100 MB represented), cache/KN = 1% = 1 MB.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import (CLOVER, DINOMO, DINOMO_N, DINOMO_S, VARIANTS,
+                        DinomoCluster, NetModel, DEFAULT_MODEL)
+from repro.data import MIXES, Workload
+
+NUM_KEYS = 100_000
+VALUE_BYTES = 1024
+# paper: 1 GB cache/KN vs 32 GB dataset -> per-KN cache ~3.1% of dataset
+CACHE_BYTES = NUM_KEYS * VALUE_BYTES // 32
+DATASET_BYTES_REPRESENTED = 32e9                  # what the scale stands for
+
+
+@dataclass
+class RunResult:
+    name: str
+    rts_per_op: float
+    hit_ratio: float
+    value_hit_ratio: float
+    throughput: float
+    us_per_call: float
+    extra: dict
+
+
+def build_cluster(variant_name: str, num_kns: int,
+                  cache_bytes: int = CACHE_BYTES,
+                  num_keys: int = NUM_KEYS, seed: int = 0):
+    c = DinomoCluster(VARIANTS[variant_name], num_kns=num_kns,
+                      cache_bytes=cache_bytes, value_bytes=VALUE_BYTES,
+                      num_buckets=1 << 17, segment_capacity=512,
+                      seed=seed)
+    c.load(((k, f"v{k}") for k in range(num_keys)), warm=True)
+    return c
+
+
+def run_workload(c: DinomoCluster, mix: str, zipf: float, n_ops: int,
+                 num_keys: int = NUM_KEYS, seed: int = 0,
+                 model: NetModel = DEFAULT_MODEL,
+                 warmup_frac: float = 1.0) -> RunResult:
+    w = Workload(num_keys=num_keys, zipf=zipf, mix=mix, seed=seed)
+
+    def execute(ops, count_writes=False):
+        writes = 0
+        for i, (kind, key) in enumerate(ops):
+            if kind == "read":
+                c.read(key)
+            else:
+                writes += 1
+                c.write(key, f"w{i}")
+            if i % 512 == 0:
+                c.advance_merge(2048)
+        c.advance_merge(1 << 30)
+        return writes
+
+    # warm-up pass (the paper measures after a 1-minute warm-up)
+    if warmup_frac > 0:
+        execute(w.ops(int(n_ops * warmup_frac)))
+        c.reset_stats()
+    ops = w.ops(n_ops)
+    t0 = time.perf_counter()
+    writes = execute(ops)
+    dt = time.perf_counter() - t0
+    s = c.aggregate_stats()
+    tput = model.cluster_throughput(
+        num_kns=s["num_kns"], rts_per_op=max(s["rts_per_op"], 1e-3),
+        value_bytes=VALUE_BYTES, write_fraction=writes / n_ops,
+        metadata_server_cap=(model.clover_ms_ops
+                             if c.variant.name == "clover" else None))
+    return RunResult(
+        name=f"{c.variant.name}-{s['num_kns']}kn-{mix}-z{zipf}",
+        rts_per_op=s["rts_per_op"], hit_ratio=s["hit_ratio"],
+        value_hit_ratio=s["value_hit_ratio"], throughput=tput,
+        us_per_call=dt / n_ops * 1e6,
+        extra={"write_stalls": s["write_stalls"]})
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

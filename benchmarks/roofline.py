@@ -1,0 +1,110 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and
+derives, per (arch x shape) on the single-pod 16x16 mesh:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s     (197e12 bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw          (819e9)
+  collective term = collective_bytes_per_device / ICI_bw   (~50e9/link)
+
+plus the dominant term, MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D
+(MoE; decode/prefill use 2*N*D_tokens), and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs. All per-device figures are post-SPMD and
+trip-count-aware (launch.hlo_analysis).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ALIASES, SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+
+def model_flops_per_device(arch: str, shape_name: str,
+                           devices: int = 256) -> float:
+    """Analytic 'useful' FLOPs for the cell, per device."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / devices
+
+
+def load_artifacts(art_dir: str = "artifacts/dryrun", mesh: str = "sp"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir,
+                                              f"*__{mesh}.json"))):
+        rows.append(json.load(open(path)))
+    return rows
+
+
+def roofline_row(rec: dict) -> dict:
+    arch, shape = rec["arch"], rec["shape"]
+    if rec.get("status") != "OK":
+        return {"arch": arch, "shape": shape,
+                "status": rec.get("status", "?"),
+                "error": rec.get("error", "")[:90]}
+    devices = rec["devices"]
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS_BF16
+    t_mem = rec["bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes"] / ICI_BW_PER_LINK
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(arch, shape, devices)
+    bound = max(terms.values())
+    return {
+        "arch": arch, "shape": shape, "status": "OK",
+        "step": rec.get("step", ""),
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / rec["flops_per_device"]
+        if rec["flops_per_device"] else 0.0,
+        # roofline fraction: useful compute time / actual bound time
+        "roofline_frac": (mf / PEAK_FLOPS_BF16) / bound if bound else 0.0,
+        "hbm_gb": rec["memory"]["argument_bytes"] / 1e9
+        + rec["memory"]["temp_bytes"] / 1e9,
+    }
+
+
+def main(art_dir: str = "artifacts/dryrun"):
+    rows = [roofline_row(r) for r in load_artifacts(art_dir)]
+    if not rows:
+        print("# roofline: no dry-run artifacts found "
+              f"(run python -m repro.launch.dryrun --all --out {art_dir})")
+        return 0.0, "no_artifacts"
+    print("# roofline (16x16 single pod, per device): terms in ms")
+    print("arch,shape,step,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_ratio,roofline_frac,hbm_gb")
+    ok = 0
+    for r in rows:
+        if r["status"] != "OK":
+            print(f"{r['arch']},{r['shape']},{r['status']},,,,,,,")
+            continue
+        ok += 1
+        print(f"{r['arch']},{r['shape']},{r['step']},"
+              f"{r['compute_s'] * 1e3:.2f},{r['memory_s'] * 1e3:.2f},"
+              f"{r['collective_s'] * 1e3:.3f},{r['dominant']},"
+              f"{r['useful_ratio']:.2f},{r['roofline_frac']:.3f},"
+              f"{r['hbm_gb']:.2f}")
+    doms = {}
+    for r in rows:
+        if r["status"] == "OK":
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    derived = f"cells_ok={ok};dominants={doms}"
+    print(f"# {derived}")
+    return 0.0, derived
+
+
+if __name__ == "__main__":
+    main()

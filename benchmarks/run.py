@@ -1,0 +1,108 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark runner: one entry per paper table/figure + the roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import csv_line
+
+
+def bench_fig3(fast):
+    from .fig3_cache_policies import main
+    us, derived, _ = main(n_ops=15_000 if fast else 40_000)
+    return us, derived
+
+
+def bench_tab5(fast):
+    from .tab5_rts_per_op import main
+    return main(n_ops=10_000 if fast else 30_000)
+
+
+def bench_fig4(fast):
+    from .fig4_dpm_compute import main
+    return main()
+
+
+def bench_fig5(fast):
+    from .fig5_scalability import main
+    mixes = ["read_only", "write_heavy_update"] if fast else None
+    us, derived, _ = main(n_ops=8_000 if fast else 25_000, mixes=mixes)
+    return us, derived
+
+
+def bench_tab6(fast):
+    from .tab6_profiling import main
+    return main(n_ops=8_000 if fast else 20_000)
+
+
+def bench_fig6(fast):
+    from .fig6_elasticity import main
+    return main(duration=200.0 if fast else 300.0)
+
+
+def bench_fig7(fast):
+    from .fig7_load_balancing import main
+    return main(duration=120.0 if fast else 180.0)
+
+
+def bench_fig8(fast):
+    from .fig8_fault_tolerance import main
+    return main(duration=100.0 if fast else 120.0)
+
+
+def bench_roofline(fast):
+    from .roofline import main
+    return main()
+
+
+BENCHES = [
+    ("fig3_cache_policies", bench_fig3),
+    ("tab5_rts_per_op", bench_tab5),
+    ("fig4_dpm_compute", bench_fig4),
+    ("fig5_scalability", bench_fig5),
+    ("tab6_profiling", bench_tab6),
+    ("fig6_elasticity", bench_fig6),
+    ("fig7_load_balancing", bench_fig7),
+    ("fig8_fault_tolerance", bench_fig8),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced op counts / durations")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    lines = []
+    failures = 0
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            us, derived = fn(args.fast)
+            lines.append(csv_line(name, us, derived))
+        except Exception as e:
+            failures += 1
+            lines.append(csv_line(name, 0.0,
+                                  f"ERROR:{type(e).__name__}:{e}"))
+        print(f"===== {name} done in {time.time() - t0:.0f}s =====",
+              flush=True)
+
+    print("\n# ===== summary: name,us_per_call,derived =====")
+    for line in lines:
+        print(line)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Table 6: cache hit ratios and RTs/op across all mixes at 16 KNs
+(plus 1 KN for the contrast the paper highlights).
+
+Expected reproduction: DINOMO 100% hits with value-hit share growing
+with KN count; DINOMO-S 100% shortcut hits (~1 RT/op reads); Clover's
+hit ratio *decreases* with more KNs (redundant caching); DINOMO
+write-heavy RTs/op lowest of all (batched log writes).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import MIXES
+from .common import build_cluster, run_workload
+
+
+def main(n_ops: int = 20_000):
+    print("# tab6: hit ratio / value-hit share / RTs per op")
+    print("mix,system,kns,hit_ratio,value_hit_share,rts_per_op")
+    us = []
+    rows = {}
+    for mix in MIXES:
+        for sysname in ("dinomo", "dinomo-s", "clover"):
+            for kns in (1, 16):
+                c = build_cluster(sysname, kns)
+                r = run_workload(c, mix, 0.99, n_ops)
+                us.append(r.us_per_call)
+                rows[(mix, sysname, kns)] = r
+                print(f"{mix},{sysname},{kns},{r.hit_ratio:.3f},"
+                      f"{r.value_hit_ratio:.3f},{r.rts_per_op:.2f}")
+    d_hit = min(rows[(m, "dinomo", 16)].hit_ratio for m in MIXES)
+    vh1 = np.mean([rows[(m, "dinomo", 1)].value_hit_ratio
+                   for m in MIXES])
+    vh16 = np.mean([rows[(m, "dinomo", 16)].value_hit_ratio
+                    for m in MIXES])
+    c_drop = all(rows[(m, "clover", 16)].hit_ratio
+                 < rows[(m, "clover", 1)].hit_ratio for m in MIXES)
+    d_rts = max(rows[(m, "dinomo", 16)].rts_per_op for m in MIXES)
+    derived = (f"dinomo16_min_hit={d_hit:.2f};"
+               f"value_share_1kn={vh1:.2f}->16kn={vh16:.2f};"
+               f"clover_hit_drops_with_kns={c_drop};"
+               f"dinomo16_max_rts={d_rts:.2f}")
+    print(f"# {derived}")
+    return float(np.mean(us)), derived
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving on the DINOMO paged KV-cache store.
+
+Shows the full serving story: shared-prefix admission (selective
+replication of hot prompt pages), owner-partitioned decode attention,
+and mid-flight worker reconfiguration with identical logits and zero
+page movement.
+
+Run:  PYTHONPATH=src python examples/serve_paged.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen1.5-0.5b", "--requests", "6",
+          "--prompt-len", "24", "--decode-steps", "8",
+          "--reconfig-at", "3"])

@@ -1,0 +1,12 @@
+"""repro — DINOMO (VLDB'22) reproduced as a JAX/TPU framework.
+
+Layers:
+  core/        the paper's contribution (OP, DAC, selective replication, log+merge)
+  kvcache/     DINOMO applied to paged LLM KV-cache serving
+  embedding/   hot-row selective replication for huge embedding tables
+  models/      assigned-architecture model zoo (dense/MoE/SSM/hybrid/enc-dec)
+  kernels/     Pallas TPU kernels (+ pure-jnp oracles)
+  data/ optim/ checkpoint/ distributed/ configs/ launch/
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,205 @@
+"""Log-structured elastic checkpointing (DINOMO T4 applied to training).
+
+Checkpoints are written the way DINOMO writes data:
+  * every leaf tensor is appended as a *sealed segment* (write to a temp
+    file, fsync-equivalent flush, atomic rename == commit marker);
+  * a manifest (the 'metadata index') is merged *after* all segments are
+    durable, itself sealed by atomic rename; a crash between the two
+    leaves a consistent older checkpoint (un-merged segments are simply
+    garbage-collected, exactly like torn log entries);
+  * flushing is asynchronous (background executor) so the train loop
+    does not block -- the DPM-processor async-merge analogy;
+  * restore onto a *different mesh* re-maps shard ownership only: bytes
+    on disk never move when the cluster is resized (OP for checkpoints).
+
+Layout:
+  <dir>/segments/<step>/<leaf>.npy      (+ .crc)
+  <dir>/MANIFEST-<step>.json            (sealed by rename)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import zlib
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't natively round-trip bf16/fp8 through .npy: store such
+# arrays as raw uint views and restore the logical dtype from metadata.
+_EXOTIC = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_storage(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    name = str(arr.dtype)
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name][1]), name
+    return arr, name
+
+
+def _from_storage(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype in _EXOTIC:
+        return arr.view(_EXOTIC[dtype][0])
+    return arr
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(re.sub(r"[^A-Za-z0-9_.-]", "", str(p))
+                        for p in path)
+        out.append((name or "root", leaf))
+    return out
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, async_flush: bool = True,
+                 keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(os.path.join(directory, "segments"), exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=2) if async_flush \
+            else None
+        self._pending: list[Future] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def _write_segment(self, step: int, name: str, arr: np.ndarray):
+        seg_dir = os.path.join(self.dir, "segments", str(step))
+        os.makedirs(seg_dir, exist_ok=True)
+        fname = name.replace("/", "__") + ".npy"
+        tmp = os.path.join(seg_dir, "." + fname + ".tmp")
+        final = os.path.join(seg_dir, fname)
+        stored, logical = _to_storage(arr)
+        with open(tmp, "wb") as f:
+            np.save(f, stored)
+            f.flush()
+            os.fsync(f.fileno())
+        crc = zlib.crc32(open(tmp, "rb").read()) & 0xFFFFFFFF
+        os.replace(tmp, final)                      # seal (commit marker)
+        return fname, crc, arr.shape, logical
+
+    def save(self, step: int, tree, extra: dict | None = None) -> Future:
+        """Asynchronously persist ``tree``; returns a Future that resolves
+        when the manifest is sealed."""
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        leaves = _leaf_paths(host)
+
+        def flush():
+            entries = {}
+            for name, leaf in leaves:
+                fname, crc, shape, dtype = self._write_segment(step, name,
+                                                               leaf)
+                entries[name] = {"file": fname, "crc": crc,
+                                 "shape": list(shape), "dtype": dtype}
+            manifest = {"step": step, "entries": entries,
+                        "extra": extra or {}, "sealed": True}
+            tmp = os.path.join(self.dir, f".MANIFEST-{step}.tmp")
+            with open(tmp, "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, os.path.join(self.dir, f"MANIFEST-{step}.json"))
+            self._gc()
+            return step
+
+        if self._pool is None:
+            fut: Future = Future()
+            fut.set_result(flush())
+            return fut
+        fut = self._pool.submit(flush)
+        with self._lock:
+            self._pending.append(fut)
+        return fut
+
+    def wait(self):
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for f in pending:
+            f.result()
+
+    # ------------------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.dir):
+            m = re.match(r"MANIFEST-(\d+)\.json$", fn)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _valid(self, step: int) -> dict | None:
+        path = os.path.join(self.dir, f"MANIFEST-{step}.json")
+        try:
+            manifest = json.load(open(path))
+        except Exception:
+            return None
+        if not manifest.get("sealed"):
+            return None
+        seg_dir = os.path.join(self.dir, "segments", str(step))
+        for name, ent in manifest["entries"].items():
+            f = os.path.join(seg_dir, ent["file"])
+            if not os.path.exists(f):
+                return None
+            if (zlib.crc32(open(f, "rb").read()) & 0xFFFFFFFF) \
+                    != ent["crc"]:
+                return None                       # torn/corrupt segment
+        return manifest
+
+    def latest_valid(self) -> int | None:
+        for step in reversed(self.steps()):
+            if self._valid(step) is not None:
+                return step
+        return None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``template``. ``shardings`` (a
+        matching pytree of NamedSharding, or None) lets the same bytes be
+        re-owned by a different mesh -- the elastic-resize path."""
+        if step is None:
+            step = self.latest_valid()
+            if step is None:
+                raise FileNotFoundError("no valid checkpoint")
+        manifest = self._valid(step)
+        if manifest is None:
+            raise IOError(f"checkpoint {step} failed validation")
+        seg_dir = os.path.join(self.dir, "segments", str(step))
+        names = [n for n, _ in _leaf_paths(template)]
+        flat_t, treedef = jax.tree.flatten(template)
+        arrays = []
+        for name, leaf in zip(names, flat_t):
+            ent = manifest["entries"][name]
+            arr = np.load(os.path.join(seg_dir, ent["file"]))
+            arrays.append(_from_storage(arr, ent["dtype"]))
+        restored = jax.tree.unflatten(treedef, arrays)
+        if shardings is not None:
+            restored = jax.tree.map(
+                lambda a, s: jax.device_put(a, s) if s is not None
+                else jax.numpy.asarray(a), restored, shardings,
+                is_leaf=lambda x: x is None or not isinstance(x, dict))
+        else:
+            restored = jax.tree.map(jax.numpy.asarray, restored)
+        return restored, manifest["extra"], step
+
+    def _gc(self):
+        steps = self.steps()
+        valid = [s for s in steps if self._valid(s) is not None]
+        for s in valid[:-self.keep] if self.keep else []:
+            try:
+                os.remove(os.path.join(self.dir, f"MANIFEST-{s}.json"))
+                seg = os.path.join(self.dir, "segments", str(s))
+                for f in os.listdir(seg):
+                    os.remove(os.path.join(seg, f))
+                os.rmdir(seg)
+            except OSError:
+                pass

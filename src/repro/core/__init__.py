@@ -1,0 +1,23 @@
+# DINOMO's contribution, reproduced: ownership partitioning, adaptive
+# caching, selective replication, log-structured writes w/ async merge,
+# and the M-node policy engine -- on real data structures with exact RT
+# accounting (the JAX/Pallas data plane lives in clht.py / log.py and
+# src/repro/kernels; the serving integration in src/repro/kvcache).
+from .cluster import (CLOVER, DINOMO, DINOMO_N, DINOMO_S, VARIANTS,
+                      DinomoCluster, VariantConfig)
+from .dac import DAC, StaticCache
+from .dpm_pool import DPMPool
+from .hashring import HashRing, stable_hash
+from .linearizability import Op, check_history, check_key_history
+from .mnode import Action, EpochStats, PolicyConfig, PolicyEngine
+from .netmodel import DEFAULT_MODEL, NetModel
+from .ownership import OwnershipMap, ReconfigEvent
+from .simulate import TimedSimulation
+
+__all__ = [
+    "DinomoCluster", "VariantConfig", "DINOMO", "DINOMO_S", "DINOMO_N",
+    "CLOVER", "VARIANTS", "DAC", "StaticCache", "DPMPool", "HashRing",
+    "stable_hash", "Op", "check_history", "check_key_history", "Action",
+    "EpochStats", "PolicyConfig", "PolicyEngine", "NetModel",
+    "DEFAULT_MODEL", "OwnershipMap", "ReconfigEvent", "TimedSimulation",
+]

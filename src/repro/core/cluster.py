@@ -1,0 +1,455 @@
+"""The DINOMO cluster: clients -> RNs -> KNs -> DPM pool (paper Fig. 1).
+
+This is the functional simulator: every request actually runs against
+the real data structures (DAC caches, CLHT index, log segments,
+indirection table), and the exact number of network round trips is
+accounted per operation -- the paper's primary cost metric (Tables 5/6).
+Wall-clock figures are derived from RT counts via core.netmodel.
+
+Four system variants share this machinery (paper Sec. 5):
+  dinomo    OP + DAC + selective replication          (the paper's system)
+  dinomo-s  OP + shortcut-only cache                  (isolates DAC's benefit)
+  dinomo-n  shared-nothing + DAC                      (AsymNVM stand-in)
+  clover    shared-everything + shortcut-only cache   (state of the art)
+"""
+
+from __future__ import annotations
+
+import random
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from .dac import DAC, StaticCache, CacheStats
+from .dpm_pool import DPMPool
+from .mnode import PolicyConfig, PolicyEngine
+from .netmodel import NetModel, DEFAULT_MODEL
+from .hashring import stable_hash
+from .ownership import OwnershipMap, ReconfigEvent
+
+
+@dataclass(frozen=True)
+class VariantConfig:
+    name: str
+    cache_policy: str          # "dac" | "shortcut" | "value" | "static:<f>" | "clover"
+    architecture: str          # "op" | "shared_nothing" | "shared_everything"
+    selective_replication: bool
+
+
+DINOMO = VariantConfig("dinomo", "dac", "op", True)
+DINOMO_S = VariantConfig("dinomo-s", "shortcut", "op", True)
+DINOMO_N = VariantConfig("dinomo-n", "dac", "shared_nothing", False)
+CLOVER = VariantConfig("clover", "clover", "shared_everything", False)
+VARIANTS = {v.name: v for v in (DINOMO, DINOMO_S, DINOMO_N, CLOVER)}
+
+
+def make_cache(policy: str, capacity_bytes: int):
+    if policy == "dac":
+        return DAC(capacity_bytes)
+    if policy == "shortcut":
+        return StaticCache(capacity_bytes, 0.0)
+    if policy == "value":
+        return StaticCache(capacity_bytes, 1.0)
+    if policy.startswith("static:"):
+        return StaticCache(capacity_bytes, float(policy.split(":")[1]))
+    if policy == "clover":
+        return CloverCache(capacity_bytes)
+    raise ValueError(f"unknown cache policy {policy!r}")
+
+
+class CloverCache:
+    """Clover KNs keep a shortcut-only cache whose entries can go stale:
+    out-of-place updates grow a version chain that readers must walk."""
+
+    def __init__(self, capacity_bytes: int, entry_bytes: int = 32):
+        self.cap_entries = max(capacity_bytes // entry_bytes, 1)
+        self.entries: OrderedDict[int, int] = OrderedDict()  # key -> version
+        self.stats = CacheStats()
+
+    def lookup(self, key: int):
+        v = self.entries.get(key)
+        if v is None:
+            self.stats.misses += 1
+            return None
+        self.entries.move_to_end(key)
+        self.stats.shortcut_hits += 1
+        return v
+
+    def fill(self, key: int, version: int):
+        self.entries[key] = version
+        self.entries.move_to_end(key)
+        while len(self.entries) > self.cap_entries:
+            self.entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self):
+        self.entries.clear()
+
+
+@dataclass
+class KNStats:
+    ops: int = 0
+    rts: float = 0.0
+    reads: int = 0
+    writes: int = 0
+    write_stalls: int = 0
+    refused: int = 0
+
+    def reset_window(self):
+        self.ops = 0
+        self.rts = 0.0
+        self.reads = 0
+        self.writes = 0
+
+
+class KVSNode:
+    """One KN: cache + exclusive log + soft ownership state."""
+
+    def __init__(self, name: str, variant: VariantConfig, cache_bytes: int,
+                 pool: DPMPool, write_batch: int = 8,
+                 segcache_segments: int = 4):
+        self.name = name
+        self.variant = variant
+        self.cache = make_cache(variant.cache_policy, cache_bytes)
+        self.pool = pool
+        self.write_batch = write_batch
+        self._pending_flush = 0
+        # committed/un-merged segments cached locally (paper Sec. 4):
+        # keys here are readable with zero RTs at the writing KN.
+        self.segcache: OrderedDict[int, tuple[int, int]] = OrderedDict()
+        self.segcache_cap = segcache_segments * pool.segment_capacity
+        self.stats = KNStats()
+        self.alive = True
+        self.available = True      # False while participating in a reconfig
+
+    # ----- helpers ---------------------------------------------------------
+    def _segcache_put(self, key: int, ptr: int, length: int):
+        self.segcache[key] = (ptr, length)
+        self.segcache.move_to_end(key)
+        while len(self.segcache) > self.segcache_cap:
+            self.segcache.popitem(last=False)
+
+    def flush_rts(self) -> float:
+        """Amortized one-sided log-write cost: one RT per batch."""
+        self._pending_flush += 1
+        if self._pending_flush >= self.write_batch:
+            self._pending_flush = 0
+            return 1.0
+        return 0.0
+
+    def clear_soft_state(self):
+        self.cache.clear()
+        self.segcache.clear()
+
+
+class DinomoCluster:
+    """End-to-end cluster with exact RT accounting."""
+
+    def __init__(self, variant: VariantConfig = DINOMO, num_kns: int = 4,
+                 cache_bytes: int = 1 << 20, value_bytes: int = 1024,
+                 model: NetModel = DEFAULT_MODEL,
+                 policy: PolicyConfig | None = None,
+                 num_buckets: int = 1 << 18, segment_capacity: int = 2048,
+                 vnodes: int = 64, seed: int = 0):
+        self.variant = variant
+        self.model = model
+        self.value_bytes = value_bytes
+        self.cache_bytes = cache_bytes
+        self.pool = DPMPool(num_buckets=num_buckets,
+                            segment_capacity=segment_capacity)
+        self.ownership = OwnershipMap(vnodes=vnodes)
+        self.kns: dict[str, KVSNode] = {}
+        self.mnode = PolicyEngine(policy or PolicyConfig())
+        self.rng = random.Random(seed)
+        self._kn_counter = 0
+        self._seq = 0
+        # Clover: per-key version counters + metadata-server op count
+        self.versions: dict[int, int] = {}
+        self.ms_ops = 0
+        self.reconfig_log: list[dict] = []
+        for _ in range(num_kns):
+            self.add_kn(record=False)
+
+    # ---------------------------------------------------------------------
+    # membership
+    # ---------------------------------------------------------------------
+    def _new_kn_name(self) -> str:
+        self._kn_counter += 1
+        return f"kn{self._kn_counter}"
+
+    def add_kn(self, record: bool = True) -> tuple[str, ReconfigEvent | None]:
+        name = self._new_kn_name()
+        self.pool.register_kn(name)
+        self.kns[name] = KVSNode(name, self.variant, self.cache_bytes,
+                                 self.pool)
+        ev = self.ownership.add_kn(name)
+        cost = self._reconfigure(ev) if record else None
+        return name, ev if record else None
+
+    def remove_kn(self, name: str) -> ReconfigEvent:
+        ev = self.ownership.remove_kn(name)
+        self._reconfigure(ev)
+        self.pool.drop_kn(name)
+        del self.kns[name]
+        return ev
+
+    def fail_kn(self, name: str) -> ReconfigEvent:
+        """Fail-stop KN failure: DRAM (cache) contents lost; its pending
+        log segments survive in DPM and are merged by a peer."""
+        kn = self.kns[name]
+        kn.alive = False
+        kn.clear_soft_state()          # DRAM lost
+        ev = self.ownership.remove_kn(name, failed=True)
+        self._reconfigure(ev, failed=name)
+        del self.kns[name]
+        return ev
+
+    def _reconfigure(self, ev: ReconfigEvent, failed: str | None = None):
+        """Paper Sec. 3.5 seven-step protocol. Returns a cost record with
+        the synchronous-merge size (netmodel converts to seconds).
+
+        Steps: (1) identify participants, (2) participants unavailable,
+        (3) synchronously merge their pending logs, (4) new mapping,
+        (5) participants available (others already serving; wrongly
+        routed requests are refused), (6)/(7) async propagation."""
+        participants = [p for p in ev.participants if p in self.kns]
+        for p in participants:
+            self.kns[p].available = False                 # step 2
+        merged = 0
+        if failed is not None:
+            merged += self.pool.merge_all(failed)         # peer merges
+            self.pool.drop_kn(failed)
+        for p in participants:
+            merged += self.pool.merge_all(p)              # step 3
+        moved_fraction = 0.0
+        if self.variant.architecture == "shared_nothing":
+            # AsymNVM-style: physical data reorganization is required.
+            moved_fraction = 1.0 / max(len(self.kns), 1)
+        for p in participants:
+            if self.kns[p].alive:
+                self.kns[p].clear_soft_state()            # ownership moved
+                self.kns[p].available = True              # step 5
+        # durable policy metadata so restarted nodes can rebuild
+        self.pool.policy_metadata["ownership"] = self.ownership.snapshot_blob()
+        rec = {"event": ev.kind, "node": ev.node,
+               "participants": sorted(ev.participants),
+               "merged_entries": merged,
+               "moved_fraction": moved_fraction,
+               "version": ev.new_version}
+        self.reconfig_log.append(rec)
+        return rec
+
+    # ---------------------------------------------------------------------
+    # selective replication mechanics (policy lives in mnode)
+    # ---------------------------------------------------------------------
+    def replicate_key(self, key: int, factor: int) -> None:
+        if not self.variant.selective_replication:
+            return
+        # pending log entries for this key must reach the index before
+        # the indirection slot snapshots it (paper: merge-before-share)
+        for owner in self.ownership.owners(key):
+            if owner in self.kns:
+                self.pool.merge_all(owner)
+        self.pool.install_indirect(key)
+        owners = self.ownership.replicate(key, factor)
+        # indirect pointers forbid value caching (paper Sec. 5.3)
+        for o in owners:
+            if o in self.kns:
+                self.kns[o].cache.demote_to_shortcut(key)
+
+    def dereplicate_key(self, key: int) -> None:
+        for o in self.ownership.owners(key):
+            if o in self.kns:
+                self.kns[o].cache.invalidate(key)
+        self.ownership.dereplicate(key)
+        self.pool.remove_indirect(key)
+
+    # ---------------------------------------------------------------------
+    # request execution. Returns RTs charged (floats: write RTs amortize).
+    # ---------------------------------------------------------------------
+    def route(self, key: int) -> str:
+        if self.variant.architecture == "shared_everything":
+            # any KN serves any key: clients spread requests uniformly
+            names = [n for n, k in self.kns.items() if k.alive]
+            return self.rng.choice(names)
+        owners = [o for o in self.ownership.owners(key) if o in self.kns]
+        if not owners:
+            raise KeyError("no owner")
+        return owners[0] if len(owners) == 1 else self.rng.choice(owners)
+
+    def read(self, key: int, kn_name: str | None = None):
+        kn_name = kn_name or self.route(key)
+        kn = self.kns[kn_name]
+        if not kn.available or not kn.alive:
+            kn.stats.refused += 1
+            return None, 0.0, False
+        if self.variant.name == "clover":
+            return self._clover_read(kn, key)
+        kn.stats.ops += 1
+        kn.stats.reads += 1
+        replicated = (self.variant.selective_replication
+                      and self.ownership.is_replicated(key))
+        rts = 0.0
+        value = None
+        hit = kn.cache.lookup(key)
+        if hit is not None:
+            kind, ptr, _len = hit
+            if kind == "value" and not replicated:
+                value = self.pool.read_value(ptr)[0]      # 0 RTs
+            elif replicated:
+                # shortcut names the indirection slot: 1 RT to read the
+                # indirect pointer + 1 RT to read the value
+                tgt = self.pool.read_indirect(key)
+                rts += 2.0
+                value = self.pool.read_value(tgt)[0] if tgt is not None \
+                    else None
+            else:
+                rts += 1.0                                 # one-sided read
+                value = self.pool.read_value(ptr)[0]
+        else:
+            seg = kn.segcache.get(key)
+            if seg is not None and not replicated:
+                ptr, length = seg
+                value = self.pool.read_value(ptr)[0]       # local segment
+                kn.cache.fill_after_write(key, ptr, length,
+                                          segment_cached=True)
+            else:
+                ptr, probes = self.pool.index_lookup(key)
+                rts += probes                               # index traversal
+                if ptr is None:
+                    kn.stats.rts += rts
+                    return None, rts, True
+                rts += 1.0                                  # value fetch
+                value, length = self.pool.read_value(ptr)
+                kn.cache.note_miss_rts(rts)
+                kn.cache.fill_after_miss(key, ptr, length)
+        kn.stats.rts += rts
+        return value, rts, True
+
+    def write(self, key: int, value, kn_name: str | None = None,
+              delete: bool = False):
+        kn_name = kn_name or self.route(key)
+        kn = self.kns[kn_name]
+        if not kn.available or not kn.alive:
+            kn.stats.refused += 1
+            return 0.0, False
+        if self.variant.name == "clover":
+            return self._clover_write(kn, key, value, delete)
+        kn.stats.ops += 1
+        kn.stats.writes += 1
+        self._seq += 1
+        rts = kn.flush_rts()       # amortized one-sided batched log write
+        length = 0 if delete else self.value_bytes
+        logical_key = -key - 1 if delete else key
+        replicated = (self.variant.selective_replication
+                      and self.ownership.is_replicated(key) and not delete)
+        ptr, rotated = self.pool.log_write(kn.name, logical_key,
+                                           None if delete else value, length)
+        if self.pool.write_blocked(kn.name):
+            kn.stats.write_stalls += 1
+            self.pool.merge_budget(self.pool.segment_capacity)
+        if replicated:
+            # atomically swing the indirect pointer: one-sided CAS
+            expect = self.pool.read_indirect(key)
+            self.pool.cas_indirect(key, expect, ptr)
+            rts += 1.0
+            kn.cache.update_pointer(key, ptr, length)
+        elif delete:
+            kn.cache.invalidate(key)
+            kn.segcache.pop(key, None)
+        else:
+            kn._segcache_put(key, ptr, length)
+            kn.cache.fill_after_write(key, ptr, length, segment_cached=True)
+        self.versions[key] = self.versions.get(key, 0) + 1
+        kn.stats.rts += rts
+        return rts, True
+
+    # ----- Clover request paths (shared everything, version chains) -------
+    def _clover_read(self, kn: KVSNode, key: int):
+        kn.stats.ops += 1
+        kn.stats.reads += 1
+        cur = self.versions.get(key, 0)
+        cached = kn.cache.lookup(key)
+        rts = 0.0
+        if cached is None:
+            self.ms_ops += 1            # two-sided RPC to metadata server
+            rts += 1.0                  # (modeled as 1 RT-equivalent + MS load)
+        ptr, _probes = self.pool.index_lookup(key)
+        if ptr is None:
+            kn.stats.rts += rts
+            return None, rts, True
+        stale = 0 if cached is None else max(cur - cached, 0)
+        # walk the version chain from the cached cursor: header + value
+        rts += 2.0 + stale
+        kn.cache.fill(key, cur)
+        value, _ = self.pool.read_value(ptr)
+        kn.stats.rts += rts
+        return value, rts, True
+
+    def _clover_write(self, kn: KVSNode, key: int, value, delete: bool):
+        kn.stats.ops += 1
+        kn.stats.writes += 1
+        length = 0 if delete else self.value_bytes
+        logical_key = -key - 1 if delete else key
+        ptr, _ = self.pool.log_write(kn.name, logical_key,
+                                     None if delete else value, length)
+        self.pool.merge_all(kn.name)    # Clover updates metadata in place
+        rts = 2.0                       # out-of-place append + link/CAS
+        self.versions[key] = self.versions.get(key, 0) + 1
+        kn.cache.fill(key, self.versions[key])
+        kn.stats.rts += rts
+        return rts, True
+
+    # ---------------------------------------------------------------------
+    # background work + bookkeeping
+    # ---------------------------------------------------------------------
+    def advance_merge(self, ops: int) -> int:
+        return self.pool.merge_budget(ops)
+
+    def load(self, items, warm: bool = False) -> None:
+        """Bulk-load the dataset (untimed, as in the paper's load phase).
+        ``warm=True`` reproduces the load-through-KN effect: under OP the
+        owner inserted every key it owns, so it holds a shortcut for
+        free; under shared-everything each key was handled by one
+        arbitrary KN."""
+        items = list(items)
+        self.pool.bulk_load((k, v, self.value_bytes) for k, v in items)
+        if not warm:
+            return
+        keys = [k for k, _ in items]
+        names = list(self.kns)
+        for k in keys:
+            ptr, _ = self.pool.index_lookup(k)
+            if ptr is None:
+                continue
+            if self.variant.name == "clover":
+                kn = self.kns[names[stable_hash(("load", k)) % len(names)]]
+                kn.cache.fill(k, self.versions.get(k, 0))
+            else:
+                owner = self.ownership.primary(k)
+                self.kns[owner].cache.fill_after_write(
+                    k, ptr, self.value_bytes, segment_cached=False)
+
+    def aggregate_stats(self) -> dict:
+        tot_ops = sum(k.stats.ops for k in self.kns.values())
+        tot_rts = sum(k.stats.rts for k in self.kns.values())
+        caches = [k.cache.stats for k in self.kns.values()
+                  if hasattr(k.cache, "stats")]
+        lookups = sum(c.lookups for c in caches)
+        hits = sum(c.value_hits + c.shortcut_hits for c in caches)
+        vhits = sum(c.value_hits for c in caches)
+        return {
+            "ops": tot_ops,
+            "rts_per_op": tot_rts / tot_ops if tot_ops else 0.0,
+            "hit_ratio": hits / lookups if lookups else 0.0,
+            "value_hit_ratio": vhits / lookups if lookups else 0.0,
+            "write_stalls": sum(k.stats.write_stalls
+                                for k in self.kns.values()),
+            "num_kns": len(self.kns),
+        }
+
+    def reset_stats(self) -> None:
+        for kn in self.kns.values():
+            kn.stats = KNStats()
+            if hasattr(kn.cache, "stats"):
+                kn.cache.stats = CacheStats()
+        self.ms_ops = 0

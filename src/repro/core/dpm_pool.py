@@ -1,0 +1,237 @@
+"""The disaggregated PM pool: ground truth for data + metadata.
+
+Per the paper (Secs. 3.1-3.2, 4): the pool stores
+  * the value log segments (values live *inside* log entries; the index
+    points straight at them),
+  * the CLHT metadata index,
+  * the indirection table for selectively-replicated hot keys,
+  * ownership/replication policy metadata (so failed KNs/RNs can rebuild
+    their soft state).
+
+This module is the per-op simulator plane (python/numpy); the jittable
+JAX plane of the same structures lives in clht.py / log.py and is
+property-tested for equivalence. The pool exposes *mechanics* only; all
+timing/asynchrony is orchestrated by cluster.py against netmodel.py.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from .clht import NumpyCLHT
+from .log import PySegment
+
+
+@dataclass
+class GCStats:
+    segments_created: int = 0
+    segments_collected: int = 0
+    entries_merged: int = 0
+
+
+class DPMPool:
+    def __init__(self, num_buckets: int = 1 << 18,
+                 segment_capacity: int = 2048,
+                 unmerged_threshold: int = 2):
+        self.index = NumpyCLHT(num_buckets)
+        # value heap: ptr -> payload / length / owning segment
+        self.heap_val: list = []
+        self.heap_len: list[int] = []
+        self.heap_seg: list[PySegment | None] = []
+        # per-KN exclusive logs: active segment last
+        self.segments: dict[str, list[PySegment]] = {}
+        self.segment_capacity = segment_capacity
+        self.unmerged_threshold = unmerged_threshold
+        self.merge_backlog: deque[tuple[PySegment, int]] = deque()
+        # indirection table for replicated keys: key -> ptr  (CAS target)
+        self.indirect: dict[int, int] = {}
+        # durable policy metadata (ownership map snapshots, Sec. 3.5)
+        self.policy_metadata: dict = {}
+        self.gc = GCStats()
+
+    # ----- value heap --------------------------------------------------------
+    def alloc_value(self, value, length: int,
+                    seg: PySegment | None = None) -> int:
+        ptr = len(self.heap_val)
+        self.heap_val.append(value)
+        self.heap_len.append(length)
+        self.heap_seg.append(seg)
+        return ptr
+
+    def read_value(self, ptr: int):
+        return self.heap_val[ptr], self.heap_len[ptr]
+
+    # ----- exclusive per-KN logs (one-sided writes) ---------------------------
+    def register_kn(self, kn: str) -> None:
+        self.segments.setdefault(kn, [PySegment(self.segment_capacity, kn)])
+
+    def drop_kn(self, kn: str) -> None:
+        self.segments.pop(kn, None)
+
+    def active_segment(self, kn: str) -> PySegment:
+        return self.segments[kn][-1]
+
+    def unmerged_count(self, kn: str) -> int:
+        """Segments of this KN not yet fully merged (active excluded)."""
+        return sum(1 for s in self.segments.get(kn, [])[:-1]
+                   if s.merged_upto < len(s.entries))
+
+    def log_write(self, kn: str, key: int, value, length: int,
+                  sealed: bool = True) -> tuple[int, bool]:
+        """Append one entry to the KN's active segment. Returns
+        (ptr, rotated): ``rotated`` tells the caller a segment filled up
+        and was queued for async merge -- the KN must block if its
+        un-merged backlog now exceeds the threshold (paper Sec. 4)."""
+        seg = self.active_segment(kn)
+        ptr = self.alloc_value(value, length, seg)
+        seg.append(key, ptr, sealed=sealed)
+        rotated = False
+        if seg.full():
+            self.merge_backlog.append((seg, 0))
+            self.segments[kn].append(PySegment(self.segment_capacity, kn))
+            self.gc.segments_created += 1
+            rotated = True
+        return ptr, rotated
+
+    def write_blocked(self, kn: str) -> bool:
+        return self.unmerged_count(kn) > self.unmerged_threshold
+
+    # ----- asynchronous merge (DPM processors) --------------------------------
+    def merge_budget(self, ops: int) -> int:
+        """Merge up to ``ops`` log entries from the backlog, strictly in
+        order within each segment. Returns entries merged."""
+        done = 0
+        while self.merge_backlog and done < ops:
+            seg, _ = self.merge_backlog.popleft()
+            entries = seg.sealed_entries()
+            while seg.merged_upto < len(entries) and done < ops:
+                key, ptr = entries[seg.merged_upto]
+                self._merge_entry(key, ptr, seg)
+                seg.merged_upto += 1
+                done += 1
+            if seg.merged_upto < len(entries):
+                self.merge_backlog.appendleft((seg, 0))
+            else:
+                self._maybe_collect(seg)
+        return done
+
+    def merge_all(self, kn: str | None = None) -> int:
+        """Synchronous merge of all pending entries (reconfiguration step
+        3 / failure recovery: 'merges all pending logs from the KNs
+        involved before allowing the other KNs to serve reads')."""
+        done = 0
+        # backlog first (order preserved), filtered by KN if given
+        keep: deque = deque()
+        while self.merge_backlog:
+            seg, _ = self.merge_backlog.popleft()
+            if kn is not None and seg.kn != kn:
+                keep.append((seg, 0))
+                continue
+            entries = seg.sealed_entries()
+            for key, ptr in entries[seg.merged_upto:]:
+                self._merge_entry(key, ptr, seg)
+                done += 1
+            seg.merged_upto = len(entries)
+            self._maybe_collect(seg)
+        self.merge_backlog = keep
+        # then active segments
+        for owner, segs in self.segments.items():
+            if kn is not None and owner != kn:
+                continue
+            act = segs[-1]
+            entries = act.sealed_entries()
+            for key, ptr in entries[act.merged_upto:]:
+                self._merge_entry(key, ptr, act)
+                done += 1
+            act.merged_upto = len(entries)
+            if entries:
+                self.segments[owner] = [PySegment(self.segment_capacity,
+                                                  owner)]
+        return done
+
+    def _merge_entry(self, key: int, ptr: int, seg: PySegment) -> None:
+        if key < 0:   # tombstone entry: key encoded as -(key+1)
+            real = -key - 1
+            old, found = self.index.delete(real)
+            if found and old is not None:
+                self._invalidate_ptr(old)
+            self.gc.entries_merged += 1
+            seg.valid -= 1
+            return
+        # Replicated keys publish through the one-sided CAS on the
+        # indirection slot at write time; merging the log entry again
+        # must NOT touch the slot (it could rewind past a newer CAS).
+        # The entry only needed GC accounting, which cas_indirect
+        # already performed for superseded pointers.
+        if key in self.indirect:
+            pass
+        else:
+            old, ok = self.index.insert(key, ptr)
+            if ok and old is not None and old != ptr:
+                self._invalidate_ptr(old)
+        self.gc.entries_merged += 1
+
+    def _invalidate_ptr(self, ptr: int) -> None:
+        seg = self.heap_seg[ptr]
+        self.heap_val[ptr] = None       # value superseded
+        if seg is not None:
+            seg.valid -= 1
+            self._maybe_collect(seg)
+
+    def _maybe_collect(self, seg: PySegment) -> None:
+        """Paper Sec. 4: a segment whose invalid count equals its total
+        count is garbage-collected by a DPM processor."""
+        if seg.full() and seg.valid <= 0:
+            self.gc.segments_collected += 1
+            seg.entries.clear()
+            seg.sealed.clear()
+
+    # ----- index reads (one-sided) --------------------------------------------
+    def index_lookup(self, key: int):
+        """-> (ptr or None, probe_rts). Replicated keys resolve through
+        the indirection table: one extra RT (paper Sec. 3.4). The index
+        entry of a shared key names its indirection slot, so the direct
+        pointer (possibly superseded by CAS) is never followed."""
+        if key in self.indirect:
+            _, probes = self.index.lookup(key)
+            return self.indirect[key], probes + 1
+        return self.index.lookup(key)
+
+    # ----- indirection (selective replication, one-sided CAS) ----------------
+    def install_indirect(self, key: int) -> None:
+        if key in self.indirect:
+            return
+        ptr, _ = self.index.lookup(key)
+        if ptr is None:
+            return
+        self.indirect[key] = ptr
+        # the index now names the indirection slot; readers discover
+        # 'replicated' status via ownership metadata at RNs/KNs.
+
+    def cas_indirect(self, key: int, expect: int, new: int) -> bool:
+        cur = self.indirect.get(key)
+        if cur != expect:
+            return False
+        self.indirect[key] = new
+        if expect is not None and expect != new:
+            self._invalidate_ptr(expect)
+        return True
+
+    def read_indirect(self, key: int) -> int | None:
+        return self.indirect.get(key)
+
+    def remove_indirect(self, key: int) -> None:
+        """De-replication: after owners invalidate their cached entries,
+        the indirection slot is dropped and the index points directly."""
+        ptr = self.indirect.pop(key, None)
+        if ptr is not None:
+            self.index.insert(key, ptr)
+
+    # ----- bulk load (experiment setup, bypasses the timed path) -------------
+    def bulk_load(self, items, kn: str = "__loader__") -> None:
+        self.register_kn(kn)
+        for key, value, length in items:
+            self.log_write(kn, key, value, length)
+        self.merge_all(kn)
+        self.drop_kn(kn)

@@ -1,0 +1,135 @@
+"""Consistent-hash rings for Ownership Partitioning (paper Sec. 3.4).
+
+Two rings, as in the paper:
+  * the *global* ring maps keys -> KN ids   (kept by RNs and KNs)
+  * a *local* ring per KN maps keys -> thread ids
+
+Rings are pure-python and deterministic (stdlib hash is salted per
+process, so we use a splitmix-style mixer).  The ring also exposes the
+partition boundaries so ownership handoffs can be expressed as ranges.
+"""
+
+from __future__ import annotations
+
+import bisect
+from typing import Hashable, Iterable
+
+_MASK64 = (1 << 64) - 1
+
+
+def mix64(x: int) -> int:
+    """splitmix64 finalizer: deterministic 64-bit hash of an int."""
+    x = (x + 0x9E3779B97F4A7C15) & _MASK64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return (x ^ (x >> 31)) & _MASK64
+
+
+def stable_hash(key: Hashable) -> int:
+    if isinstance(key, int):
+        return mix64(key)
+    if isinstance(key, bytes):
+        h = 0xCBF29CE484222325
+        for b in key:
+            h = ((h ^ b) * 0x100000001B3) & _MASK64
+        return mix64(h)
+    if isinstance(key, str):
+        return stable_hash(key.encode())
+    return stable_hash(repr(key).encode())
+
+
+class HashRing:
+    """Consistent-hash ring with virtual nodes.
+
+    Adding/removing a member only remaps the key ranges adjacent to that
+    member's virtual nodes -- the property that makes OP reconfiguration
+    lightweight (only ownership metadata moves, never data).
+    """
+
+    def __init__(self, members: Iterable[str] = (), vnodes: int = 64):
+        self.vnodes = vnodes
+        self._points: list[int] = []     # sorted vnode positions
+        self._owners: list[str] = []     # owner of each vnode position
+        self._members: set[str] = set()
+        for m in members:
+            self.add(m)
+
+    # -- membership ---------------------------------------------------------
+    def add(self, member: str) -> None:
+        if member in self._members:
+            return
+        self._members.add(member)
+        for v in range(self.vnodes):
+            pos = stable_hash(f"{member}#{v}")
+            i = bisect.bisect_left(self._points, pos)
+            self._points.insert(i, pos)
+            self._owners.insert(i, member)
+
+    def remove(self, member: str) -> None:
+        if member not in self._members:
+            return
+        self._members.discard(member)
+        keep = [(p, o) for p, o in zip(self._points, self._owners)
+                if o != member]
+        self._points = [p for p, _ in keep]
+        self._owners = [o for _, o in keep]
+
+    @property
+    def members(self) -> list[str]:
+        return sorted(self._members)
+
+    def __len__(self) -> int:
+        return len(self._members)
+
+    def __contains__(self, member: str) -> bool:
+        return member in self._members
+
+    # -- lookup ---------------------------------------------------------------
+    def owner(self, key: Hashable) -> str:
+        if not self._points:
+            raise RuntimeError("empty hash ring")
+        pos = stable_hash(key)
+        i = bisect.bisect_right(self._points, pos)
+        if i == len(self._points):
+            i = 0
+        return self._owners[i]
+
+    def owners(self, key: Hashable, n: int) -> list[str]:
+        """The n distinct successors of the key's position: the primary owner
+        followed by candidate secondary owners (for selective replication)."""
+        if not self._points:
+            raise RuntimeError("empty hash ring")
+        pos = stable_hash(key)
+        i = bisect.bisect_right(self._points, pos)
+        out: list[str] = []
+        seen: set[str] = set()
+        for step in range(len(self._points)):
+            o = self._owners[(i + step) % len(self._points)]
+            if o not in seen:
+                seen.add(o)
+                out.append(o)
+                if len(out) == n:
+                    break
+        return out
+
+    # -- introspection ---------------------------------------------------------
+    def share(self, member: str, samples: int = 4096) -> float:
+        """Approximate fraction of the keyspace owned by ``member``."""
+        hits = sum(1 for k in range(samples) if self.owner(k) == member)
+        return hits / samples
+
+    def diff(self, other: "HashRing", samples: int = 4096) -> float:
+        """Fraction of sampled keys whose owner differs between two rings
+        (the reconfiguration 'blast radius')."""
+        if not self._points or not other._points:
+            return 1.0
+        moved = sum(1 for k in range(samples)
+                    if self.owner(k) != other.owner(k))
+        return moved / samples
+
+    def snapshot(self) -> "HashRing":
+        r = HashRing(vnodes=self.vnodes)
+        r._points = list(self._points)
+        r._owners = list(self._owners)
+        r._members = set(self._members)
+        return r

@@ -1,0 +1,171 @@
+"""Log-structured DPM writes + asynchronous merge (paper Secs. 3.2, 3.6, 4).
+
+KNs write key-value log entries into *exclusive* DPM log segments with a
+single one-sided write; a seal byte (commit marker) makes each entry
+crash-atomic. DPM processors later merge sealed entries *in order* into
+the CLHT index, off the critical path. Un-merged segments are capped at
+``unmerged_threshold`` (paper default 2) -- beyond that the write path
+blocks until merging catches up.
+
+JAX plane: a segment is a fixed-capacity array of (key, ptr, seal)
+records; values live in an append-only ValueHeap. Crash recovery drops
+any unsealed suffix (tests tear seals deliberately). Per-segment
+valid/invalid counters drive GC exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .clht import CLHT, clht_insert
+
+SEALED = 1
+TORN = 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LogSegment:
+    """An exclusive per-KN DPM log segment (paper: 8 MB, variable-size
+    entries; here fixed-capacity records + a value heap)."""
+    keys: jax.Array    # (capacity,) int32
+    ptrs: jax.Array    # (capacity,) int32
+    seal: jax.Array    # (capacity,) int32 -- commit marker per entry
+    count: jax.Array   # () int32 number of appended entries
+    merged: jax.Array  # () int32 number of entries already merged
+
+
+def segment_init(capacity: int) -> LogSegment:
+    z = jnp.zeros((capacity,), jnp.int32)
+    return LogSegment(keys=z - 1, ptrs=z - 1, seal=z,
+                      count=jnp.int32(0), merged=jnp.int32(0))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ValueHeap:
+    """Append-only value storage; a 'pointer' is a row index. Values are
+    fixed-width rows here (the paper supports variable length via byte
+    offsets; row granularity keeps the JAX plane shape-static)."""
+    data: jax.Array    # (capacity, width) int32
+    head: jax.Array    # () int32 next free row
+
+
+def heap_init(capacity: int, width: int) -> ValueHeap:
+    return ValueHeap(data=jnp.zeros((capacity, width), jnp.int32),
+                     head=jnp.int32(0))
+
+
+@jax.jit
+def heap_append(heap: ValueHeap, values: jax.Array):
+    """Append a batch of rows; returns (heap, ptrs). Out-of-place value
+    writes -- updates never overwrite committed data (paper Sec. 4)."""
+    n = values.shape[0]
+    idx = heap.head + jnp.arange(n, dtype=jnp.int32)
+    data = jax.lax.dynamic_update_slice(
+        heap.data, values.astype(jnp.int32), (heap.head, jnp.int32(0)))
+    return ValueHeap(data=data, head=heap.head + n), idx
+
+
+def heap_read(heap: ValueHeap, ptrs: jax.Array) -> jax.Array:
+    return heap.data[ptrs]
+
+
+@jax.jit
+def log_append(seg: LogSegment, keys: jax.Array, ptrs: jax.Array):
+    """Append a batch of entries and seal them. One one-sided RDMA write
+    in the paper == one dynamic_update_slice here. Returns (seg, ok)."""
+    n = keys.shape[0]
+    ok = seg.count + n <= seg.keys.shape[0]
+
+    def do(seg):
+        at = (seg.count,)
+        return LogSegment(
+            keys=jax.lax.dynamic_update_slice(seg.keys,
+                                              keys.astype(jnp.int32), at),
+            ptrs=jax.lax.dynamic_update_slice(seg.ptrs,
+                                              ptrs.astype(jnp.int32), at),
+            seal=jax.lax.dynamic_update_slice(
+                seg.seal, jnp.full((n,), SEALED, jnp.int32), at),
+            count=seg.count + n,
+            merged=seg.merged,
+        )
+
+    seg = jax.lax.cond(ok, do, lambda s: s, seg)
+    return seg, ok
+
+
+@jax.jit
+def recover_segment(seg: LogSegment) -> LogSegment:
+    """Crash recovery: keep the longest sealed prefix, discard the rest
+    (a torn entry invalidates itself and everything after it, because
+    merge order must match request order)."""
+    idx = jnp.arange(seg.keys.shape[0], dtype=jnp.int32)
+    appended = idx < seg.count
+    sealed = (seg.seal == SEALED) & appended
+    bad = appended & ~sealed
+    first_bad = jnp.where(bad.any(), jnp.argmax(bad), seg.count)
+    keep = idx < first_bad
+    return LogSegment(
+        keys=jnp.where(keep, seg.keys, -1),
+        ptrs=jnp.where(keep, seg.ptrs, -1),
+        seal=jnp.where(keep, seg.seal, 0),
+        count=first_bad.astype(jnp.int32),
+        merged=jnp.minimum(seg.merged, first_bad.astype(jnp.int32)),
+    )
+
+
+@jax.jit
+def merge_segment(table: CLHT, seg: LogSegment):
+    """DPM processors merge sealed, un-merged entries in order into the
+    index (async in the runtime: this is a separate dispatch the serving
+    loop does not wait on). Returns (table, seg, old_ptrs, invalidated).
+
+    ``old_ptrs`` are the value-heap rows superseded by each entry; the
+    caller feeds them to GC counters. ``invalidated`` is their count."""
+    idx = jnp.arange(seg.keys.shape[0], dtype=jnp.int32)
+    todo = (idx >= seg.merged) & (idx < seg.count) & (seg.seal == SEALED)
+    table, old_ptrs, ok, _ = clht_insert(table, seg.keys, seg.ptrs, todo)
+    invalidated = jnp.sum((old_ptrs != -1).astype(jnp.int32))
+    seg = LogSegment(keys=seg.keys, ptrs=seg.ptrs, seal=seg.seal,
+                     count=seg.count, merged=seg.count)
+    return table, seg, old_ptrs, invalidated
+
+
+# --------------------------------------------------------------------------
+# Python-plane mirror for the per-op cluster simulator.
+# --------------------------------------------------------------------------
+class PySegment:
+    """Per-KN log segment in the simulator: entries + seal + GC counters."""
+
+    __slots__ = ("entries", "sealed", "capacity", "valid", "kn",
+                 "merged_upto")
+
+    def __init__(self, capacity: int, kn: str):
+        self.entries: list[tuple[int, int]] = []   # (key, ptr)
+        self.sealed: list[bool] = []
+        self.capacity = capacity
+        self.valid = 0          # live values still pointed to by the index
+        self.kn = kn
+        self.merged_upto = 0    # merge cursor (entries before it are in the index)
+
+    def full(self) -> bool:
+        return len(self.entries) >= self.capacity
+
+    def append(self, key: int, ptr: int, sealed: bool = True) -> None:
+        assert not self.full()
+        self.entries.append((key, ptr))
+        self.sealed.append(sealed)
+        self.valid += 1
+
+    def sealed_entries(self) -> list[tuple[int, int]]:
+        """Longest sealed prefix (crash-consistent view)."""
+        out = []
+        for (k, p), s in zip(self.entries, self.sealed):
+            if not s:
+                break
+            out.append((k, p))
+        return out

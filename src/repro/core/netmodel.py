@@ -1,0 +1,118 @@
+"""Calibrated network / DPM cost model (the paper's testbed, Sec. 5).
+
+The functional plane measures *RTs/op exactly*; this module converts RT
+counts and byte volumes into throughput/latency figures the way the
+paper's InfiniBand testbed would, so benchmarks can reproduce Figs. 3-8.
+
+Calibration constants come straight from the paper:
+  * FDR ConnectX-3, 56 Gbps/port -> ~7 GB/s usable per direction
+  * network RT latency 1-20 us; we use 3 us for one-sided verbs
+  * PM bandwidth 32 GB/s read / 11.2 GB/s write (Optane DC)
+  * DPM merge throughput scales with DPM threads (Fig. 4); 4 threads
+    suffice on DRAM, PM merge ~16% below log-write max at 4 threads
+  * KN: 8 threads; client-side closed loop saturates KN CPUs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class NetModel:
+    """Cost model parameters. All rates per second, sizes in bytes."""
+
+    rt_latency_s: float = 3e-6          # one-sided RDMA verb RT
+    rpc_latency_s: float = 12e-6        # two-sided RPC RT (metadata server)
+    kn_link_bw: float = 7e9             # per-KN NIC bandwidth (FDR)
+    dpm_link_bw: float = 7e9            # DPM pool NIC bandwidth (shared)
+    pm_read_bw: float = 32e9            # PM device read bandwidth
+    pm_write_bw: float = 11.2e9         # PM device write bandwidth
+    kn_cpu_ops: float = 1.5e6           # request-processing capacity per KN (8 thr)
+    # DPM-side merge capacity: ops/s per DPM thread (measured in Fig. 4 style
+    # microbench; PM is ~16% below DRAM at 4 threads).
+    merge_ops_per_thread_dram: float = 1.75e6   # 4 thr ~= log-write max (Fig. 4)
+    merge_ops_per_thread_pm: float = 1.47e6     # ~16% below DRAM at 4 thr
+    dpm_threads: int = 4
+    # Clover metadata-server capacity (4 worker threads, two-sided RPCs).
+    clover_ms_ops: float = 2.6e6
+    header_bytes: int = 64              # per-message header/verb overhead
+    # effective data-reorganization rate for shared-nothing resharding
+    # (read + rewrite + index rebuild; calibrated to the paper's ~11 s
+    # for 1/16th of a 32 GB dataset)
+    reorg_bw: float = 190e6
+
+    # ---- throughput model -------------------------------------------------
+    def op_net_bytes(self, rts_per_op: float, value_bytes: int,
+                     value_rt_fraction: float = 0.55) -> float:
+        """Average wire bytes per op: each RT carries a header; a fraction of
+        RTs carry the value payload (index probes carry a bucket line)."""
+        per_rt = self.header_bytes + value_rt_fraction * value_bytes \
+            + (1.0 - value_rt_fraction) * 64.0
+        return max(rts_per_op, 1e-3) * per_rt
+
+    def kn_capacity(self, rts_per_op: float, value_bytes: int) -> float:
+        """Single-KN throughput cap = min(CPU, NIC)."""
+        net = self.kn_link_bw / self.op_net_bytes(rts_per_op, value_bytes)
+        return min(self.kn_cpu_ops, net)
+
+    def dpm_net_capacity(self, rts_per_op: float, value_bytes: int) -> float:
+        """Aggregate cap imposed by the DPM pool NIC (all KNs share it)."""
+        return self.dpm_link_bw / self.op_net_bytes(rts_per_op, value_bytes)
+
+    def merge_capacity(self, on_pm: bool = False,
+                       threads: int | None = None) -> float:
+        thr = self.dpm_threads if threads is None else threads
+        per = self.merge_ops_per_thread_pm if on_pm \
+            else self.merge_ops_per_thread_dram
+        return per * thr
+
+    def cluster_throughput(self, *, num_kns: int, rts_per_op: float,
+                           value_bytes: int, write_fraction: float,
+                           load_shares: list[float] | None = None,
+                           on_pm: bool = False,
+                           metadata_server_cap: float | None = None,
+                           ms_load_fraction: float = 1.0,
+                           top_key_share: float = 0.0) -> float:
+        """Closed-loop aggregate throughput (ops/s) for the cluster.
+
+        ``load_shares``: per-KN request fractions; the system saturates
+        when the busiest KN saturates. ``top_key_share``: effective load
+        share of the hottest single-owner key (share / replication
+        factor) -- paper Sec. 3.4: max single-key throughput is bounded
+        by one KN's capacity. ``ms_load_fraction``: fraction of ops that
+        touch Clover's metadata server (misses + writes)."""
+        kn_cap = self.kn_capacity(rts_per_op, value_bytes)
+        if load_shares is None:
+            load_shares = [1.0 / num_kns] * num_kns
+        busiest = max(load_shares)
+        balanced = kn_cap / busiest if busiest > 0 else float("inf")
+        caps = [balanced, self.dpm_net_capacity(rts_per_op, value_bytes)]
+        if write_fraction > 0:
+            caps.append(self.merge_capacity(on_pm=on_pm) / write_fraction)
+        if metadata_server_cap is not None:
+            caps.append(metadata_server_cap
+                        / max(ms_load_fraction, 1e-2))
+        if top_key_share > 0:
+            caps.append(self.kn_cpu_ops / top_key_share)
+        return min(caps)
+
+    def kn_local_throughput(self, rts_per_op: float,
+                            inflight: int = 32,
+                            base_s: float = 1e-6) -> float:
+        """Closed-loop peak throughput measured *within* a KN (paper
+        Fig. 3 microbench: workload generated locally, no client hop):
+        limited by inflight ops / per-op latency, capped by CPU."""
+        lat = base_s + rts_per_op * self.rt_latency_s
+        return min(inflight / lat, 16 * 1.2e6)   # 16 threads in Fig. 3
+
+    # ---- latency model ----------------------------------------------------
+    def op_latency(self, rts_per_op: float, queue_factor: float = 1.0,
+                   two_sided_rts: float = 0.0) -> float:
+        """Mean request latency (s): client hop + RTs, inflated by queueing."""
+        base = 15e-6  # client<->KN hop over 10GbE + KN processing
+        return (base + rts_per_op * self.rt_latency_s
+                + two_sided_rts * self.rpc_latency_s) * max(queue_factor, 1.0)
+
+
+DEFAULT_MODEL = NetModel()

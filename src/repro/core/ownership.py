@@ -1,0 +1,145 @@
+"""Ownership Partitioning (paper Sec. 3.4) + selective-replication metadata.
+
+Ownership is *logical*: KNs own disjoint key ranges on a consistent-hash
+ring while all data/metadata stay shared in the DPM pool. Reconfiguration
+re-maps ranges (O(metadata)); hot keys may have their *ownership* (not
+data) replicated to multiple KNs, reached through indirect pointers.
+
+The map also identifies the *participants* of a membership change -- the
+KNs whose ranges change -- which is step (1) of the paper's seven-step
+reconfiguration protocol; non-participants keep serving throughout.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .hashring import HashRing, stable_hash
+
+
+@dataclass
+class ReconfigEvent:
+    """One membership change: who participates, and the ring versions."""
+    kind: str                 # "add" | "remove" | "fail"
+    node: str
+    participants: set[str]
+    old_version: int
+    new_version: int
+
+
+class OwnershipMap:
+    """Global ring (key -> KN) + per-KN local ring (key -> thread) +
+    replication metadata (key -> owner list). RNs/KNs/clients hold
+    (possibly stale) snapshots identified by ``version``."""
+
+    def __init__(self, vnodes: int = 64, threads_per_kn: int = 8):
+        self.ring = HashRing(vnodes=vnodes)
+        self.threads_per_kn = threads_per_kn
+        self.replicated: dict[int, list[str]] = {}
+        self.version = 0
+
+    # ----- lookup --------------------------------------------------------
+    def primary(self, key: int) -> str:
+        return self.ring.owner(key)
+
+    def owners(self, key: int) -> list[str]:
+        """All owners: primary plus secondaries if replicated."""
+        reps = self.replicated.get(key)
+        if reps:
+            return list(reps)
+        return [self.ring.owner(key)]
+
+    def thread_of(self, key: int) -> int:
+        """Local ring: partition a KN's range among its threads."""
+        return stable_hash(("thread", key)) % self.threads_per_kn
+
+    def is_replicated(self, key: int) -> bool:
+        return key in self.replicated
+
+    @property
+    def kns(self) -> list[str]:
+        return self.ring.members
+
+    # ----- membership changes (steps 1 of the reconfig protocol) ----------
+    def add_kn(self, name: str) -> ReconfigEvent:
+        old = self.ring.snapshot()
+        self.ring.add(name)
+        participants = {name} | self._changed_owners(old)
+        self.version += 1
+        self._repair_replicas()
+        return ReconfigEvent("add", name, participants,
+                             self.version - 1, self.version)
+
+    def remove_kn(self, name: str, failed: bool = False) -> ReconfigEvent:
+        old = self.ring.snapshot()
+        self.ring.remove(name)
+        participants = ({name} if not failed else set()) \
+            | self._changed_owners(old)
+        self.version += 1
+        self._repair_replicas(gone=name)
+        return ReconfigEvent("fail" if failed else "remove", name,
+                             participants, self.version - 1, self.version)
+
+    def _changed_owners(self, old: HashRing, samples: int = 2048) -> set[str]:
+        """KNs (in the *new* ring) whose owned ranges changed."""
+        changed: set[str] = set()
+        if not old._points or not self.ring._points:
+            return set(self.ring.members)
+        for k in range(samples):
+            a, b = old.owner(k), self.ring.owner(k)
+            if a != b:
+                changed.add(b)
+                if a in self.ring:
+                    changed.add(a)
+        return changed
+
+    def _repair_replicas(self, gone: str | None = None) -> None:
+        for key, owners in list(self.replicated.items()):
+            owners = [o for o in owners if o in self.ring and o != gone]
+            prim = self.ring.owner(key)
+            if prim not in owners:
+                owners.insert(0, prim)
+            if len(owners) <= 1:
+                del self.replicated[key]
+            else:
+                self.replicated[key] = owners
+
+    # ----- selective replication metadata ---------------------------------
+    def replicate(self, key: int, factor: int) -> list[str]:
+        """Share ownership of ``key`` across ``factor`` KNs (primary +
+        secondaries, chosen as ring successors). Returns the owner list."""
+        factor = max(1, min(factor, len(self.ring)))
+        owners = self.ring.owners(key, factor)
+        if factor <= 1:
+            self.replicated.pop(key, None)
+        else:
+            self.replicated[key] = owners
+        self.version += 1
+        return owners
+
+    def dereplicate(self, key: int) -> None:
+        if key in self.replicated:
+            del self.replicated[key]
+            self.version += 1
+
+    def replication_factor(self, key: int) -> int:
+        return len(self.replicated.get(key, ())) or 1
+
+    # ----- durable snapshot (stored in the DPM pool, Sec. 3.5) ------------
+    def snapshot_blob(self) -> dict:
+        return {
+            "members": self.ring.members,
+            "vnodes": self.ring.vnodes,
+            "replicated": {k: list(v) for k, v in self.replicated.items()},
+            "version": self.version,
+        }
+
+    @classmethod
+    def from_blob(cls, blob: dict, threads_per_kn: int = 8) -> "OwnershipMap":
+        m = cls(vnodes=blob["vnodes"], threads_per_kn=threads_per_kn)
+        for member in blob["members"]:
+            m.ring.add(member)
+        m.replicated = {int(k): list(v)
+                        for k, v in blob["replicated"].items()}
+        m.version = blob["version"]
+        return m

@@ -1,0 +1,268 @@
+"""Timed cluster simulation for the elasticity experiments (Figs. 6-8).
+
+Drives a DinomoCluster through wall-clock time: clients offer load,
+sampled operations run against the real data structures (so hit ratios
+and RTs/op are measured, not assumed), the M-node policy engine makes
+decisions every epoch, and reconfigurations/failures inject the
+protocol's real unavailability windows (synchronous merge for DINOMO,
+data reorganization for DINOMO-N, membership refresh for Clover).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .cluster import DinomoCluster, VariantConfig, DINOMO
+from .mnode import EpochStats, PolicyConfig
+from .netmodel import NetModel, DEFAULT_MODEL
+
+
+@dataclass
+class TimePoint:
+    t: float
+    throughput: float
+    avg_latency: float
+    p99_latency: float
+    num_kns: int
+    offered: float
+    events: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Outage:
+    """A KN (or the whole cluster) unavailable until ``until``."""
+    node: str | None
+    until: float
+    reason: str
+
+
+class TimedSimulation:
+    def __init__(self, cluster: DinomoCluster, workload,
+                 model: NetModel = DEFAULT_MODEL, dt: float = 1.0,
+                 sample_ops: int = 3000, seed: int = 0,
+                 dataset_bytes: float | None = None):
+        # the sampled working set stands in for a paper-scale dataset;
+        # reorganization physics (Dinomo-N) uses the represented bytes
+        self.dataset_bytes = dataset_bytes
+        """``workload(t, rng, n)`` yields n (op, key) pairs for time t."""
+        self.c = cluster
+        self.workload = workload
+        self.model = model
+        self.dt = dt
+        self.sample_ops = sample_ops
+        self.rng = np.random.default_rng(seed)
+        self.now = 0.0
+        self.outages: list[Outage] = []
+        self.trace: list[TimePoint] = []
+        self._epoch_freq: dict[int, float] = {}
+        self._next_epoch = cluster.mnode.cfg.epoch_s
+
+    # ------------------------------------------------------------------
+    def _alive_kns(self):
+        return [n for n, k in self.c.kns.items() if k.alive]
+
+    def _available(self, name: str) -> bool:
+        for o in self.outages:
+            if o.until > self.now and (o.node is None or o.node == name):
+                return False
+        return True
+
+    def _blocked_fraction(self) -> float:
+        """Fraction of this step's requests that hit an unavailable
+        owner, weighted by how much of the step the outage overlaps."""
+        names = self._alive_kns()
+        if not names:
+            return 1.0
+        total = 0.0
+        for o in self.outages:
+            overlap = min(o.until, self.now + self.dt) - self.now
+            if overlap <= 0:
+                continue
+            frac = min(overlap / self.dt, 1.0)
+            if o.node is None:
+                total += frac
+            elif o.node in names:
+                total += frac * self.c.ownership.ring.share(o.node,
+                                                            samples=512)
+        return min(total, 1.0)
+
+    # ------------------------------------------------------------------
+    def step(self, offered_ops_per_s: float, events: list[str]):
+        c, model = self.c, self.model
+        n_sample = min(self.sample_ops, max(int(offered_ops_per_s * self.dt),
+                                            1))
+        ops = self.workload(self.now, self.rng, n_sample)
+        c.reset_stats()
+        per_kn_ops: dict[str, int] = {}
+        writes = 0
+        for kind, key in ops:
+            try:
+                kn = c.route(key)
+            except KeyError:
+                continue
+            if not self._available(kn):
+                continue
+            per_kn_ops[kn] = per_kn_ops.get(kn, 0) + 1
+            if kind == "read":
+                c.read(key, kn)
+            else:
+                writes += 1
+                c.write(key, f"v@{self.now}", kn)
+            self._epoch_freq[key] = self._epoch_freq.get(key, 0.0) + 1.0
+        c.advance_merge(int(model.merge_capacity() * self.dt))
+
+        stats = c.aggregate_stats()
+        rts = max(stats["rts_per_op"], 1e-3)
+        wf = writes / max(len(ops), 1)
+        shares = self._load_shares(per_kn_ops)
+        # hottest single-owner key: its effective share is divided by
+        # its replication factor (paper Sec. 3.4 / selective replication)
+        top_share = 0.0
+        if self._epoch_freq and c.variant.architecture \
+                != "shared_everything":
+            tot_f = sum(self._epoch_freq.values())
+            for k, f in sorted(self._epoch_freq.items(),
+                               key=lambda kv: -kv[1])[:8]:
+                eff = (f / tot_f) / c.ownership.replication_factor(k)
+                top_share = max(top_share, eff)
+        cap = model.cluster_throughput(
+            num_kns=max(len(self._alive_kns()), 1), rts_per_op=rts,
+            value_bytes=c.value_bytes, write_fraction=wf,
+            load_shares=shares,
+            metadata_server_cap=(model.clover_ms_ops
+                                 if c.variant.name == "clover" else None),
+            ms_load_fraction=(1.0 - stats["hit_ratio"]) + wf,
+            top_key_share=top_share)
+        blocked = self._blocked_fraction()
+        tput = min(offered_ops_per_s, cap) * (1.0 - blocked)
+        util = offered_ops_per_s / max(cap, 1.0)
+        queue = 1.0 / max(1.0 - min(util, 0.99), 0.01) if util > 0.7 else 1.0
+        stale_penalty = 2.0 if events else 1.0   # mapping refresh hops
+        avg_lat = model.op_latency(rts, queue * stale_penalty)
+        p99 = avg_lat * (4.0 + 8.0 * max(util - 0.8, 0.0) * 5.0)
+        if blocked > 0:
+            # requests to blocked owners wait for the outage to clear
+            rem = max(o.until - self.now for o in self.outages
+                      if o.until > self.now)
+            avg_lat = avg_lat + blocked * min(rem, 0.5)
+            p99 = max(p99, min(rem, 0.5) * 2.0)
+        self.trace.append(TimePoint(self.now, tput, avg_lat, p99,
+                                    len(self._alive_kns()),
+                                    offered_ops_per_s, events))
+        return util, avg_lat, p99, per_kn_ops, cap
+
+    def _load_shares(self, per_kn_ops: dict[str, int]):
+        tot = sum(per_kn_ops.values())
+        names = self._alive_kns()
+        if not tot or not names:
+            return None
+        return [per_kn_ops.get(n, 0) / tot for n in names]
+
+    # ------------------------------------------------------------------
+    def run(self, duration: float, offered_fn, inject=None):
+        """``offered_fn(t)`` -> ops/s; ``inject(t, sim)`` optional event
+        hook (e.g. failures). Runs the M-node policy every epoch."""
+        cfg = self.c.mnode.cfg
+        while self.now < duration:
+            events: list[str] = []
+            if inject is not None:
+                ev = inject(self.now, self)
+                if ev:
+                    events.append(ev)
+            util, avg_lat, p99, per_kn, cap = self.step(
+                offered_fn(self.now), events)
+            self.now += self.dt
+            if self.now >= self._next_epoch:
+                self._run_epoch(avg_lat, p99, per_kn, cap)
+                self._next_epoch = self.now + cfg.epoch_s
+
+    def _run_epoch(self, avg_lat, p99, per_kn, cap):
+        c = self.c
+        names = self._alive_kns()
+        if not names:
+            return
+        kn_cap = cap / max(len(names), 1) if cap else 1.0
+        occupancy = {}
+        tot = sum(per_kn.values()) or 1
+        offered = self.trace[-1].offered if self.trace else 0.0
+        for n in names:
+            share = per_kn.get(n, 0) / tot
+            kn_rate = share * offered
+            occupancy[n] = min(kn_rate / max(self.model.kn_cpu_ops, 1.0),
+                               1.0)
+        top = dict(sorted(self._epoch_freq.items(), key=lambda kv: -kv[1])
+                   [:64])
+        epoch_s = c.mnode.cfg.epoch_s
+        stats = EpochStats(
+            now=self.now, avg_latency=avg_lat, p99_latency=p99,
+            occupancy=occupancy,
+            key_freq={k: v / epoch_s for k, v in top.items()},
+            replication={k: c.ownership.replication_factor(k)
+                         for k in c.ownership.replicated},
+        )
+        for action in c.mnode.decide(stats):
+            self._apply(action)
+        self._epoch_freq.clear()
+
+    def _apply(self, action):
+        c = self.c
+        if action.kind == "add_kn":
+            name, _ = c.add_kn()
+            self._post_reconfig(name)
+        elif action.kind == "remove_kn" and action.node in c.kns:
+            c.remove_kn(action.node)
+            self._post_reconfig(None)
+        elif action.kind == "replicate":
+            c.replicate_key(action.key, action.factor)
+        elif action.kind == "dereplicate":
+            c.dereplicate_key(action.key)
+
+    def _post_reconfig(self, node: str | None):
+        """Translate the protocol's synchronous work into outage windows."""
+        rec = self.c.reconfig_log[-1] if self.c.reconfig_log else None
+        if rec is None:
+            return
+        merge_s = rec["merged_entries"] / max(self.model.merge_capacity(), 1)
+        if self.c.variant.architecture == "shared_nothing":
+            # physical data reorganization blocks the cluster
+            dataset_bytes = self.dataset_bytes or \
+                len(self.c.pool.heap_val) * self.c.value_bytes
+            move_s = rec["moved_fraction"] * dataset_bytes \
+                / self.model.reorg_bw
+            self.outages.append(Outage(None, self.now + merge_s + move_s,
+                                       "data reorganization"))
+        else:
+            for p in rec["participants"]:
+                self.outages.append(Outage(p, self.now + merge_s + 0.05,
+                                           "ownership handoff"))
+
+    # ------------------------------------------------------------------
+    def inject_failure(self, name: str) -> float:
+        """Fail a KN; returns the recovery window in seconds."""
+        c = self.c
+        detect_s = 0.04                      # heartbeat miss
+        ev = c.fail_kn(name)
+        rec = c.reconfig_log[-1]
+        merge_s = rec["merged_entries"] / max(self.model.merge_capacity(), 1)
+        if c.variant.architecture == "shared_nothing":
+            dataset_bytes = self.dataset_bytes or \
+                len(c.pool.heap_val) * c.value_bytes
+            window = detect_s + merge_s + rec["moved_fraction"] \
+                * dataset_bytes / self.model.reorg_bw
+            self.outages.append(Outage(None, self.now + window,
+                                       "failure reorganization"))
+        elif c.variant.name == "clover":
+            window = detect_s + 0.068        # membership refresh only
+            self.outages.append(Outage(None, self.now + window,
+                                       "membership refresh"))
+        else:
+            window = detect_s + merge_s + 0.05
+            for p in rec["participants"]:
+                if p in c.kns:
+                    self.outages.append(Outage(p, self.now + window,
+                                               "failover"))
+        self.c.mnode.note_failure(self.now)
+        return window

@@ -1,0 +1,85 @@
+"""YCSB-style workload generator (paper Sec. 5 'Workloads').
+
+Five request mixes over 8 B keys / 1 KB values with bounded-zipfian key
+popularity (the paper's coefficients: 0.5 low, 0.99 moderate -- the
+YCSB default -- and 2.0 high skew). np.random.zipf needs a > 1, so we
+sample from the exact bounded distribution p(k) ~ 1/rank^s via inverse
+CDF, with a splitmix scramble so popular ranks are spread over the
+keyspace (YCSB's 'scrambled zipfian').
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.hashring import mix64
+
+MIXES = {
+    "read_only": (1.0, 0.0, 0.0),          # (read, update, insert)
+    "read_mostly_update": (0.95, 0.05, 0.0),
+    "read_mostly_insert": (0.95, 0.0, 0.05),
+    "write_heavy_update": (0.5, 0.5, 0.0),
+    "write_heavy_insert": (0.5, 0.0, 0.5),
+}
+
+
+@dataclass
+class Workload:
+    num_keys: int
+    zipf: float = 0.99
+    mix: str = "read_only"
+    value_bytes: int = 1024
+    scramble: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        ranks = np.arange(1, self.num_keys + 1, dtype=np.float64)
+        w = ranks ** (-self.zipf)
+        self._cdf = np.cumsum(w) / w.sum()
+        self._rng = np.random.default_rng(self.seed)
+        self._next_insert = self.num_keys
+        if self.scramble:
+            perm = np.array([mix64(i) % (1 << 62)
+                             for i in range(self.num_keys)], dtype=np.int64)
+            self._scramble = np.argsort(perm)
+        else:
+            self._scramble = None
+
+    def _sample_keys(self, n: int) -> np.ndarray:
+        u = self._rng.random(n)
+        ranks = np.searchsorted(self._cdf, u)
+        if self._scramble is not None:
+            ranks = self._scramble[ranks]
+        return ranks
+
+    def ops(self, n: int):
+        """Yield n (kind, key) pairs; kind in {'read','update','insert'}."""
+        r, u, ins = MIXES[self.mix]
+        kinds = self._rng.choice(3, size=n, p=[r, u, ins])
+        keys = self._sample_keys(n)
+        out = []
+        for kind, key in zip(kinds, keys):
+            if kind == 2:
+                out.append(("insert", self._next_insert))
+                self._next_insert += 1
+            else:
+                out.append(("read" if kind == 0 else "update", int(key)))
+        return out
+
+    def initial_load(self):
+        return ((k, f"v{k}") for k in range(self.num_keys))
+
+    def hot_keys(self, top: int = 8) -> list[int]:
+        """The `top` most popular keys under this zipf."""
+        ranks = np.arange(top)
+        if self._scramble is not None:
+            ranks = self._scramble[ranks]
+        return [int(k) for k in ranks]
+
+    def timed(self, t: float, rng, n: int):
+        """TimedSimulation adapter: (kind, key) with read/write only."""
+        ops = self.ops(n)
+        return [("read" if k == "read" else "write", key)
+                for k, key in ops]

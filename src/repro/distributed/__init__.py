@@ -1,0 +1,3 @@
+from .sharding import (MeshRules, batch_shardings, batch_spec,
+                       cache_sharding, cache_shardings, make_rules,
+                       param_shardings, param_spec, replicated)

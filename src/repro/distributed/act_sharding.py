@@ -1,0 +1,122 @@
+"""Activation-sharding constraints, plumbed via a contextvar so model
+code stays mesh-agnostic: the launch layer installs the constraint
+policy, and layer boundaries call ``constrain`` on residual-stream
+tensors. Without a policy installed (unit tests, CPU smoke), it's a
+no-op."""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_policy: contextvars.ContextVar = contextvars.ContextVar(
+    "act_sharding_policy", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, data_axes: tuple, model_axis: str):
+    token = _policy.set((mesh, data_axes, model_axis))
+    try:
+        yield
+    finally:
+        _policy.reset(token)
+
+
+# §Perf toggle: False (baseline) shards the activation FEATURE dim over
+# the model axis -- which forces an all-gather before every matmul
+# (measured: ~1 TB/device of all-gather on chameleon train_4k). True
+# switches to Megatron-style SEQUENCE parallelism: the seq dim is
+# sharded, d stays whole, and the only gathers are at attention.
+SEQ_SHARDED_ACTIVATIONS = False
+
+
+def set_seq_sharded_activations(v: bool) -> None:
+    global SEQ_SHARDED_ACTIVATIONS
+    SEQ_SHARDED_ACTIVATIONS = v
+
+
+def constrain(x):
+    """Constrain a (B, S, d) (or (B, T, ..., d)) activation: batch over
+    the data axes (if divisible); model axis on the seq dim (SP mode)
+    or the feature dim (baseline), when divisible."""
+    pol = _policy.get()
+    if pol is None or x.ndim < 2:
+        return x
+    mesh, data_axes, model_axis = pol
+    entries = [None] * x.ndim
+    dsz = 1
+    axes = []
+    for a in data_axes:
+        sz = mesh.shape[a]
+        if (x.shape[0] // dsz) % sz == 0 and x.shape[0] // (dsz * sz) >= 1:
+            axes.append(a)
+            dsz *= sz
+    if axes:
+        entries[0] = tuple(axes)
+    msz = mesh.shape[model_axis]
+    if SEQ_SHARDED_ACTIVATIONS and x.ndim >= 3 \
+            and x.shape[1] % msz == 0 and x.shape[1] // msz >= 8:
+        entries[1] = model_axis
+    elif x.shape[-1] % msz == 0 and x.shape[-1] // msz >= 8:
+        entries[-1] = model_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_heads(x):
+    """Constrain a (B, H, S, D) attention tensor: batch over data axes,
+    heads over the model axis (when divisible). Keeping the head dim
+    sharded end-to-end removes all attention resharding."""
+    pol = _policy.get()
+    if pol is None or x.ndim != 4:
+        return x
+    mesh, data_axes, model_axis = pol
+    entries = [None, None, None, None]
+    dsz = 1
+    axes = []
+    for a in data_axes:
+        sz = mesh.shape[a]
+        if (x.shape[0] // dsz) % sz == 0 and x.shape[0] // (dsz * sz) >= 1:
+            axes.append(a)
+            dsz *= sz
+    if axes:
+        entries[0] = tuple(axes)
+    if x.shape[1] % mesh.shape[model_axis] == 0:
+        entries[1] = model_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+def head_sharding_active(num_heads: int) -> bool:
+    pol = _policy.get()
+    if pol is None:
+        return False
+    mesh, _, model_axis = pol
+    return num_heads % mesh.shape[model_axis] == 0
+
+
+def constrain_experts(x):
+    """Constrain an (E, C, d) MoE bucket tensor: experts over the model
+    axis (EP), capacity over the data axes."""
+    pol = _policy.get()
+    if pol is None or x.ndim != 3:
+        return x
+    mesh, data_axes, model_axis = pol
+    entries = [None, None, None]
+    if x.shape[0] % mesh.shape[model_axis] == 0:
+        entries[0] = model_axis
+    dsz = 1
+    axes = []
+    for a in data_axes:
+        sz = mesh.shape[a]
+        if (x.shape[1] // dsz) % sz == 0 and x.shape[1] // (dsz * sz) >= 1:
+            axes.append(a)
+            dsz *= sz
+    if axes:
+        entries[1] = tuple(axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

@@ -1,0 +1,176 @@
+"""Divisibility-aware sharding rules for the production mesh.
+
+GSPMD rejects uneven shardings, and the assigned archs are full of
+non-multiples of 16 (llama3.2's 24 heads, mamba2's 80 ssm heads, ragged
+vocab sizes), so specs are *computed*, not hand-written: for each param
+the largest dim divisible by the axis (group) is sharded, preferring
+trailing dims (feature dims -> TP-style math), with FSDP over the
+combined (pod, data, model) axes for training and TP-only ('model') for
+serving. Batch dims shard over (pod, data); KV caches shard batch over
+data and sequence over model -- sequence-sharded KV is the dense-cache
+analogue of DINOMO page ownership.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    data_axes: tuple        # ("data",) or ("pod", "data")
+    model_axis: str = "model"
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def data_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    @property
+    def fsdp_axes(self) -> tuple:
+        return self.data_axes + (self.model_axis,)
+
+    @property
+    def fsdp_size(self) -> int:
+        return self.data_size * self.model_size
+
+
+def make_rules(mesh: Mesh) -> MeshRules:
+    axes = mesh.axis_names
+    data_axes = tuple(a for a in axes if a in ("pod", "data"))
+    return MeshRules(mesh=mesh, data_axes=data_axes)
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings
+# ---------------------------------------------------------------------------
+def _pick_dim(shape, divisor: int, skip_dims: int, min_shard: int = 8):
+    """Largest dim (prefer trailing) divisible by divisor; -1 if none."""
+    best, best_size = -1, 0
+    for i in range(len(shape) - 1, skip_dims - 1, -1):
+        d = shape[i]
+        if d % divisor == 0 and d // divisor >= min_shard \
+                and d > best_size:
+            best, best_size = i, d
+    return best
+
+
+def param_spec(shape, rules: MeshRules, mode: str,
+               scan_dims: int = 0) -> P:
+    """mode 'train': 2D FSDP -- one dim over the data axes (the
+    all-gather dim) and a *different* dim over model (matching the TP
+    compute sharding, so un-sharding at use is a single data-axis
+    all-gather instead of a full reshard); falls back to 1D.
+    mode 'serve': TP over model only."""
+    if len(shape) <= scan_dims:
+        return P()
+    entries = [None] * len(shape)
+    if mode == "train":
+        mdim = _pick_dim(shape, rules.model_size, scan_dims)
+        if mdim >= 0:
+            # model axis on the TP dim; data axes on another dim
+            rest = list(shape)
+            rest[mdim] = -1
+            ddim = _pick_dim(
+                [s if i != mdim else 1 for i, s in enumerate(shape)],
+                rules.data_size, scan_dims, min_shard=1)
+            if ddim >= 0 and ddim != mdim:
+                entries[ddim] = rules.data_axes \
+                    if len(rules.data_axes) > 1 else rules.data_axes[0]
+            entries[mdim] = rules.model_axis
+            return P(*entries)
+        dim = _pick_dim(shape, rules.data_size, scan_dims)
+        if dim >= 0:
+            entries[dim] = rules.data_axes \
+                if len(rules.data_axes) > 1 else rules.data_axes[0]
+            return P(*entries)
+        return P()
+    dim = _pick_dim(shape, rules.model_size, scan_dims)
+    if dim >= 0:
+        entries[dim] = rules.model_axis
+        return P(*entries)
+    return P()
+
+
+def _scan_dims_of(path) -> int:
+    """Leaves under a 'layers' collection carry a leading stacked-layer
+    dim (or two for zamba2's grouped scan); those dims must stay
+    unsharded (they are scan-indexed)."""
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    return 1 if any("layers" in n for n in names) else 0
+
+
+def param_shardings(tree, rules: MeshRules, mode: str = "train"):
+    """Pytree of NamedSharding matching ``tree`` (arrays or SDS)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        spec = param_spec(leaf.shape, rules, mode, _scan_dims_of(path))
+        out.append(NamedSharding(rules.mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+def batch_spec(global_batch: int, rules: MeshRules) -> P:
+    """Shard dim 0 over as many data axes as divide it."""
+    axes = []
+    rem = global_batch
+    for a in rules.data_axes:
+        sz = rules.mesh.shape[a]
+        if rem % sz == 0:
+            axes.append(a)
+            rem //= sz
+    return P(tuple(axes) if axes else None)
+
+
+def batch_shardings(tree, rules: MeshRules):
+    def one(leaf):
+        spec = batch_spec(leaf.shape[0], rules)
+        entries = [spec[0] if spec else None] + [None] * (len(leaf.shape)
+                                                          - 1)
+        return NamedSharding(rules.mesh, P(*entries))
+    return jax.tree.map(one, tree)
+
+
+def cache_sharding(shape, rules: MeshRules, scan_dims: int = 1):
+    """KV cache (L, B, S, KH, D) or state (L, B, ...): batch dim over
+    data axes if divisible, else the largest remaining dim over model
+    (sequence-sharded KV == page ownership)."""
+    entries = [None] * len(shape)
+    if len(shape) > scan_dims:
+        b = shape[scan_dims]
+        axes = []
+        rem = b
+        for a in rules.data_axes:
+            sz = rules.mesh.shape[a]
+            if rem % sz == 0:
+                axes.append(a)
+                rem //= sz
+        if axes:
+            entries[scan_dims] = tuple(axes)
+    dim = _pick_dim(shape, rules.model_size, scan_dims + 1, min_shard=1)
+    if dim >= 0:
+        entries[dim] = rules.model_axis
+    return NamedSharding(rules.mesh, P(*entries))
+
+
+def cache_shardings(tree, rules: MeshRules):
+    return jax.tree.map(
+        lambda leaf: cache_sharding(leaf.shape, rules)
+        if getattr(leaf, "ndim", 0) > 0
+        else NamedSharding(rules.mesh, P()), tree)
+
+
+def replicated(rules: MeshRules):
+    return NamedSharding(rules.mesh, P())

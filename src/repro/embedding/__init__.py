@@ -1,0 +1,3 @@
+from .hot_rows import (HotRowState, build_replica, lookup,
+                       refresh_after_update, select_cold_rows,
+                       select_hot_rows)

@@ -1,0 +1,92 @@
+"""Hot-row selective replication for huge embedding / expert tables.
+
+The 256 k-row vocab tables (nemotron, seamless) and MoE expert banks
+are pool-resident and row-sharded; token/expert popularity is zipfian,
+which is the paper's hot-key problem verbatim. The M-node rule (freq >
+mean + k*sigma, Table 4) selects rows whose *ownership* is replicated
+to every reader: lookups of hot rows hit the local replica (0 remote
+reads), cold rows take the sharded gather (1 remote read). De-
+replication uses the coldness rule symmetrically.
+
+Functional JAX state + a numpy policy plane, like everything else.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class HotRowState:
+    """hot_ids: (K,) row ids (padded with -1); hot_rows: (K, d) replica."""
+    hot_ids: jax.Array
+    hot_rows: jax.Array
+
+
+def select_hot_rows(counts: np.ndarray, k_sigma: float = 3.0,
+                    max_rows: int = 256) -> np.ndarray:
+    """Paper Table 4 hotness rule over access counts."""
+    mean, std = counts.mean(), counts.std()
+    if std == 0:
+        return np.zeros((0,), np.int32)
+    hot = np.nonzero(counts > mean + k_sigma * std)[0]
+    if len(hot) > max_rows:
+        hot = hot[np.argsort(counts[hot])[::-1][:max_rows]]
+    return hot.astype(np.int32)
+
+
+def select_cold_rows(counts: np.ndarray, hot_ids: np.ndarray,
+                     k_sigma: float = 1.0) -> np.ndarray:
+    """De-replication rule: currently-hot rows that went cold."""
+    if len(hot_ids) == 0:
+        return np.zeros((0,), np.int32)
+    mean, std = counts.mean(), counts.std()
+    cold = [i for i in hot_ids if counts[i] < mean - k_sigma * std]
+    return np.asarray(cold, np.int32)
+
+
+def build_replica(table: jax.Array, hot_ids: np.ndarray,
+                  pad_to: int) -> HotRowState:
+    ids = np.full((pad_to,), -1, np.int32)
+    ids[:len(hot_ids)] = hot_ids
+    safe = np.maximum(ids, 0)
+    rows = table[jnp.asarray(safe)]
+    rows = jnp.where(jnp.asarray(ids)[:, None] >= 0, rows, 0)
+    return HotRowState(hot_ids=jnp.asarray(ids), hot_rows=rows)
+
+
+@jax.jit
+def lookup(table: jax.Array, state: HotRowState, ids: jax.Array):
+    """Embedding lookup preferring the local hot replica.
+
+    Returns (embeddings, hot_mask); ``hot_mask`` tells the caller which
+    lookups avoided the remote gather (for RT accounting/benchmarks).
+    In a sharded jit, the jnp.take on ``table`` lowers to the cross-
+    device gather; hot hits read the replicated ``hot_rows`` instead."""
+    k = state.hot_ids.shape[0]
+    # position of each id within hot_ids (k small: one (B, K) compare)
+    eq = ids[..., None] == state.hot_ids[None, :]
+    is_hot = eq.any(axis=-1)
+    slot = jnp.argmax(eq, axis=-1)
+    hot_val = state.hot_rows[slot]
+    cold_ids = jnp.where(is_hot, 0, ids)          # avoid gathering hot rows
+    cold_val = jnp.take(table, cold_ids, axis=0)
+    out = jnp.where(is_hot[..., None], hot_val.astype(cold_val.dtype),
+                    cold_val)
+    return out, is_hot
+
+
+def refresh_after_update(table: jax.Array,
+                         state: HotRowState) -> HotRowState:
+    """After a (sparse) table update, re-snapshot replica rows -- the
+    write path invalidation: replicas are rebuilt, not patched, because
+    hot sets are tiny."""
+    safe = jnp.maximum(state.hot_ids, 0)
+    rows = table[safe]
+    rows = jnp.where(state.hot_ids[:, None] >= 0, rows, 0)
+    return HotRowState(hot_ids=state.hot_ids, hot_rows=rows)

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the framework's compute hot-spots, each with a
+# pure-jnp oracle (ref.py) and a jit'd public wrapper (ops.py):
+#   clht_probe       DINOMO index lookup (scalar-prefetched bucket DMA)
+#   log_merge        DPM-processor log merge into the CLHT (in-place)
+#   flash_attention  serving prefill (online-softmax tiling, GQA, causal)
+#   decode_attention paged decode over owned KV pages (flash-decoding
+#                    partials -> ownership-partition merge)
+#   ssd_scan         Mamba2 SSD chunked scan (MXU matmuls + carried state)

@@ -1,0 +1,3 @@
+from .clht_probe import clht_probe, pack_table
+from .ops import lookup
+from .ref import clht_probe_ref

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: batched P-CLHT bucket probe (paper's index lookup).
+
+The paper's hot path on a cache miss is the metadata-index traversal:
+P-CLHT touches exactly one cache line (bucket) in the common case. The
+TPU adaptation packs each bucket into one 128-lane VMEM row:
+
+    line[b, 0:S]    = slot keys
+    line[b, S:2S]   = slot value-pointers
+    line[b, 2S]     = chain link (next bucket id, -1 if none)
+
+and probes a batch of keys with a *scalar-prefetched* grid: bucket ids
+are computed on the host side of the call, prefetched, and each grid
+step DMAs exactly the one bucket line it needs (HBM -> VMEM), the TPU
+analogue of DINOMO's single one-sided RDMA read per probe. The compare
++ select over slots is a VPU op on the 128-lane row.
+
+Chain overflow (rare: load factor is sized for ~1 line/probe, cf. the
+measured 1.15 probes/lookup) falls back to the jnp reference in ops.py,
+mirroring the paper's common-case/slow-path split.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def pack_table(keys: jax.Array, ptrs: jax.Array,
+               nxt: jax.Array) -> jax.Array:
+    """(TB, S) keys + (TB, S) ptrs + (TB,) next -> (TB, 128) lines."""
+    tb, slots = keys.shape
+    assert 2 * slots + 1 <= LANES, "bucket line exceeds 128 lanes"
+    line = jnp.full((tb, LANES), -1, jnp.int32)
+    line = line.at[:, :slots].set(keys.astype(jnp.int32))
+    line = line.at[:, slots:2 * slots].set(ptrs.astype(jnp.int32))
+    line = line.at[:, 2 * slots].set(nxt.astype(jnp.int32))
+    return line
+
+
+def _probe_kernel(bucket_ids_ref, keys_ref, line_ref, ptr_ref, found_ref,
+                  *, slots: int):
+    """One grid step = one key probing one bucket line."""
+    key = keys_ref[0]
+    line = line_ref[0, :]                     # (128,) bucket line in VMEM
+    lane = jax.lax.iota(jnp.int32, LANES)
+    slot_keys = jnp.where(lane < slots, line, -1)
+    hit = (slot_keys == key) & (key >= 0)
+    # pointer lives ``slots`` lanes to the right of its key
+    ptr_lane = jnp.where(hit, lane + slots, 0).sum()
+    ptr = jnp.where(hit.any(), jnp.take(line, ptr_lane, axis=0), -1)
+    ptr_ref[0] = ptr.astype(jnp.int32)
+    found_ref[0] = hit.any().astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("slots", "interpret"))
+def clht_probe(lines: jax.Array, bucket_ids: jax.Array, keys: jax.Array,
+               *, slots: int = 3, interpret: bool = True):
+    """Probe the primary bucket of each key.
+
+    lines:      (TB, 128) packed bucket lines
+    bucket_ids: (B,) int32 primary bucket of each key (scalar-prefetched)
+    keys:       (B,) int32 probe keys
+    returns (ptrs, found): (B,) int32 pointer (-1 if absent from the
+    primary bucket) and (B,) int32 {0,1} hit flag.
+    """
+    b = keys.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, ids: (i,)),             # keys
+            pl.BlockSpec((1, LANES), lambda i, ids: (ids[i], 0)),  # line
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, ids: (i,)),
+            pl.BlockSpec((1,), lambda i, ids: (i,)),
+        ],
+    )
+    ptrs, found = pl.pallas_call(
+        functools.partial(_probe_kernel, slots=slots),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.int32),
+                   jax.ShapeDtypeStruct((b,), jnp.int32)],
+        interpret=interpret,
+    )(bucket_ids, keys, lines)
+    return ptrs, found

@@ -1,0 +1,37 @@
+"""jit'd public wrapper: full CLHT lookup = Pallas fast path (primary
+bucket, one DMA per key) + jnp chain-walk fallback for overflowed keys --
+the same common-case/slow-path split P-CLHT gets from its cache-line
+bucket design."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.clht import CLHT, bucket_of, clht_lookup
+from .clht_probe import clht_probe, pack_table
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lookup(table: CLHT, keys: jax.Array, *, interpret: bool = True):
+    """Batched CLHT lookup accelerated by the Pallas probe kernel.
+
+    Returns (ptrs, found) like core.clht.clht_lookup (minus the probe
+    counter). Keys that miss the primary bucket take the jnp chain walk.
+    """
+    lines = pack_table(table.keys, table.ptrs, table.nxt)
+    bucket_ids = bucket_of(keys, table.num_buckets)
+    ptr_fast, found_fast = clht_probe(lines, bucket_ids, keys,
+                                      slots=table.keys.shape[1],
+                                      interpret=interpret)
+    # slow path: chain walk for keys not found in the primary bucket AND
+    # whose primary bucket has a chain link (otherwise a true miss).
+    has_chain = table.nxt[bucket_ids] >= 0
+    need_slow = (found_fast == 0) & has_chain
+    ptr_slow, found_slow, _ = clht_lookup(table, keys)
+    ptrs = jnp.where(need_slow, ptr_slow, ptr_fast)
+    found = jnp.where(need_slow, found_slow,
+                      found_fast.astype(bool))
+    return ptrs, found

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the clht_probe kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clht_probe_ref(lines: jax.Array, bucket_ids: jax.Array,
+                   keys: jax.Array, *, slots: int = 3):
+    rows = lines[bucket_ids]                       # (B, 128)
+    slot_keys = rows[:, :slots]                    # (B, S)
+    slot_ptrs = rows[:, slots:2 * slots]
+    hit = (slot_keys == keys[:, None]) & (keys[:, None] >= 0)
+    found = hit.any(axis=1)
+    ptr = jnp.where(hit, slot_ptrs, 0).sum(axis=1)
+    ptr = jnp.where(found, ptr, -1)
+    return ptr.astype(jnp.int32), found.astype(jnp.int32)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: paged GQA decode attention with partial outputs.
+
+This kernel is where DINOMO's ownership partitioning meets compute: the
+KV cache is a *page pool* (the DPM pool analogue) and each serving
+worker computes attention only over the pages it *owns* (its page_table
+rows), emitting flash-decoding partials (acc, m, l). Partials from
+different owners are merged with a log-sum-exp combine (ops.merge),
+which is associative -- so ownership re-partitioning never changes the
+math, only who computes what. One grid step = one page: a
+scalar-prefetched page id drives the BlockSpec index_map, the TPU
+analogue of DINOMO's one-sided read of a remote segment.
+
+Because an owner may hold a *non-contiguous* subset of a sequence's
+pages, each page-table slot carries its token-position base
+(``page_pos``); invalid slots carry a base past the sequence length and
+are skipped.
+
+Layout: pages are (PS, KH, D) blocks; PS defaults to 128 (lane-aligned)
+and D=128 matches the MXU; the online-softmax state (KH*G rows) lives
+in VMEM scratch across the page sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+INVALID_POS = 1 << 30
+
+
+def _decode_kernel(pt_ref, pos_ref, len_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_ref, l_ref, acc_s, m_s, l_s,
+                   *, page_size: int, kh: int, group: int, scale: float):
+    bi = pl.program_id(0)
+    pi = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    pos_base = pos_ref[bi, pi]
+    length = len_ref[bi]
+
+    @pl.when(pos_base < length)          # skip invalid / out-of-range pages
+    def _compute():
+        q = q_ref[0].astype(jnp.float32).reshape(kh, group, -1)  # (KH,G,D)
+        k = k_ref[0].astype(jnp.float32).transpose(1, 0, 2)      # (KH,PS,D)
+        v = v_ref[0].astype(jnp.float32).transpose(1, 0, 2)
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale          # (KH,G,PS)
+        pos = pos_base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_s[...]                                         # (KH,G,1)
+        m_new = jnp.maximum(m_prev, s.max(axis=2, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * alpha + p.sum(axis=2, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)                   # (KH,G,D)
+        acc_s[...] = acc_s[...] * alpha + pv
+        m_s[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _flush():
+        d = acc_s.shape[-1]
+        # un-normalized partials: caller merges across page owners
+        o_ref[0] = acc_s[...].reshape(kh * group, d).astype(o_ref.dtype)
+        m_ref[0] = m_s[...].reshape(kh * group)
+        l_ref[0] = l_s[...].reshape(kh * group)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           page_pos: jax.Array, lengths: jax.Array, *,
+                           scale: float | None = None,
+                           interpret: bool = True):
+    """q: (B, H, D); k_pages/v_pages: (NP, PS, KH, D);
+    page_table: (B, P) int32 page ids (-1 = no page);
+    page_pos:   (B, P) int32 token-position base of each slot;
+    lengths:    (B,) int32 total kv length per sequence.
+
+    Returns un-normalized partials (acc, m, l):
+      acc (B, H, D) f32, m (B, H) f32, l (B, H) f32
+    so that attention = acc / l after merging partials across owners."""
+    b, h, d = q.shape
+    np_, ps, kh, _ = k_pages.shape
+    assert h % kh == 0
+    group = h // kh
+    p = page_table.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    # invalid pages (-1) read page 0 but carry pos_base >= length
+    safe_pt = jnp.maximum(page_table, 0).astype(jnp.int32)
+    safe_pos = jnp.where(page_table >= 0, page_pos,
+                         INVALID_POS).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, p),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, pi, pt, po, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, kh, d),
+                         lambda bi, pi, pt, po, ln: (pt[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kh, d),
+                         lambda bi, pi, pt, po, ln: (pt[bi, pi], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, pi, pt, po, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, h), lambda bi, pi, pt, po, ln: (bi, 0)),
+            pl.BlockSpec((1, h), lambda bi, pi, pt, po, ln: (bi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((kh, group, d), jnp.float32),
+            pltpu.VMEM((kh, group, 1), jnp.float32),
+            pltpu.VMEM((kh, group, 1), jnp.float32),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        functools.partial(_decode_kernel, page_size=ps, kh=kh,
+                          group=group, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, h), jnp.float32),
+                   jax.ShapeDtypeStruct((b, h), jnp.float32)],
+        interpret=interpret,
+    )(safe_pt, safe_pos, lengths.astype(jnp.int32), q, k_pages, v_pages)
+    return acc, m, l

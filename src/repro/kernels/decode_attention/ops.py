@@ -1,0 +1,75 @@
+"""Public paged-decode op + the associative partial-merge.
+
+``merge_partials`` is the log-sum-exp combine that joins partial
+attention results computed by different page owners; it is what makes
+DINOMO-style ownership re-partitioning free for the math: any grouping
+of pages, computed by any owner, merges to the same answer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import paged_decode_attention
+from .ref import normalize, paged_decode_ref
+
+
+def merge_partials(parts):
+    """parts: iterable of (acc (B,H,D), m (B,H), l (B,H)) partials.
+    Returns the merged (acc, m, l)."""
+    parts = list(parts)
+    acc, m, l = parts[0]
+    for acc2, m2, l2 in parts[1:]:
+        m_new = jnp.maximum(m, m2)
+        a1 = jnp.exp(m - m_new)
+        a2 = jnp.exp(m2 - m_new)
+        acc = acc * a1[..., None] + acc2 * a2[..., None]
+        l = l * a1 + l2 * a2
+        m = m_new
+    return acc, m, l
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def paged_decode(q, k_pages, v_pages, page_table, page_pos, lengths, *,
+                 use_kernel: bool | None = None,
+                 interpret: bool | None = None):
+    """Normalized paged decode attention: (B, H, D)."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        acc, m, l = paged_decode_attention(q, k_pages, v_pages, page_table,
+                                           page_pos, lengths,
+                                           interpret=interpret)
+    else:
+        acc, m, l = paged_decode_ref(q, k_pages, v_pages, page_table,
+                                     page_pos, lengths)
+    return normalize(acc, m, l).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def paged_decode_partial(q, k_pages, v_pages, page_table, page_pos,
+                         lengths, *, use_kernel: bool | None = None,
+                         interpret: bool | None = None):
+    """Un-normalized partials for cross-owner merging."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        return paged_decode_attention(q, k_pages, v_pages, page_table,
+                                      page_pos, lengths,
+                                      interpret=interpret)
+    return paged_decode_ref(q, k_pages, v_pages, page_table, page_pos,
+                            lengths)

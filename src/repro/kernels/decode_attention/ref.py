@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_ref(q, k_pages, v_pages, page_table, page_pos, lengths,
+                     *, scale: float | None = None):
+    """Same contract as the kernel: returns un-normalized (acc, m, l)."""
+    b, h, d = q.shape
+    np_, ps, kh, _ = k_pages.shape
+    group = h // kh
+    p = page_table.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    safe_pt = jnp.maximum(page_table, 0)
+    k = k_pages[safe_pt]                     # (B, P, PS, KH, D)
+    v = v_pages[safe_pt]
+    k = k.reshape(b, p * ps, kh, d)
+    v = v.reshape(b, p * ps, kh, d)
+    pos = (page_pos[:, :, None] + jnp.arange(ps)[None, None, :])
+    pos = jnp.where(page_table[:, :, None] >= 0, pos, 1 << 30)
+    pos = pos.reshape(b, p * ps)
+    valid = pos < lengths[:, None]           # (B, P*PS)
+
+    qr = q.astype(jnp.float32).reshape(b, kh, group, d)
+    kt = k.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B,KH,S,D)
+    vt = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bkgd,bksd->bkgs", qr, kt) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=3)                                   # (B,KH,G)
+    pweights = jnp.exp(s - m[..., None])
+    pweights = jnp.where(valid[:, None, None, :], pweights, 0.0)
+    l = pweights.sum(axis=3)
+    acc = jnp.einsum("bkgs,bksd->bkgd", pweights, vt)
+    return (acc.reshape(b, h, d), m.reshape(b, h), l.reshape(b, h))
+
+
+def normalize(acc, m, l):
+    return acc / jnp.maximum(l, 1e-30)[..., None]

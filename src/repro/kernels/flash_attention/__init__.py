@@ -1,0 +1,3 @@
+from .flash_attention import flash_attention
+from .ops import attention
+from .ref import blocked_mha_jnp, mha_ref

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused multi-head attention (prefill path).
+
+Serving prefill at 32 k tokens is the framework's dominant compute
+hot-spot. Classic FlashAttention tiling adapted to TPU:
+
+  * grid (B, H, Sq/BQ, Sk/BK), kv innermost so the online-softmax state
+    (m, l, acc) lives in VMEM scratch across the kv sweep;
+  * BQ/BK default 128 -- MXU-aligned (128x128 systolic array) and
+    VMEM-friendly: working set = q(BQ,D) + k/v(BK,D) + acc(BQ,D) floats;
+  * causal block skip: fully-masked kv blocks skip the matmul entirely
+    (pl.when), halving prefill FLOPs;
+  * GQA folded into the k/v index_map (q head h reads kv head h//group),
+    so no KV duplication is materialized.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s,
+                 *, scale: float, causal: bool, bq: int, bk: int):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_s[...]
+        l_prev = l_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_s[...] = l_prev * alpha + p.sum(axis=1, keepdims=True)
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    if causal:
+        # causal block skip: a kv block whose first key position exceeds
+        # this q block's last query position is fully masked
+        pl.when(k_start <= q_start + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, 0] = (acc[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, KH, Sk, D) with H % KH == 0.
+    Returns (B, H, Sq, D) in q.dtype."""
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    assert h % kh == 0, "GQA requires H % KH == 0"
+    group = h // kh
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, "seq must divide block size"
+    if scale is None:
+        scale = d ** -0.5
+    grid = (b, h, sq // bq, sk // bk)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,64 @@
+"""Public attention op in model layout (B, S, H, D) with automatic
+kernel/oracle dispatch: the Pallas kernel targets TPU; on CPU hosts the
+jnp oracle lowers to XLA directly (interpret-mode kernels are for
+validation, not speed). The dry-run lowers whatever this returns."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .ref import blocked_mha_heads, blocked_mha_jnp, mha_ref
+
+# §Perf toggle: when an activation-sharding policy is installed and the
+# head count divides the model axis, run the head-major blocked
+# attention under a head-sharding constraint (no resharding inside the
+# kv scan). Flipped off to reproduce the pre-optimization baseline.
+HEAD_SHARDED_ATTENTION = False   # baseline default; §Perf flips on
+
+
+def set_head_sharded_attention(v: bool) -> None:
+    global HEAD_SHARDED_ATTENTION
+    HEAD_SHARDED_ATTENTION = v
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_kernel",
+                                             "interpret", "bq", "bk"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, use_kernel: bool | None = None,
+              interpret: bool | None = None, bq: int = 128,
+              bk: int = 128) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, S, KH, D). Returns (B, S, H, D)."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        out = flash_attention(qt, kt, vt, causal=causal, bq=bq, bk=bk,
+                              interpret=interpret)
+    elif kt.shape[2] > 2048 and kt.shape[2] % 1024 == 0:
+        from ...distributed.act_sharding import (constrain_heads,
+                                                 head_sharding_active)
+        if HEAD_SHARDED_ATTENTION and head_sharding_active(qt.shape[1]):
+            out = blocked_mha_heads(constrain_heads(qt), kt, vt,
+                                    causal=causal)
+        else:
+            # long sequences off-TPU: blocked online-softmax
+            # (flash-style O(S*bk) memory) instead of dense O(S^2)
+            out = blocked_mha_jnp(qt, kt, vt, causal=causal)
+    else:
+        out = mha_ref(qt, kt, vt, causal=causal)
+    return out.transpose(0, 2, 1, 3)

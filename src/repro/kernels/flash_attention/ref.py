@@ -1,0 +1,128 @@
+"""Pure-jnp oracle for flash_attention (dense softmax, GQA, causal)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, H, Sq, D); k, v: (B, KH, Sk, D). Returns (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    group = h // kh
+    if scale is None:
+        scale = d ** -0.5
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def blocked_mha_heads(q, k, v, *, causal: bool = True,
+                      scale: float | None = None, bk: int = 1024):
+    """Head-major blocked attention (§Perf): GQA K/V are expanded to all
+    H heads once per layer, and every tensor keeps its (B, H, S, D)
+    layout so a head-sharding constraint propagates through the whole
+    computation with ZERO resharding (the (KH, group) reshape in
+    blocked_mha_jnp forces GSPMD to re-lay q/k/v on every kv block).
+    Math identical to blocked_mha_jnp (tested)."""
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    group = h // kh
+    if scale is None:
+        scale = d ** -0.5
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    from ...distributed.act_sharding import constrain_heads
+    k = constrain_heads(k)
+    v = constrain_heads(v)
+    bk = min(bk, sk)
+    assert sk % bk == 0
+    nb = sk // bk
+    kb = k.reshape(b, h, nb, bk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, h, nb, bk, d).transpose(2, 0, 1, 3, 4)
+    qpos = jnp.arange(sq) + (sk - sq)   # queries are the last sq positions
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, bi = inp                        # (B,H,bk,D) x2, ()
+        s = jnp.einsum("bhqd,bhcd->bhqc", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            kpos = bi * bk + jnp.arange(bk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqc,bhcd->bhqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def blocked_mha_jnp(q, k, v, *, causal: bool = True,
+                    scale: float | None = None, bk: int = 1024):
+    """Online-softmax attention in pure jnp: a lax.scan over kv blocks
+    carrying (m, l, acc) -- mathematically the flash kernel, expressed
+    so XLA lowers it with O(S*bk) score buffers instead of O(S^2).
+    This is what non-TPU lowering uses for long sequences, so the
+    dry-run memory term reflects flash-style tiling, not dense scores.
+
+    q: (B, H, Sq, D); k, v: (B, KH, Sk, D)."""
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    group = h // kh
+    if scale is None:
+        scale = d ** -0.5
+    bk = min(bk, sk)
+    assert sk % bk == 0
+    nb = sk // bk
+    kb = k.reshape(b, kh, nb, bk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, kh, nb, bk, d).transpose(2, 0, 1, 3, 4)
+    qf = q.reshape(b, kh, group, sq, d)
+    qpos = jnp.arange(sq) + (sk - sq)   # queries are the last sq positions
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, bi = inp                        # (B,KH,bk,D) x2, ()
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            kpos = bi * bk + jnp.arange(bk)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kh, group, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kh, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, kh, group, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: merge sealed log entries into CLHT bucket lines.
+
+This is the DPM-processor hot-spot (paper Sec. 3.6 'asynchronous post
+processing of writes'): sealed (key, ptr) log entries are merged *in
+order* into the metadata index.
+
+TPU design. A naive one-entry-per-step scatter would revisit output
+blocks non-consecutively, which Pallas TPU forbids (blocks are only
+coherent across *consecutive* grid steps). Instead the wrapper
+stable-sorts entries by bucket -- legal because distinct buckets are
+independent and a stable sort preserves log order *within* a bucket,
+which is the only order CLHT state depends on -- so each bucket's
+entries are consecutive. The kernel then:
+
+  * on the first entry of a bucket group, loads the bucket line into a
+    VMEM scratch row (scratch persists across sequential grid steps),
+  * applies each entry to the scratch row (match -> in-place pointer
+    overwrite; empty slot -> claim; full -> ok=0 for the jnp slow path),
+  * emits the post-entry row; the wrapper scatters each bucket group's
+    final row back to HBM (one write per touched bucket).
+
+Superseded pointers are emitted per entry (old_ptr) so the caller can
+maintain the per-segment GC counters of paper Sec. 4.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _merge_kernel(bucket_ids_ref, first_ref, keys_ref, ptrs_ref,
+                  line_in_ref, row_out_ref, old_ref, ok_ref, scratch,
+                  *, slots: int):
+    @pl.when(first_ref[0] == 1)
+    def _load():
+        scratch[0, :] = line_in_ref[0, :]
+
+    key = keys_ref[0]
+    ptr = ptrs_ref[0]
+    line = scratch[0, :]
+    lane = jax.lax.iota(jnp.int32, LANES)
+    in_slot = lane < slots
+    slot_keys = jnp.where(in_slot, line, -2)
+    match = slot_keys == key
+    empty = slot_keys == -1
+    match_any = match.any()
+    empty_any = empty.any()
+    first = lambda m: jnp.min(jnp.where(m, lane, LANES))
+    target = jnp.where(match_any, first(match), first(empty))
+    live = key >= 0                      # padded entries carry key -3
+    ok = (match_any | empty_any) & live
+    old = jnp.where(match_any & live,
+                    jnp.take(line, jnp.where(match_any, target + slots, 0),
+                             axis=0),
+                    -1)
+    new_line = jnp.where(lane == target, key,
+                         jnp.where(lane == target + slots, ptr, line))
+    scratch[0, :] = jnp.where(ok, new_line, line)
+    row_out_ref[0, :] = scratch[0, :]
+    old_ref[0] = old.astype(jnp.int32)
+    ok_ref[0] = ok.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("slots", "interpret"))
+def log_merge_sorted(lines: jax.Array, bucket_ids: jax.Array,
+                     first_flags: jax.Array, keys: jax.Array,
+                     ptrs: jax.Array, *, slots: int = 3,
+                     interpret: bool = True):
+    """Kernel entry point over *bucket-sorted* entries.
+
+    lines:       (TB, 128) packed bucket lines
+    bucket_ids:  (E,) sorted bucket per entry (scalar-prefetched)
+    first_flags: (E,) 1 iff entry i starts a new bucket group
+    returns (rows, old_ptrs, ok) where rows[i] is the bucket line state
+    after entry i (the wrapper writes back each group's last row)."""
+    e = keys.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, ids: (i,)),                # first
+            pl.BlockSpec((1,), lambda i, ids: (i,)),                # keys
+            pl.BlockSpec((1,), lambda i, ids: (i,)),                # ptrs
+            pl.BlockSpec((1, LANES), lambda i, ids: (ids[i], 0)),   # line
+        ],
+        out_specs=[
+            pl.BlockSpec((1, LANES), lambda i, ids: (i, 0)),
+            pl.BlockSpec((1,), lambda i, ids: (i,)),
+            pl.BlockSpec((1,), lambda i, ids: (i,)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, LANES), jnp.int32)],
+    )
+    rows, old, ok = pl.pallas_call(
+        functools.partial(_merge_kernel, slots=slots),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((e, LANES), jnp.int32),
+                   jax.ShapeDtypeStruct((e,), jnp.int32),
+                   jax.ShapeDtypeStruct((e,), jnp.int32)],
+        interpret=interpret,
+    )(bucket_ids, first_flags, keys, ptrs, lines)
+    return rows, old, ok
+
+
+@functools.partial(jax.jit, static_argnames=("slots", "interpret"))
+def log_merge(lines: jax.Array, bucket_ids: jax.Array, keys: jax.Array,
+              ptrs: jax.Array, *, slots: int = 3, interpret: bool = True):
+    """Merge entries (given in log order) into packed bucket lines.
+
+    Sorts by bucket (stable -- preserves per-bucket log order), runs the
+    kernel, scatters each bucket group's final row back, and un-permutes
+    the per-entry results. Returns (lines, old_ptrs, ok)."""
+    e = keys.shape[0]
+    order = jnp.argsort(bucket_ids, stable=True)
+    bids_s = bucket_ids[order]
+    keys_s = keys[order]
+    ptrs_s = ptrs[order]
+    first = jnp.concatenate([jnp.ones((1,), jnp.int32),
+                             (bids_s[1:] != bids_s[:-1]).astype(jnp.int32)])
+    rows, old_s, ok_s = log_merge_sorted(lines, bids_s, first, keys_s,
+                                         ptrs_s, slots=slots,
+                                         interpret=interpret)
+    # last entry of each bucket group carries the group's final row
+    last = jnp.concatenate([(bids_s[1:] != bids_s[:-1]).astype(bool),
+                            jnp.ones((1,), bool)])
+    # scatter final rows; masked (non-last) rows target the dump row TB
+    # (out of range -> dropped by scatter's OOB semantics in 'drop' mode)
+    tb = lines.shape[0]
+    tgt = jnp.where(last, bids_s, tb)
+    new_lines = lines.at[tgt].set(rows, mode="drop")
+    inv = jnp.argsort(order, stable=True)
+    return new_lines, old_s[inv], ok_s[inv]

@@ -1,0 +1,51 @@
+"""jit-compatible wrapper: merge a LogSegment into a CLHT using the
+Pallas kernel for the common case and the jnp chain-insert slow path for
+bucket-full entries (rare by construction: the table is sized so the
+primary bucket absorbs almost all keys)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.clht import CLHT, bucket_of, clht_insert
+from ...core.log import LogSegment
+from ..clht_probe.clht_probe import pack_table
+from .log_merge import LANES, log_merge
+
+
+def unpack_table(lines: jax.Array, table: CLHT) -> CLHT:
+    slots = table.keys.shape[1]
+    return CLHT(keys=lines[:, :slots], ptrs=lines[:, slots:2 * slots],
+                nxt=lines[:, 2 * slots], overflow_head=table.overflow_head,
+                num_buckets=table.num_buckets)
+
+
+def merge_segment_fast(table: CLHT, seg: LogSegment, *,
+                       interpret: bool = True):
+    """Merge the sealed, un-merged prefix of ``seg`` into ``table``.
+
+    Fast path: one Pallas grid step per entry (primary bucket, in-place).
+    Slow path: entries whose bucket was full go through clht_insert,
+    preserving order (a failed key's later duplicates also fail fast,
+    so relative order is intact). Returns (table, old_ptrs, ok)."""
+    slots = table.keys.shape[1]
+    idx = jnp.arange(seg.keys.shape[0], dtype=jnp.int32)
+    todo = (idx >= seg.merged) & (idx < seg.count) & (seg.seal == 1)
+    # masked-out entries probe bucket 0 with key -3 (never matches, never
+    # claims a slot because ok is forced False afterwards)
+    keys = jnp.where(todo, seg.keys, -3)
+    safe_keys = jnp.where(keys < 0, 0, keys)
+    bids = jnp.where(todo, bucket_of(safe_keys, table.num_buckets), 0)
+    lines = pack_table(table.keys, table.ptrs, table.nxt)
+    lines, old, ok = log_merge(lines, bids, keys, seg.ptrs, slots=slots,
+                               interpret=interpret)
+    ok = jnp.where(todo, ok, 0)
+    table = unpack_table(lines, table)
+    # slow path for bucket-full entries
+    slow = todo & (ok == 0)
+    table, old_slow, ok_slow, _ = clht_insert(table, seg.keys, seg.ptrs,
+                                              slow)
+    old = jnp.where(slow, old_slow, old)
+    ok = (ok == 1) | (slow & ok_slow)
+    return table, old, ok

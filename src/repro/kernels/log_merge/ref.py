@@ -1,0 +1,30 @@
+"""Sequential oracle for log_merge (numpy, exact semantics)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def log_merge_ref(lines, bucket_ids, keys, ptrs, *, slots: int = 3):
+    lines = np.array(lines, dtype=np.int32, copy=True)
+    e = len(keys)
+    old = np.full((e,), -1, np.int32)
+    ok = np.zeros((e,), np.int32)
+    for i in range(e):
+        b, k, p = int(bucket_ids[i]), int(keys[i]), int(ptrs[i])
+        row = lines[b]
+        slot_keys = row[:slots]
+        match = np.nonzero(slot_keys == k)[0]
+        if match.size:
+            s = int(match[0])
+            old[i] = row[slots + s]
+            row[slots + s] = p
+            ok[i] = 1
+            continue
+        emptys = np.nonzero(slot_keys == -1)[0]
+        if emptys.size:
+            s = int(emptys[0])
+            row[s] = k
+            row[slots + s] = p
+            ok[i] = 1
+    return lines, old, ok

@@ -1,0 +1,3 @@
+from .ops import ssd
+from .ref import ssd_decode_step, ssd_ref
+from .ssd_scan import ssd_scan

@@ -1,0 +1,82 @@
+"""Public SSD op with kernel/oracle dispatch (same policy as attention:
+Pallas kernel on TPU, jnp chunked implementation elsewhere -- the jnp
+path mirrors the kernel's chunked math so XLA sees the same MXU-sized
+matmuls the TPU kernel would issue)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssd_ref
+from .ssd_scan import ssd_scan
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def _ssd_chunked_jnp(x, dt, a, b, c, d, chunk: int):
+    """Chunked SSD in pure jnp (same algorithm as the kernel; used for
+    lowering on non-TPU backends and as a remat-friendly train path)."""
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    hg = h // g
+    nc = s // chunk
+    xf = x.astype(jnp.float32).reshape(bsz, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, chunk, h)
+    bf = jnp.repeat(b, hg, axis=2).astype(jnp.float32) \
+        .reshape(bsz, nc, chunk, h, n)
+    cf = jnp.repeat(c, hg, axis=2).astype(jnp.float32) \
+        .reshape(bsz, nc, chunk, h, n)
+    da = dtf * a[None, None, None, :]                     # (B,NC,L,H)
+    cum = jnp.cumsum(da, axis=2)
+    cb = jnp.einsum("bnihd,bnjhd->bnhij", cf, bf)         # (B,NC,H,L,L)
+    ii = jnp.arange(chunk)
+    mask = ii[:, None] >= ii[None, :]
+    decay = jnp.exp(jnp.minimum(
+        cum.transpose(0, 1, 3, 2)[..., :, None]
+        - cum.transpose(0, 1, 3, 2)[..., None, :], 0.0))
+    smat = jnp.where(mask, cb * decay
+                     * dtf.transpose(0, 1, 3, 2)[..., None, :], 0.0)
+    y_intra = jnp.einsum("bnhij,bnjhp->bnihp", smat, xf)
+    # chunk-level states scanned sequentially
+    last = cum[:, :, -1, :]                               # (B,NC,H)
+    w = jnp.exp(last[:, :, None, :] - cum) * dtf          # (B,NC,L,H)
+    chunk_states = jnp.einsum("bnlhd,bnlhp->bnhdp", bf * w[..., None], xf)
+
+    def scanf(h_in, inp):
+        cs, dec = inp
+        h_out = h_in * dec[..., None, None] + cs
+        return h_out, h_in
+
+    decs = jnp.exp(last).transpose(1, 0, 2)               # (NC,B,H)
+    _, h_prevs = jax.lax.scan(
+        scanf, jnp.zeros((bsz, h, n, p), jnp.float32),
+        (chunk_states.transpose(1, 0, 2, 3, 4), decs))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # (B,NC,H,N,P)
+    y_inter = jnp.exp(cum)[..., None] * jnp.einsum(
+        "bnlhd,bnhdp->bnlhp", cf, h_prevs)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p) \
+        + d[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel",
+                                             "interpret"))
+def ssd(x, dt, a, b, c, d, *, chunk: int = 64,
+        use_kernel: bool | None = None, interpret: bool | None = None):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b, c: (B,S,G,N); d: (H,)."""
+    chunk = min(chunk, x.shape[1])
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        return ssd_scan(x, dt, a, b, c, d, chunk=chunk, interpret=interpret)
+    return _ssd_chunked_jnp(x, dt, a, b, c, d, chunk)

@@ -1,0 +1,46 @@
+"""Exact sequential oracle for the SSD scan (lax.scan recurrence)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, b, c, d):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,); b, c: (B,S,G,N); d: (H,).
+    Returns y: (B,S,H,P), final_state: (B,H,N,P)."""
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    hg = h // g
+    bh = jnp.repeat(b, hg, axis=2)       # (B,S,H,N)
+    ch = jnp.repeat(c, hg, axis=2)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp            # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * a[None, :])               # (B,H)
+        state = state * decay[..., None, None] \
+            + (dtt[..., None] * bt)[..., :, None] * xt[..., None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3))
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    final, ys = jax.lax.scan(step, state0,
+                             jax.tree.map(lambda t: t.astype(jnp.float32),
+                                          xs))
+    y = ys.transpose(1, 0, 2, 3) + d[None, None, :, None] \
+        * x.astype(jnp.float32)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, xt, dtt, a, bt, ct, d):
+    """Single-token decode: state (B,H,N,P) -> (y (B,H,P), state)."""
+    hg = state.shape[1] // bt.shape[1]
+    bt = jnp.repeat(bt, hg, axis=1)
+    ct = jnp.repeat(ct, hg, axis=1)
+    decay = jnp.exp(dtt * a[None, :])
+    state = state * decay[..., None, None] \
+        + (dtt[..., None] * bt)[..., :, None] * xt[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", ct, state) + d[None, :, None] * xt
+    return y, state

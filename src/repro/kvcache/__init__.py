@@ -1,0 +1,3 @@
+from .paged_store import (PagedKVController, PagePool, decode_over_owners,
+                          pool_append, pool_init)
+from .prefix_cache import PrefixCache

@@ -1,0 +1,214 @@
+"""Paged KV-cache store on DINOMO principles.
+
+The KV cache is a *page pool* (shared ground truth, like the DPM pool);
+serving workers hold *ownership* of pages, not the pages themselves:
+
+  * OP (T1): a consistent-hash ring maps page ids -> owning worker; the
+    owner computes decode attention over its pages (decode_attention
+    kernel) and partials merge across owners. Adding/removing a worker
+    re-maps ring ranges only -- pool arrays never move, and the merge
+    associativity (tested) guarantees identical logits across any
+    ownership layout.
+  * DAC (T2): each worker decides which owned pages to *copy* into its
+    local cache slab (value entries: zero remote reads) vs. reference
+    in the pool (shortcut entries: one remote gather) using the same
+    Eq. 1 benefit test, fed by page-touch frequencies.
+  * Selective replication (T3): hot pages (shared prompt prefixes) get
+    ownership replicated across workers via the prefix cache refcounts.
+  * Log-structured appends (T4): new tokens append KV at the sequence's
+    tail page; pages seal when full; sealed pages are immutable (so
+    prefix sharing is copy-free).
+
+The pool arrays are functional JAX state; the controller is the python
+control plane (allocation, rings, eviction) -- mirroring the paper's
+KN/DPM split.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dac import DAC
+from ..core.hashring import HashRing
+from ..kernels.decode_attention.ops import merge_partials, \
+    paged_decode_partial
+from ..kernels.decode_attention.ref import normalize
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PagePool:
+    """Functional pool state: one slab per layer (stacked)."""
+    k: jax.Array          # (L, NP, PS, KH, D)
+    v: jax.Array
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2]
+
+
+def pool_init(layers: int, num_pages: int, page_size: int, kv_heads: int,
+              head_dim: int, dtype=jnp.bfloat16) -> PagePool:
+    shape = (layers, num_pages, page_size, kv_heads, head_dim)
+    return PagePool(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+@jax.jit
+def pool_append(pool: PagePool, page_id, offset, k_tok, v_tok):
+    """Append one token's KV (L, B=1 collapsed -> (L, KH, D)) into
+    page ``page_id`` at ``offset`` -- the log-structured write."""
+    k = jax.lax.dynamic_update_slice(
+        pool.k, k_tok[:, None, None].astype(pool.k.dtype),
+        (0, page_id, offset, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        pool.v, v_tok[:, None, None].astype(pool.v.dtype),
+        (0, page_id, offset, 0, 0))
+    return PagePool(k=k, v=v)
+
+
+@dataclass
+class Sequence:
+    sid: int
+    pages: list[int] = field(default_factory=list)
+    length: int = 0
+    shared_prefix_pages: int = 0      # leading pages borrowed via prefix
+
+
+class PagedKVController:
+    """Python control plane: allocation, ownership, DAC, reconfig."""
+
+    def __init__(self, num_pages: int, page_size: int,
+                 workers: list[str], cache_pages_per_worker: int = 64,
+                 vnodes: int = 32):
+        self.page_size = page_size
+        self.free = list(range(num_pages - 1, -1, -1))
+        self.refcount = np.zeros(num_pages, np.int32)
+        self.sequences: dict[int, Sequence] = {}
+        self.ring = HashRing(workers, vnodes=vnodes)
+        # per-worker DAC over pages: a 'value' is a locally-cached page
+        # copy, a 'shortcut' is just the page id (one remote gather)
+        page_bytes = 1            # abstract units: capacity in pages
+        self.dac: dict[str, DAC] = {
+            w: DAC(capacity_bytes=cache_pages_per_worker
+                   * (DAC.value_bytes(page_bytes)))
+            for w in workers}
+        self.stats = {"appends": 0, "page_allocs": 0, "reconfigs": 0}
+
+    # ----- allocation (log-structured appends) -------------------------
+    def new_sequence(self, sid: int) -> Sequence:
+        seq = Sequence(sid)
+        self.sequences[sid] = seq
+        return seq
+
+    def _alloc_page(self) -> int:
+        if not self.free:
+            raise RuntimeError("page pool exhausted")
+        pid = self.free.pop()
+        self.refcount[pid] = 1
+        self.stats["page_allocs"] += 1
+        return pid
+
+    def append_slot(self, sid: int) -> tuple[int, int]:
+        """Where the next token's KV goes: (page_id, offset)."""
+        seq = self.sequences[sid]
+        off = seq.length % self.page_size
+        if off == 0:
+            seq.pages.append(self._alloc_page())
+        seq.length += 1
+        self.stats["appends"] += 1
+        return seq.pages[-1], off
+
+    def release(self, sid: int) -> None:
+        seq = self.sequences.pop(sid)
+        for pid in seq.pages:
+            self.refcount[pid] -= 1
+            if self.refcount[pid] == 0:
+                self.free.append(pid)
+
+    # ----- ownership (OP) ----------------------------------------------
+    def owner_of(self, page_id: int) -> str:
+        return self.ring.owner(("page", page_id))
+
+    def page_tables(self, sids: list[int], pad_to: int | None = None):
+        """Per-worker (page_table, page_pos) for a decode batch: worker w
+        gets exactly the (seq, page) cells it owns. Returns
+        {worker: (table (B,P), pos (B,P))} as numpy int32."""
+        workers = self.ring.members
+        maxp = max((len(self.sequences[s].pages) for s in sids),
+                   default=1)
+        p = pad_to or max(maxp, 1)
+        tables = {w: np.full((len(sids), p), -1, np.int32)
+                  for w in workers}
+        poss = {w: np.zeros((len(sids), p), np.int32) for w in workers}
+        for bi, sid in enumerate(sids):
+            seq = self.sequences[sid]
+            cursor = {w: 0 for w in workers}
+            for j, pid in enumerate(seq.pages):
+                w = self.owner_of(pid)
+                c = cursor[w]
+                tables[w][bi, c] = pid
+                poss[w][bi, c] = j * self.page_size
+                cursor[w] = c + 1
+                self._touch(w, pid)
+        return {w: (tables[w], poss[w]) for w in workers}
+
+    def _touch(self, worker: str, page_id: int) -> None:
+        """Feed DAC: a page touch is a read; value hit = local copy."""
+        dac = self.dac[worker]
+        if dac.lookup(page_id) is None:
+            dac.note_miss_rts(1.0)
+            dac.fill_after_miss(page_id, ptr=page_id, length=1)
+
+    def local_copy_ratio(self, worker: str) -> float:
+        dac = self.dac[worker]
+        n = dac.num_values + dac.num_shortcuts
+        return dac.num_values / n if n else 0.0
+
+    # ----- reconfiguration (lightweight, zero page movement) ------------
+    def add_worker(self, name: str) -> None:
+        self.ring.add(name)
+        self.dac[name] = DAC(capacity_bytes=next(iter(self.dac.values()))
+                             .capacity) if self.dac else DAC(64 * 41)
+        self.stats["reconfigs"] += 1
+
+    def remove_worker(self, name: str) -> None:
+        """Worker removal/failure: pages survive in the pool; only the
+        ring changes. The departed worker's local copies (soft state)
+        are dropped."""
+        self.ring.remove(name)
+        self.dac.pop(name, None)
+        self.stats["reconfigs"] += 1
+
+    @property
+    def workers(self) -> list[str]:
+        return self.ring.members
+
+
+def decode_over_owners(q, pool: PagePool, layer: int,
+                       tables: dict[str, tuple[np.ndarray, np.ndarray]],
+                       lengths, *, use_kernel: bool = False):
+    """Run paged decode per owner and merge partials -- functionally
+    identical to single-owner attention (tested), which is exactly why
+    DINOMO-style ownership remaps are free.
+
+    q: (B, H, D); returns (B, H, D)."""
+    parts = []
+    for w, (pt, pos) in tables.items():
+        if (pt >= 0).sum() == 0:
+            continue
+        parts.append(paged_decode_partial(
+            q, pool.k[layer], pool.v[layer], jnp.asarray(pt),
+            jnp.asarray(pos), jnp.asarray(lengths),
+            use_kernel=use_kernel))
+    if not parts:
+        raise ValueError("no owned pages")
+    acc, m, l = merge_partials(parts)
+    return normalize(acc, m, l).astype(q.dtype)

@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production mesh and extract the roofline terms.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init); do not move them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape decode_32k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per cell this prints compiled.memory_analysis() (proves it fits) and
+compiled.cost_analysis() (FLOPs/bytes for the roofline), parses the
+post-SPMD HLO for collective bytes, and writes a JSON artifact consumed
+by benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import sys        # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+
+from ..configs import ALIASES, ARCHS, SHAPES, get_config      # noqa: E402
+from ..distributed.sharding import make_rules                 # noqa: E402
+from .hlo_analysis import analyze_hlo                         # noqa: E402
+from .mesh import make_production_mesh                        # noqa: E402
+from .steps import build_step                                 # noqa: E402
+
+# long_500k needs sub-quadratic sequence handling: run for ssm/hybrid,
+# skip for pure full-attention archs (recorded in DESIGN.md).
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             bundle_override=None, cfg_override=None) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return {"arch": arch, "shape": shape_name,
+                "status": "SKIP(full-attn)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh)
+    t0 = time.time()
+    bundle = (bundle_override or build_step)(cfg, shape, rules)
+    with mesh:
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate)
+        lowered = jitted.lower(*bundle.in_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # trip-count-aware totals (XLA's cost_analysis counts while bodies
+    # once; analyze_hlo multiplies scan-over-layers through)
+    totals = analyze_hlo(compiled.as_text())
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "OK",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "step": bundle.name,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # per-device, post-SPMD, trip-count-aware
+        "flops_per_device": totals.flops,
+        "bytes_per_device": totals.bytes,
+        "collective_bytes": totals.collective_bytes,
+        "collectives": {k: {"count": v["count"], "bytes": v["bytes"]}
+                        for k, v in totals.collectives.items()},
+        # raw XLA numbers for reference (while bodies counted once)
+        "xla_flops_per_device": cost.get("flops", 0.0),
+        "xla_bytes_per_device": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+    }
+    print(f"[dryrun] {arch} x {shape_name} ({rec['mesh']}): "
+          f"compile {t_compile:.0f}s")
+    print(f"  memory_analysis: args={mem.argument_size_in_bytes/1e9:.2f}GB"
+          f" temp={mem.temp_size_in_bytes/1e9:.2f}GB"
+          f" out={mem.output_size_in_bytes/1e9:.2f}GB (per device)")
+    print(f"  per-device: flops={totals.flops:.3e} "
+          f"bytes={totals.bytes:.3e} coll={totals.collective_bytes:.3e}")
+    print("  collectives: " + (", ".join(
+        f"{k}:{int(v['count'])}x/{v['bytes']/1e6:.1f}MB"
+        for k, v in totals.collectives.items()) or "none"))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id (e.g. qwen1.5-0.5b)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--optimized", action="store_true",
+                    help="§Perf variants: SP activations + head-sharded "
+                         "attention + pool-invariant decode")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    bundle_override = None
+    if args.optimized:
+        from ..distributed.act_sharding import set_seq_sharded_activations
+        from ..kernels.flash_attention.ops import \
+            set_head_sharded_attention
+        set_head_sharded_attention(True)
+        from .steps import build_decode_step, build_step as _bs
+
+        def bundle_override(cfg, shape, rules):
+            # SP activations help attention archs but regress SSM/hybrid
+            # (the chunked SSD needs the full sequence locally) -- §Perf
+            set_seq_sharded_activations(
+                cfg.family not in ("ssm", "hybrid"))
+            if shape.kind == "decode":
+                return build_decode_step(cfg, shape, rules,
+                                         optimized=True)
+            return _bs(cfg, shape, rules)
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s, args.multi_pod))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        key = ALIASES.get(arch, arch)
+        suffix = ("opt_" if args.optimized else "") + ("mp" if mp else "sp")
+        tag = f"{key}__{shape}__{suffix}"
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp,
+                           bundle_override=bundle_override)
+        except Exception as e:  # a dry-run failure is a bug in our system
+            rec = {"arch": arch, "shape": shape, "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+            print(f"[dryrun] FAIL {arch} x {shape}: {rec['error']}",
+                  file=sys.stderr)
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=2)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Elastic re-meshing: DINOMO's lightweight reconfiguration applied to
+training state.
+
+A checkpoint written under mesh A restores under mesh B by *re-owning*
+shards (device_put with B's NamedShardings) -- the bytes on disk never
+move, exactly like OP's ownership handoff. ``resize`` performs the
+paper's protocol steps for the training analogue:
+
+  1. participants = every worker (synchronous step boundary)
+  2. quiesce (finish in-flight step)
+  3. merge pending state = flush async checkpoint futures
+  4. new mapping = shardings for the new mesh
+  5. resume -- restore + re-own, no data reorganization
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..checkpoint.ckpt import CheckpointStore
+from ..distributed.sharding import make_rules, param_shardings
+
+
+def resize(store: CheckpointStore, template, new_mesh, *,
+           mode: str = "train", step: int | None = None):
+    """Restore ``template``-shaped state onto ``new_mesh``. Returns
+    (state, extra, step). The restore cost is O(bytes read), with zero
+    shard re-layout on disk."""
+    store.wait()                          # step 3: merge pending logs
+    rules = make_rules(new_mesh)          # step 4: new mapping
+    shardings = param_shardings(template, rules, mode)
+    with new_mesh:
+        return store.restore(template, step=step, shardings=shardings)
+
+
+def straggler_scales(throughputs: dict[str, float],
+                     slow_factor: float = 0.7) -> dict[str, float]:
+    """Straggler mitigation policy (M-node style): workers whose
+    measured step rate falls below ``slow_factor`` x median get their
+    load share scaled down (the data pipeline serves them smaller
+    shards; ownership of the difference moves to healthy workers)."""
+    if not throughputs:
+        return {}
+    med = sorted(throughputs.values())[len(throughputs) // 2]
+    scales = {}
+    for w, t in throughputs.items():
+        scales[w] = min(1.0, max(t / max(med, 1e-9), 0.25)) \
+            if t < slow_factor * med else 1.0
+    tot = sum(scales.values())
+    return {w: s * len(scales) / tot for w, s in scales.items()}

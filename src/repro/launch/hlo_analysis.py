@@ -1,0 +1,347 @@
+"""Trip-count-aware analysis of post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE
+(verified empirically: a length-8 scan of a matmul reports 1x flops),
+so for scan-over-layers models every per-device number would be ~L x
+too small. This analyzer re-derives the roofline terms from
+``compiled.as_text()``:
+
+  * flops             -- from dot ops (output elems x 2 x contracted dim)
+  * traffic bytes     -- operand + output bytes per top-level op
+                         (fusions are leaves; DS/DUS count slice bytes)
+  * collective bytes  -- per collective kind
+each multiplied through the call graph: while bodies x trip count
+(extracted from the loop condition's comparison constant), conditionals
+x 1 (max branch), fusion/called computations inlined once.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OPNAME_RE = re.compile(r"^((?:\([^)]*\)|\S+)\s+)?([\w\-]+)\(")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(text: str):
+    """All typed array shapes in ``text`` -> list of (dtype, dims)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _parse_shapes(text))
+
+
+def _elems_of(text: str) -> int:
+    return sum(n for _, n in _parse_shapes(text))
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    out_txt: str          # output type text
+    body: str             # full rhs text
+    operands: list[str]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # instr name -> out_txt
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if line.endswith("{") and ("->" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OPNAME_RE.match(rhs)
+        if not om:
+            continue
+        out_txt = om.group(1) or ""
+        op = om.group(2)
+        # operand names: %refs inside the first (...) group after op
+        paren = rhs[om.end() - 1:]
+        depth = 0
+        args_txt = ""
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args_txt += ch
+        operands = re.findall(r"%([\w.\-]+)", args_txt)
+        cur.instrs.append(Instr(name, op, out_txt, rhs, operands))
+        cur.shapes[name] = out_txt
+    return comps
+
+
+def _entry_name(comps: dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    return m.group(1) if m else next(iter(comps))
+
+
+def _trip_count(cond: Computation) -> int:
+    """Heuristic: the largest integer constant in the loop condition."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.body)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "copy-start", "copy-done"}
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_operand_bytes(ins: "Instr", comp: "Computation",
+                          comps) -> int:
+    """Bytes a fusion actually reads. A fusion parameter consumed only
+    by slice ops inside the fused computation reads the slice, not the
+    whole operand (XLA fuses DS with its consumers; billing the full
+    buffer would massively overstate e.g. per-layer reads of a stacked
+    KV pool)."""
+    c = _attr_comp(ins.body, "calls")
+    fused = comps.get(c) if c else None
+    total = 0
+    param_users: dict[int, list[Instr]] = {}
+    param_of: dict[str, int] = {}
+    if fused is not None:
+        for fi in fused.instrs:
+            if fi.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", fi.body)
+                if m:
+                    param_of[fi.name] = int(m.group(1))
+        for fi in fused.instrs:
+            for o in fi.operands:
+                if o in param_of:
+                    param_users.setdefault(param_of[o], []).append(fi)
+    for i, o in enumerate(ins.operands):
+        full = _bytes_of(comp.shapes.get(o, ""))
+        users = param_users.get(i)
+        if users and all(u.op in _SLICE_OPS for u in users):
+            sliced = sum(_bytes_of(u.out_txt) for u in users)
+            total += min(sliced, full)
+        else:
+            total += full
+    return total
+
+
+def _attr_comp(body: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w.\-]+)", body)
+    return m.group(1) if m else None
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collectives.items():
+            rec = self.collectives.setdefault(k, {"count": 0, "bytes": 0.0})
+            rec["count"] += v["count"] * mult
+            rec["bytes"] += v["bytes"] * mult
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = _elems_of(ins.out_txt)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.body)
+    if not m or not ins.operands:
+        return 2.0 * out_elems
+    lhs = comp.shapes.get(ins.operands[0], "")
+    sm = _SHAPE_RE.search(lhs)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    cdim = 1
+    for d in m.group(1).split(","):
+        if d and int(d) < len(dims):
+            cdim *= dims[int(d)]
+    return 2.0 * out_elems * cdim
+
+
+def analyze_computation(comp: Computation, comps, cache) -> Totals:
+    if comp.name in cache:
+        return cache[comp.name]
+    t = Totals()
+    cache[comp.name] = t        # guard (no true recursion in HLO)
+    for ins in comp.instrs:
+        if ins.op in _SKIP_OPS:
+            continue
+        if ins.op == "while":
+            body = _attr_comp(ins.body, "body")
+            cond = _attr_comp(ins.body, "condition")
+            mult = _trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                t.add(analyze_computation(comps[body], comps, cache),
+                      mult)
+            continue
+        if ins.op == "conditional":
+            for key in ("true_computation", "false_computation"):
+                c = _attr_comp(ins.body, key)
+                if c and c in comps:
+                    t.add(analyze_computation(comps[c], comps, cache), 1.0)
+            for c in re.findall(r"branch_computations=\{([^}]*)\}",
+                                ins.body):
+                for name in re.findall(r"%?([\w.\-]+)", c):
+                    if name in comps:
+                        t.add(analyze_computation(comps[name], comps,
+                                                  cache), 1.0)
+            continue
+        if ins.op == "call":
+            c = _attr_comp(ins.body, "to_apply")
+            if c and c in comps:
+                t.add(analyze_computation(comps[c], comps, cache), 1.0)
+            continue
+        # ---- leaf ops ------------------------------------------------
+        out_b = _bytes_of(ins.out_txt)
+        if ins.op == "fusion":
+            c = _attr_comp(ins.body, "calls")
+            if c and c in comps:
+                sub = analyze_computation(comps[c], comps, cache)
+                t.flops += sub.flops      # dots inside fusions count
+            t.bytes += out_b + _fusion_operand_bytes(ins, comp, comps)
+            continue
+        if ins.op == "dot":
+            t.flops += _dot_flops(ins, comp)
+            t.bytes += out_b + sum(_bytes_of(comp.shapes.get(o, ""))
+                                   for o in ins.operands)
+            continue
+        if ins.op in ("dynamic-slice",):
+            t.bytes += 2 * out_b          # read slice + write slice
+            continue
+        if ins.op in ("dynamic-update-slice",):
+            upd = _bytes_of(comp.shapes.get(ins.operands[1], "")) \
+                if len(ins.operands) > 1 else out_b
+            t.bytes += 2 * upd
+            continue
+        kind = next((c for c in COLLECTIVES if ins.op.startswith(c)), None)
+        if kind is not None:
+            if ins.op.endswith("-done"):
+                continue
+            t.bytes += 2 * out_b
+            t.collective_bytes += out_b
+            rec = t.collectives.setdefault(kind, {"count": 0, "bytes": 0.0})
+            rec["count"] += 1
+            rec["bytes"] += out_b
+            continue
+        # generic elementwise / reduce / scatter / gather ...
+        op_b = sum(_bytes_of(comp.shapes.get(o, "")) for o in ins.operands)
+        if ins.op in ("scatter", "gather"):
+            op_b = min(op_b, 2 * out_b)   # sparse access approximation
+        t.bytes += out_b + op_b
+    cache[comp.name] = t
+    return t
+
+
+def analyze_hlo(text: str) -> Totals:
+    comps = parse_hlo(text)
+    entry = _entry_name(comps, text)
+    return analyze_computation(comps[entry], comps, {})
+
+
+# ---------------------------------------------------------------------------
+# diagnostic: where does the traffic go? (per-op-kind, multiplied through
+# the call graph) -- used by the §Perf hypothesis loop
+# ---------------------------------------------------------------------------
+def traffic_breakdown(text: str) -> dict[str, float]:
+    comps = parse_hlo(text)
+    entry = _entry_name(comps, text)
+    out: dict[str, float] = {}
+
+    def visit(comp: Computation, mult: float, seen):
+        if comp.name in seen:
+            return
+        for ins in comp.instrs:
+            if ins.op in _SKIP_OPS:
+                continue
+            if ins.op == "while":
+                body = _attr_comp(ins.body, "body")
+                cond = _attr_comp(ins.body, "condition")
+                m = _trip_count(comps[cond]) if cond in comps else 1
+                if body in comps:
+                    visit(comps[body], mult * m, seen)
+                continue
+            if ins.op in ("conditional", "call"):
+                for key in ("to_apply", "true_computation",
+                            "false_computation"):
+                    c = _attr_comp(ins.body, key)
+                    if c and c in comps:
+                        visit(comps[c], mult, seen)
+                continue
+            out_b = _bytes_of(ins.out_txt)
+            if ins.op == "fusion":
+                b = out_b + _fusion_operand_bytes(ins, comp, comps)
+            elif ins.op in ("dynamic-slice", "dynamic-update-slice"):
+                upd = _bytes_of(comp.shapes.get(ins.operands[1], "")) \
+                    if ins.op == "dynamic-update-slice" \
+                    and len(ins.operands) > 1 else out_b
+                b = 2 * upd
+            else:
+                op_b = sum(_bytes_of(comp.shapes.get(o, ""))
+                           for o in ins.operands)
+                if ins.op in ("scatter", "gather"):
+                    op_b = min(op_b, 2 * out_b)
+                kind0 = next((c for c in COLLECTIVES
+                              if ins.op.startswith(c)), None)
+                if kind0 and ins.op.endswith("-done"):
+                    continue
+                b = (2 * out_b) if kind0 else (out_b + op_b)
+            key = next((c for c in COLLECTIVES if ins.op.startswith(c)),
+                       ins.op)
+            out[key] = out.get(key, 0.0) + b * mult
+        return
+
+    visit(comps[entry], 1.0, set())
+    return dict(sorted(out.items(), key=lambda kv: -kv[1]))

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Functions, not module-level constants: importing this module never
+touches jax device state. Smoke tests see 1 device; only dryrun.py (and
+explicitly-launched multi-device runs) force a 512-way host platform.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for multi-device CPU tests (requires the host platform
+    to have been forced to >= prod(shape) devices before first jax use)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s, ~per link

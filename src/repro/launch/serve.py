@@ -1,0 +1,231 @@
+"""Serving driver: batched decode on the DINOMO paged KV store.
+
+Runs a smoke-size model end to end: every token's KV is appended to the
+shared page pool (log-structured write); decode attention runs *per
+page owner* and merges partials (ownership partitioning); the prefix
+cache shares hot prompt pages (selective replication); and workers can
+be added/removed mid-flight with zero page movement -- logits are
+identical across reconfigurations (asserted in tests).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+      --requests 6 --prompt-len 24 --decode-steps 12 --reconfig-at 6
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_smoke_config
+from ..kernels.decode_attention.ops import merge_partials
+from ..kernels.decode_attention.ref import normalize
+from ..kvcache.paged_store import (PagedKVController, decode_over_owners,
+                                   pool_append, pool_init)
+from ..kvcache.prefix_cache import PrefixCache
+from ..models.layers import mlp, qkv_proj, rmsnorm, unembed
+from ..models.moe import moe_ff
+
+
+class PagedServer:
+    """Functional server over the paged pool: OP + DAC + prefix sharing
+    on a real (smoke-size) transformer."""
+
+    def __init__(self, arch: str, *, page_size: int = 8,
+                 num_pages: int = 4096, workers=("w0", "w1"),
+                 seed: int = 0):
+        self.cfg = get_smoke_config(arch)
+        assert self.cfg.family in ("dense", "moe", "vlm"), \
+            "paged serving targets attention archs"
+        from ..models.model_zoo import build_model
+        self.model = build_model(self.cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.pool = pool_init(self.cfg.num_layers, num_pages, page_size,
+                              self.cfg.num_kv_heads, self.cfg.hd,
+                              jnp.float32)
+        self.ctl = PagedKVController(num_pages, page_size, list(workers))
+        self.prefix = PrefixCache(self.ctl)
+        self.tokens: dict[int, list[int]] = {}
+        self._sid = 0
+        self.stats = {"tokens": 0, "prefix_hits": 0,
+                      "prefix_tokens_reused": 0}
+
+    # ------------------------------------------------------------------
+    def _self_partial(self, q, k_new, v_new):
+        """Flash partial for the just-produced token's own KV.
+        q: (1, H, D); k_new/v_new: (KH, D)."""
+        h = q.shape[1]
+        kh = k_new.shape[0]
+        group = h // kh
+        d = q.shape[2]
+        qr = q.reshape(1, kh, group, d)
+        s = jnp.einsum("bkgd,kd->bkg", qr.astype(jnp.float32),
+                       k_new.astype(jnp.float32)) * (d ** -0.5)
+        m = s.reshape(1, h)
+        l = jnp.ones((1, h), jnp.float32)
+        acc = jnp.broadcast_to(
+            v_new.astype(jnp.float32)[:, None, :],
+            (kh, group, d)).reshape(1, h, d)
+        return acc, m, l
+
+    def _forward_token(self, sid: int, tok: int):
+        """One token through the network against the paged pool.
+        Returns logits (V,). Appends the token's KV afterwards."""
+        cfg = self.cfg
+        seq = self.ctl.sequences[sid]
+        old_len = seq.length
+        pid, off = self.ctl.append_slot(sid)
+        tables = self.ctl.page_tables([sid]) if old_len else {}
+        x = jnp.take(self.params["embed"],
+                     jnp.asarray([[tok]], jnp.int32), axis=0)
+        new_k, new_v = [], []
+        h = x
+        for li in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[li], self.params["layers"])
+            xin = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            q, k, v = qkv_proj(lp["attn"], xin, cfg,
+                               jnp.full((1, 1), old_len, jnp.int32))
+            k0, v0 = k[0, 0], v[0, 0]
+            new_k.append(k0)
+            new_v.append(v0)
+            parts = [self._self_partial(q[:, 0], k0, v0)]
+            if old_len:
+                for w, (pt, ppos) in tables.items():
+                    if (pt >= 0).sum() == 0:
+                        continue
+                    from ..kernels.decode_attention.ops import \
+                        paged_decode_partial
+                    parts.append(paged_decode_partial(
+                        q[:, 0], self.pool.k[li], self.pool.v[li],
+                        jnp.asarray(pt), jnp.asarray(ppos),
+                        jnp.asarray([old_len]), use_kernel=False))
+            acc, m, l = merge_partials(parts)
+            att = normalize(acc, m, l).astype(x.dtype)       # (1, H, D)
+            h = h + att.reshape(1, 1, -1) @ lp["attn"]["wo"]
+            hin = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            if cfg.family == "moe":
+                y, _ = moe_ff(lp["moe"], hin, cfg)
+            else:
+                y = mlp(lp["mlp"], hin, cfg)
+            h = h + y
+        self.pool = pool_append(self.pool, pid, off,
+                                jnp.stack(new_k), jnp.stack(new_v))
+        self.tokens[sid].append(tok)
+        self.stats["tokens"] += 1
+        h = rmsnorm(self.params["ln_f"], h, cfg.norm_eps)
+        return unembed(self.params, h, cfg)[0, 0]
+
+    # ------------------------------------------------------------------
+    def admit(self, prompt: list[int]) -> int:
+        """Prefill a request; shared prefixes reuse pooled pages."""
+        sid = self._sid
+        self._sid += 1
+        self.ctl.new_sequence(sid)
+        self.tokens[sid] = []
+        pages, covered = self.prefix.lookup(prompt)
+        if covered:
+            self.prefix.attach(sid, pages, covered)
+            self.tokens[sid] = list(prompt[:covered])
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_tokens_reused"] += covered
+        logits = None
+        for tok in prompt[covered:]:
+            logits = self._forward_token(sid, tok)
+        self.prefix.seal_prefix(sid, prompt)
+        return sid, logits
+
+    def decode(self, sid: int, steps: int, greedy: bool = True):
+        out = []
+        last = self.tokens[sid][-1]
+        for _ in range(steps):
+            logits = self._forward_token(sid, last)
+            last = int(jnp.argmax(logits)) if greedy \
+                else int(jax.random.categorical(jax.random.PRNGKey(0),
+                                                logits))
+            out.append(last)
+        return out
+
+    def logits_for_next(self, sid: int) -> jnp.ndarray:
+        """Pure read: next-token logits without appending (used to
+        assert reconfiguration invariance)."""
+        # replay the last token through a copy of state? cheaper: rerun
+        # forward for a probe token against current pages only.
+        cfg = self.cfg
+        seq = self.ctl.sequences[sid]
+        tables = self.ctl.page_tables([sid])
+        x = jnp.take(self.params["embed"],
+                     jnp.asarray([[self.tokens[sid][-1]]], jnp.int32),
+                     axis=0)
+        h = x
+        for li in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[li], self.params["layers"])
+            xin = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+            q, _, _ = qkv_proj(lp["attn"], xin, cfg,
+                               jnp.full((1, 1), seq.length, jnp.int32))
+            att = decode_over_owners(q[:, 0], self.pool, li, tables,
+                                     [seq.length])
+            h = h + att.reshape(1, 1, -1) @ lp["attn"]["wo"]
+            hin = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            y = moe_ff(lp["moe"], hin, cfg)[0] if cfg.family == "moe" \
+                else mlp(lp["mlp"], hin, cfg)
+            h = h + y
+        h = rmsnorm(self.params["ln_f"], h, cfg.norm_eps)
+        return unembed(self.params, h, cfg)[0, 0]
+
+    # ------------------------------------------------------------------
+    def reconfigure(self, add: str | None = None,
+                    remove: str | None = None):
+        """Elastic worker change: ring remap only, zero page movement."""
+        if add:
+            self.ctl.add_worker(add)
+        if remove:
+            self.ctl.remove_worker(remove)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--decode-steps", type=int, default=12)
+    ap.add_argument("--reconfig-at", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    srv = PagedServer(args.arch)
+    rng = np.random.default_rng(0)
+    shared = [int(t) for t in rng.integers(0, srv.cfg.vocab_size, 16)]
+    t0 = time.time()
+    sids = []
+    for r in range(args.requests):
+        prompt = shared + [int(t) for t in rng.integers(
+            0, srv.cfg.vocab_size, args.prompt_len - 16)]
+        sid, _ = srv.admit(prompt)
+        sids.append(sid)
+        if args.reconfig_at is not None and r == args.reconfig_at:
+            before = srv.logits_for_next(sids[0])
+            srv.reconfigure(add=f"w{2 + r}")
+            after = srv.logits_for_next(sids[0])
+            np.testing.assert_allclose(np.asarray(before),
+                                       np.asarray(after), atol=1e-4,
+                                       rtol=1e-4)
+            print(f"[serve] reconfig at request {r}: logits unchanged, "
+                  f"0 pages moved (workers={srv.ctl.workers})")
+    for sid in sids:
+        srv.decode(sid, args.decode_steps)
+    dt = time.time() - t0
+    st = srv.stats
+    print(f"[serve] {st['tokens']} tokens in {dt:.1f}s "
+          f"({st['tokens'] / dt:.1f} tok/s host-side), "
+          f"prefix hits {st['prefix_hits']} "
+          f"(reused {st['prefix_tokens_reused']} tokens), "
+          f"local-copy ratio " + ", ".join(
+              f"{w}:{srv.ctl.local_copy_ratio(w):.2f}"
+              for w in srv.ctl.workers))
+
+
+if __name__ == "__main__":
+    main()

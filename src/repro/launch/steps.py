@@ -1,0 +1,219 @@
+"""Step builders: (arch config x shape config x mesh) -> jit-able step
+function + ShapeDtypeStruct input specs + in/out shardings.
+
+This is the single source of truth used by the dry-run, the trainer,
+the server, and the benchmarks, so what we roofline is what we run.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.act_sharding import activation_sharding
+from ..distributed.sharding import (MeshRules, batch_shardings,
+                                    cache_shardings, make_rules,
+                                    param_shardings, replicated)
+from ..models.model_zoo import Model, build_model
+from ..optim.adamw import AdamWConfig, apply_updates, init_state
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable                 # the function to jit/lower
+    in_specs: tuple              # ShapeDtypeStructs (positional)
+    in_shardings: tuple
+    out_shardings: Any           # pytree or None
+    donate: tuple = ()
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def param_structs(model: Model):
+    return _sds(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.encoder_layers:
+            out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                 jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.encoder_layers:
+            out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                 jnp.float32)
+        return out
+    # decode: one new token against a seq_len KV cache
+    return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                     rules: MeshRules,
+                     opt: AdamWConfig | None = None) -> StepBundle:
+    cfg = cfg.replace(remat="full" if cfg.remat == "none" else cfg.remat,
+                      loss_chunk=cfg.loss_chunk or 512)
+    model = build_model(cfg)
+    opt = opt or AdamWConfig()
+    mesh = rules.mesh
+
+    def train_step(params, opt_state, batch):
+        with activation_sharding(mesh, rules.data_axes, rules.model_axis):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = apply_updates(params, grads,
+                                                       opt_state, opt)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    p_sds = param_structs(model)
+    o_sds = _sds(jax.eval_shape(init_state, p_sds))
+    b_sds = input_specs(cfg, shape)
+    p_sh = param_shardings(p_sds, rules, "train")
+    o_sh = {"mu": param_shardings(o_sds["mu"], rules, "train"),
+            "nu": param_shardings(o_sds["nu"], rules, "train"),
+            "step": replicated(rules)}
+    b_sh = batch_shardings(b_sds, rules)
+    m_sds = jax.eval_shape(train_step, p_sds, o_sds, b_sds)[2]
+    m_sh = jax.tree.map(lambda _: replicated(rules), m_sds)
+    return StepBundle(
+        name="train_step", fn=train_step,
+        in_specs=(p_sds, o_sds, b_sds),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, m_sh),
+        donate=(0, 1),
+    )
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                       rules: MeshRules) -> StepBundle:
+    model = build_model(cfg)
+    mesh = rules.mesh
+
+    if cfg.family in ("ssm", "hybrid") or cfg.encoder_layers:
+        # hidden() + last-token unembed: the (B, S, V) logits tensor
+        # never materializes at 32 k sequence length.
+        from ..models import encdec, ssm_lm, zamba2
+        from ..models.layers import unembed
+
+        def prefill_step(params, batch):
+            with activation_sharding(mesh, rules.data_axes,
+                                     rules.model_axis):
+                if cfg.encoder_layers:
+                    x = encdec.hidden(params, batch["frames"],
+                                      batch["tokens"], cfg)
+                elif cfg.family == "ssm":
+                    x = ssm_lm.hidden(params, batch["tokens"], cfg)
+                else:
+                    x = zamba2.hidden(params, batch["tokens"], cfg)
+                c = cfg.replace(tie_embeddings=True) \
+                    if cfg.family == "ssm" else cfg
+                return unembed(params, x[:, -1:], c)[:, 0]
+    else:
+        def prefill_step(params, batch):
+            with activation_sharding(mesh, rules.data_axes,
+                                     rules.model_axis):
+                logits, cache = model.prefill(params, batch["tokens"])
+            return logits[:, -1], cache
+
+    p_sds = param_structs(model)
+    b_sds = input_specs(cfg, shape)
+    p_sh = param_shardings(p_sds, rules, "serve")
+    b_sh = batch_shardings(b_sds, rules)
+    out_sds = jax.eval_shape(prefill_step, p_sds, b_sds)
+    if isinstance(out_sds, tuple):
+        out_sh = (batch_shardings(out_sds[0], rules),
+                  cache_shardings(out_sds[1], rules))
+    else:
+        out_sh = batch_shardings(out_sds, rules)
+    return StepBundle(
+        name="prefill_step", fn=prefill_step,
+        in_specs=(p_sds, b_sds), in_shardings=(p_sh, b_sh),
+        out_shardings=out_sh,
+    )
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig,
+                      rules: MeshRules,
+                      optimized: bool | str = False) -> StepBundle:
+    """``optimized`` (§Perf): transformer families switch decode
+    implementations -- "v2" = fori-loop carried cache; True/"v3" =
+    DINOMO-structured pool-invariant decode (cache read-only in the
+    layer loop, one log-structured append per step). Both numerically
+    identical to the baseline (tested)."""
+    model = build_model(cfg)
+    mesh = rules.mesh
+    b = shape.global_batch
+    use_v2 = bool(optimized) and cfg.family in ("dense", "moe", "vlm")
+    which = "v2" if optimized == "v2" else "v3"
+
+    if use_v2:
+        from ..models import transformer as _T
+        step_impl = _T.decode_step_v2 if which == "v2" \
+            else _T.decode_step_v3
+
+        def serve_step(params, cache, token, pos):
+            with activation_sharding(mesh, rules.data_axes,
+                                     rules.model_axis):
+                return step_impl(params, cache, token, pos, cfg)
+    else:
+        def serve_step(params, cache, token, pos):
+            with activation_sharding(mesh, rules.data_axes,
+                                     rules.model_axis):
+                logits, cache = model.decode_step(params, cache, token,
+                                                  pos)
+            return logits, cache
+
+    p_sds = param_structs(model)
+    if use_v2:
+        from ..models import transformer as _T
+        c_sds = _sds(jax.eval_shape(
+            functools.partial(_T.init_cache_v2, cfg, b, shape.seq_len)))
+    elif cfg.encoder_layers:
+        c_sds = _sds(jax.eval_shape(
+            functools.partial(model.init_cache, b, shape.seq_len,
+                              enc_len=4096)))
+    else:
+        c_sds = _sds(jax.eval_shape(
+            functools.partial(model.init_cache, b, shape.seq_len)))
+    t_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    p_sh = param_shardings(p_sds, rules, "serve")
+    c_sh = cache_shardings(c_sds, rules)
+    t_sh = batch_shardings(t_sds, rules)
+    out_sds = jax.eval_shape(serve_step, p_sds, c_sds, t_sds, pos_sds)
+    out_sh = (batch_shardings(out_sds[0], rules), c_sh)
+    return StepBundle(
+        name="serve_step", fn=serve_step,
+        in_specs=(p_sds, c_sds, t_sds, pos_sds),
+        in_shardings=(p_sh, c_sh, t_sh, replicated(rules)),
+        out_shardings=out_sh,
+        donate=(1,),
+    )
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig,
+               rules: MeshRules) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, rules)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, rules)
+    return build_decode_step(cfg, shape, rules)

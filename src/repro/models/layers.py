@@ -1,0 +1,220 @@
+"""Shared model layers: norms, rotary embeddings, attention, MLPs.
+
+Pure-functional: params are nested dicts of jax.Arrays; every layer is
+``f(params, x, ...) -> y``. Parameters default to bf16; norms, softmax
+and rotary math run in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import attention as flash_attention_op
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=PARAM_DTYPE):
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=PARAM_DTYPE):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(w, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (...,S,1,D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    h, kh, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.hd, cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], d, h * hd),
+        "wk": dense_init(ks[1], d, kh * hd),
+        "wv": dense_init(ks[2], d, kh * hd),
+        "wo": dense_init(ks[3], h * hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), PARAM_DTYPE)
+        p["bk"] = jnp.zeros((kh * hd,), PARAM_DTYPE)
+        p["bv"] = jnp.zeros((kh * hd,), PARAM_DTYPE)
+    return p
+
+
+def qkv_proj(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, x, cfg, positions, causal: bool = True):
+    """Full-sequence attention (train / prefill)."""
+    q, k, v = qkv_proj(p, x, cfg, positions)
+    out = flash_attention_op(q, k, v, causal=causal)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def cross_attention_block(p, x, mem_k, mem_v, cfg):
+    """Decoder cross-attention over precomputed encoder K/V."""
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    out = flash_attention_op(q, mem_k, mem_v, causal=False)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def decode_attention_dense(q, k_cache, v_cache, length):
+    """One-token decode against a dense KV cache.
+    q: (B, H, D); caches: (B, Smax, KH, D); length: () or (B,).
+
+    Einsums run straight over the cache layout in its storage dtype
+    (f32 accumulation via preferred_element_type) -- no transposed or
+    upcast copy of the multi-GB cache is ever materialized."""
+    b, h, d = q.shape
+    kh = k_cache.shape[2]
+    group = h // kh
+    qr = q.astype(k_cache.dtype).reshape(b, kh, group, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
+    pos = jnp.arange(k_cache.shape[1])
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def attention_decode(p, x, cfg, cache_k, cache_v, pos):
+    """x: (B, 1, d). Updates the cache at ``pos``; returns (y, k, v)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = qkv_proj(p, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    out = decode_attention_dense(q[:, 0], cache_k, cache_v, pos + 1)
+    y = out.reshape(b, 1, -1) @ p["wo"]
+    return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg, d_ff: int | None = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {"wi": dense_init(ks[0], d, ff),
+                "wg": dense_init(ks[1], d, ff),
+                "wo": dense_init(ks[2], ff, d)}
+    return {"wi": dense_init(ks[0], d, ff),
+            "wo": dense_init(ks[2], ff, d)}
+
+
+def mlp(p, x, cfg):
+    if cfg.mlp == "swiglu":
+        hidden = jax.nn.silu((x @ p["wg"]).astype(jnp.float32)) \
+            * (x @ p["wi"]).astype(jnp.float32)
+    elif cfg.mlp == "squared_relu":
+        hidden = jnp.square(jax.nn.relu((x @ p["wi"]).astype(jnp.float32)))
+    else:
+        hidden = jax.nn.gelu((x @ p["wi"]).astype(jnp.float32))
+    return hidden.astype(x.dtype) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head / loss
+# ---------------------------------------------------------------------------
+def embed_init(key, cfg):
+    emb = (jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                             jnp.float32) * 0.02).astype(PARAM_DTYPE)
+    return emb
+
+
+def unembed(params, x, cfg):
+    table = params["embed"] if cfg.tie_embeddings else params["head"]
+    return (x @ table.T if cfg.tie_embeddings
+            else x @ table).astype(jnp.float32)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits: (B, S, V) f32; labels: (B, S) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def chunked_cross_entropy(params, x, labels, cfg, chunk: int):
+    """CE over seq chunks so the (B, S, V) logits tensor never
+    materializes -- essential for 256 k vocabularies at 4 k seq."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        return cross_entropy(unembed(params, x, cfg), labels)
+    nc = s // chunk
+    xs = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        xc, lc = inp
+        logits = unembed(params, xc, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, lc[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return acc + nll.sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xs, ls))
+    return total / (b * s)

@@ -1,0 +1,115 @@
+"""Mamba2 block (SSD, arXiv:2405.21060) -- pure JAX + the ssd kernel.
+
+Block: in_proj -> [z | x | B | C | dt]; causal depthwise conv over
+(x|B|C); SSD scan; gated RMSNorm; out_proj. Decode keeps a (conv, ssm)
+recurrent state per layer -- constant memory per token, which is why
+mamba2/zamba2 are the archs that run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssd_scan.ops import ssd
+from ..kernels.ssd_scan.ref import ssd_decode_step
+from .layers import PARAM_DTYPE, dense_init, rmsnorm, rmsnorm_init
+
+
+def mamba_init(key, cfg):
+    d = cfg.d_model
+    din = cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * g * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * din + 2 * g * n + h),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(PARAM_DTYPE),
+        "conv_b": jnp.zeros((conv_dim,), PARAM_DTYPE),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_w": rmsnorm_init(din),
+        "out_proj": dense_init(ks[4], din, d),
+    }
+
+
+def _split(cfg, zxbcdt):
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * g * n]
+    dt = zxbcdt[..., 2 * din + 2 * g * n:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, kernel size K: xbc (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def mamba_block(p, x, cfg, chunk: int = 64):
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_headdim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"],
+                                   p["conv_b"]).astype(jnp.float32)
+                      ).astype(x.dtype)
+    xs = xbc[..., :din].reshape(b, s, h, ph)
+    bmat = xbc[..., din:din + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., din + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y = ssd(xs, dt, a, bmat, cmat, p["d_skip"], chunk=chunk)
+    y = y.reshape(b, s, din) * jax.nn.silu(z.astype(jnp.float32)) \
+        .astype(x.dtype)
+    y = rmsnorm(p["norm_w"], y, cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode path: recurrent state (conv window + SSD state)
+# ---------------------------------------------------------------------------
+def mamba_state_init(cfg, batch: int, dtype=jnp.float32):
+    g, n, h, ph = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_headdim
+    conv_dim = cfg.d_inner + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, n, ph), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cfg, state):
+    """x: (B, 1, d). Returns (y (B,1,d), new_state)."""
+    b = x.shape[0]
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_headdim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split(cfg, zxbcdt)
+    window = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, K, C)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) \
+        + p["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv).astype(x.dtype)                # (B, C)
+    xs = xbc1[..., :din].reshape(b, h, ph)
+    bmat = xbc1[..., din:din + g * n].reshape(b, g, n)
+    cmat = xbc1[..., din + g * n:].reshape(b, g, n)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, ssm = ssd_decode_step(state["ssm"], xs.astype(jnp.float32), dtv, a,
+                             bmat.astype(jnp.float32),
+                             cmat.astype(jnp.float32), p["d_skip"])
+    y = y.reshape(b, 1, din).astype(x.dtype) \
+        * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(p["norm_w"], y, cfg.norm_eps)
+    new_state = {"conv": window[:, 1:], "ssm": ssm}
+    return y @ p["out_proj"], new_state

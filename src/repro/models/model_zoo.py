@@ -1,0 +1,89 @@
+"""Uniform model interface over all assigned architecture families."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import encdec, ssm_lm, transformer, zamba2
+from .layers import cross_entropy
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]                 # (key) -> params
+    loss: Callable[..., Any]                 # (params, batch) -> (l, m)
+    forward: Callable[..., Any]              # (params, batch) -> logits
+    init_cache: Callable[..., Any] | None    # (batch, max_len) -> cache
+    decode_step: Callable[..., Any] | None   # (params,cache,tok,pos)->...
+    prefill: Callable[..., Any] | None = None
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(key, cfg),
+            loss=lambda p, b: transformer.loss_fn(p, b, cfg),
+            forward=lambda p, b: transformer.forward(p, b["tokens"],
+                                                     cfg)[0],
+            init_cache=lambda batch, max_len: transformer.init_cache(
+                cfg, batch, max_len),
+            decode_step=lambda p, c, t, pos: transformer.decode_step(
+                p, c, t, pos, cfg),
+            prefill=lambda p, tokens: transformer.prefill(p, tokens, cfg),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ssm_lm.init_params(key, cfg),
+            loss=lambda p, b: ssm_lm.loss_fn(p, b, cfg),
+            forward=lambda p, b: ssm_lm.forward(p, b["tokens"], cfg)[0],
+            init_cache=lambda batch, max_len: ssm_lm.init_cache(
+                cfg, batch, max_len),
+            decode_step=lambda p, c, t, pos: ssm_lm.decode_step(
+                p, c, t, pos, cfg),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: zamba2.init_params(key, cfg),
+            loss=lambda p, b: zamba2.loss_fn(p, b, cfg),
+            forward=lambda p, b: zamba2.forward(p, b["tokens"], cfg)[0],
+            init_cache=lambda batch, max_len: zamba2.init_cache(
+                cfg, batch, max_len),
+            decode_step=lambda p, c, t, pos: zamba2.decode_step(
+                p, c, t, pos, cfg),
+        )
+    if cfg.family in ("encdec", "audio"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            loss=lambda p, b: encdec.loss_fn(p, b, cfg),
+            forward=lambda p, b: encdec.forward(p, b["frames"],
+                                                b["tokens"], cfg)[0],
+            init_cache=lambda batch, max_len, enc_len=1024:
+                encdec.init_cache(cfg, batch, max_len, enc_len),
+            decode_step=lambda p, c, t, pos: encdec.decode_step(
+                p, c, t, pos, cfg),
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
+    """A concrete random batch (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size,
+                                jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    out = {"tokens": tokens, "labels": labels}
+    if cfg.encoder_layers:
+        out["frames"] = jax.random.normal(k2, (batch, seq, cfg.d_model),
+                                          jnp.float32) * 0.02
+    return out

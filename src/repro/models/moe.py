@@ -1,0 +1,215 @@
+"""Mixture-of-Experts feed-forward (OLMoE / Granite-MoE style).
+
+Top-k routing with capacity buckets and gather/scatter dispatch (no
+(T,E,C) one-hot einsums -- dispatch cost stays O(T*k), so compiled
+FLOPs reflect *active* expert compute, which is what the MoE roofline
+term must count). Experts are stacked on a leading axis, the natural
+EP sharding axis ('model') for the dry-run mesh.
+
+DINOMO tie-in: expert popularity is exactly the paper's hot-key
+problem; serving integrates embedding.hot_rows-style selective
+replication of overloaded experts (see kvcache/serve integration).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import PARAM_DTYPE, dense_init
+
+
+def moe_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    scale = (2.0 / (d + ff)) ** 0.5
+
+    def experts(k):
+        return (jax.random.normal(k, (e, d, ff), jnp.float32)
+                * scale).astype(PARAM_DTYPE)
+
+    return {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "wi": experts(ks[1]),
+        "wg": experts(ks[2]),
+        "wo": (jax.random.normal(ks[3], (e, ff, d), jnp.float32)
+               * scale).astype(PARAM_DTYPE),
+    }
+
+
+def moe_ff(p, x, cfg, capacity_factor: float | None = None):
+    """x: (B, S, d) -> (B, S, d), plus aux losses dict.
+
+    Dispatches to the shard_map EP path when a mesh policy is installed
+    and shapes divide (production path: local dispatch + all-to-all);
+    otherwise the single-device reference path below."""
+    from ..distributed.act_sharding import _policy
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    pol = _policy.get()
+    if pol is not None:
+        mesh, data_axes, model_axis = pol
+        m = mesh.shape[model_axis]
+        dsz = 1
+        use_axes = []
+        for a in data_axes:
+            sz = mesh.shape[a]
+            if (x.shape[0] // dsz) % sz == 0:
+                use_axes.append(a)
+                dsz *= sz
+        if (m > 1 and cfg.num_experts % m == 0
+                and (x.shape[1] % m == 0 or x.shape[1] == 1)
+                and x.shape[0] % dsz == 0):
+            return moe_ff_sharded(p, x, cfg, mesh, tuple(use_axes),
+                                  model_axis, capacity_factor)
+    return _moe_ff_ref(p, x, cfg, capacity_factor)
+
+
+def _moe_ff_ref(p, x, cfg, capacity_factor: float = 1.25):
+    """Reference (single-partition) MoE path."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                       # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(int(t * k / e * capacity_factor), 1)
+    # position of each (token, choice) within its expert bucket, via a
+    # sort (O(Tk log Tk) and no (Tk, E) one-hot/cumsum buffers)
+    flat_idx = idx.reshape(-1)                                # (T*k,)
+    counts = jnp.bincount(flat_idx, length=e)                 # (E,)
+    starts = jnp.cumsum(counts) - counts
+    order = jnp.argsort(flat_idx, stable=True)
+    rank_sorted = jnp.arange(t * k) - starts[flat_idx[order]]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    keep = pos < capacity
+
+    # gather tokens into (E, C, d) buckets with a 2D batched scatter
+    from ..distributed.act_sharding import constrain, constrain_experts
+    token_of = jnp.repeat(jnp.arange(t), k)
+    vals = constrain(xf[token_of])                            # (T*k, d)
+    buckets = jnp.zeros((e, capacity, d), xf.dtype)
+    safe_e = jnp.where(keep, flat_idx, e)                     # OOB -> drop
+    buckets = buckets.at[safe_e, jnp.minimum(pos, capacity - 1)].set(
+        vals, mode="drop")
+    buckets = constrain_experts(buckets)
+
+    # expert computation (swiglu), batched over experts
+    hid = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buckets,
+                                 p["wg"]).astype(jnp.float32)) \
+        * jnp.einsum("ecd,edf->ecf", buckets, p["wi"]).astype(jnp.float32)
+    out_b = constrain_experts(
+        jnp.einsum("ecf,efd->ecd", hid.astype(xf.dtype), p["wo"]))
+
+    # gather back with gate weights
+    contrib = out_b[jnp.minimum(flat_idx, e - 1),
+                    jnp.minimum(pos, capacity - 1)] \
+        * (gate.reshape(-1) * keep)[:, None].astype(xf.dtype)
+    y = jnp.zeros((t, d), xf.dtype).at[token_of].add(constrain(contrib))
+
+    # load-balance aux loss (switch-style) + expert load stats
+    me = probs.mean(axis=0)                                   # (T,E)->(E,)
+    ce = counts.astype(jnp.float32) / (t * k)
+    aux = {"load_balance": e * jnp.sum(me * ce),
+           "expert_load": ce,
+           "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)}
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# production EP path: shard_map local dispatch + all-to-all (the MoE
+# communication pattern real systems use; collective volumes become
+# explicit in the lowered HLO, which is what the roofline reads).
+# ---------------------------------------------------------------------------
+def _local_dispatch(xl, router, k, e, capacity):
+    """xl: (t, d) local tokens. Returns (buckets (E,C,d), flat_idx, pos,
+    keep, gate, probs) -- all local arrays, so the scatter compiles to a
+    plain local scatter (no SPMD partitioning pathologies)."""
+    t, d = xl.shape
+    logits = xl.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    flat_idx = idx.reshape(-1)
+    counts = jnp.bincount(flat_idx, length=e)
+    starts = jnp.cumsum(counts) - counts
+    order = jnp.argsort(flat_idx, stable=True)
+    rank_sorted = jnp.arange(t * k) - starts[flat_idx[order]]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    keep = pos < capacity
+    token_of = jnp.repeat(jnp.arange(t), k)
+    buckets = jnp.zeros((e, capacity, d), xl.dtype)
+    buckets = buckets.at[jnp.where(keep, flat_idx, e),
+                         jnp.minimum(pos, capacity - 1)].set(
+        xl[token_of], mode="drop")
+    return buckets, flat_idx, pos, keep, gate, probs, counts, token_of
+
+
+def moe_ff_sharded(p, x, cfg, mesh, data_axes, model_axis,
+                   capacity_factor: float = 1.25):
+    """x: (B, S, d). Tokens sharded (batch over data, seq over model);
+    experts sharded over model. Two all-to-alls per layer, like any
+    production EP system."""
+    from jax.sharding import PartitionSpec as P
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    msz = mesh.shape[model_axis]
+    dsz = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes \
+        else 1
+    seq_shard = msz if s % msz == 0 and s > 1 else 1
+    t_loc = (b // dsz) * (s // seq_shard)
+    capacity = max(int(t_loc * k / e * capacity_factor), 1)
+
+    x_spec = P(tuple(data_axes) if data_axes else None,
+               model_axis if seq_shard > 1 else None, None)
+    e_spec = P(model_axis, None, None)
+
+    def body(xb, router, wi, wg, wo):
+        bl, sl, _ = xb.shape
+        xl = xb.reshape(bl * sl, d)
+        buckets, flat_idx, pos, keep, gate, probs, counts, token_of = \
+            _local_dispatch(xl, router, k, e, capacity)
+        # send each expert's bucket to its owner: (E,C,d) -> (E/M, M*C, d)
+        recv = jax.lax.all_to_all(buckets, model_axis, split_axis=0,
+                                  concat_axis=1, tiled=True)
+        hid = jax.nn.silu(jnp.einsum(
+            "ecd,edf->ecf", recv, wg,
+            preferred_element_type=jnp.float32)) \
+            * jnp.einsum("ecd,edf->ecf", recv, wi,
+                         preferred_element_type=jnp.float32)
+        out_e = jnp.einsum("ecf,efd->ecd", hid.astype(xb.dtype), wo)
+        # return results to token owners: (E/M, M*C, d) -> (E, C, d)
+        back = jax.lax.all_to_all(out_e, model_axis, split_axis=1,
+                                  concat_axis=0, tiled=True)
+        contrib = back[jnp.minimum(flat_idx, e - 1),
+                       jnp.minimum(pos, capacity - 1)] \
+            * (gate.reshape(-1) * keep)[:, None].astype(xb.dtype)
+        y = jnp.zeros((bl * sl, d), xb.dtype).at[token_of].add(contrib)
+        # aux stats: local, averaged over the mesh
+        me = probs.mean(axis=0)
+        ce = counts.astype(jnp.float32) / (bl * sl * k)
+        lb = e * jnp.sum(me * ce)
+        rz = jnp.mean(jax.nn.logsumexp(
+            xl.astype(jnp.float32) @ router, axis=-1) ** 2)
+        axes = tuple(data_axes) + ((model_axis,) if seq_shard > 1 else ())
+        if axes:
+            lb = jax.lax.pmean(lb, axes)
+            rz = jax.lax.pmean(rz, axes)
+            ce = jax.lax.pmean(ce, axes)
+        return y.reshape(bl, sl, d), lb, rz, ce
+
+    y, lb, rz, ce = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, P(None, None), e_spec, e_spec, e_spec),
+        out_specs=(x_spec, P(), P(), P()),
+        check_vma=False,
+    )(x, p["router"], p["wi"], p["wg"], p["wo"])
+    aux = {"load_balance": lb, "expert_load": ce, "router_z": rz}
+    return y, aux

@@ -1,0 +1,98 @@
+"""Pure-SSM LM (mamba2-2.7b): attention-free stack of Mamba2 blocks.
+
+Decode carries O(1) recurrent state per layer -- long_500k runs here
+(and nowhere near a KV cache). DINOMO note (DESIGN.md
+§Arch-applicability): with no KV pages to own, the paper's OP/DAC apply
+to this arch through the elastic state-checkpoint store, not serving.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (PARAM_DTYPE, cross_entropy, embed_init, rmsnorm,
+                     rmsnorm_init, unembed)
+from .mamba2 import mamba_block, mamba_decode, mamba_init, mamba_state_init
+
+
+def init_params(key, cfg):
+    kl, ke = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: {"ln": rmsnorm_init(cfg.d_model),
+                                 "mamba": mamba_init(k, cfg)})(layer_keys)
+    return {"layers": layers, "embed": embed_init(ke, cfg),
+            "ln_f": rmsnorm_init(cfg.d_model)}
+
+
+def hidden(params, tokens, cfg):
+    from ..distributed.act_sharding import constrain
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x)
+
+    def body(x, lp):
+        y = mamba_block(lp["mamba"], rmsnorm(lp["ln"], x, cfg.norm_eps),
+                        cfg)
+        return constrain(x + y), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg):
+    x = hidden(params, tokens, cfg)
+    cfg_tied = cfg.replace(tie_embeddings=True)   # mamba2 ties embeddings
+    return unembed(params, x, cfg_tied), {}
+
+
+def loss_fn(params, batch, cfg):
+    from .layers import chunked_cross_entropy
+    x = hidden(params, batch["tokens"], cfg)
+    cfg_tied = cfg.replace(tie_embeddings=True)
+    if cfg.loss_chunk:
+        loss = chunked_cross_entropy(params, x, batch["labels"], cfg_tied,
+                                     cfg.loss_chunk)
+    else:
+        logits = unembed(params, x, cfg_tied)
+        loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+def init_cache(cfg, batch: int, max_len: int = 0, dtype=PARAM_DTYPE):
+    """Recurrent state only; max_len is irrelevant (O(1) memory)."""
+    states = jax.vmap(lambda _: mamba_state_init(cfg, batch))(
+        jnp.arange(cfg.num_layers))
+    return {"mamba": states}
+
+
+def decode_step(params, cache, token, pos, cfg):
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+
+    def body(x, inp):
+        lp, st = inp
+        y, st2 = mamba_decode(lp["mamba"],
+                              rmsnorm(lp["ln"], x, cfg.norm_eps), cfg, st)
+        return x + y, st2
+
+    x, states = jax.lax.scan(body, x, (params["layers"], cache["mamba"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    cfg_tied = cfg.replace(tie_embeddings=True)
+    logits = unembed(params, x, cfg_tied)[:, 0]
+    return logits, {"mamba": states}
+
+
+def decode_multi(params, cache, tokens, pos, cfg):
+    """§Perf: decode T tokens in ONE dispatch (tokens (B, T) already
+    known, e.g. from speculation or batch pipelining). Weight reads --
+    which dominate per-token decode traffic at batch 1 -- are hoisted
+    out of the token loop by XLA, amortizing them T-fold.
+    Returns (logits (B, T, V), cache)."""
+    def tok_body(st, tok):
+        logits, st2 = decode_step(params, st, tok, pos, cfg)
+        return st2, logits
+
+    cache, logits = jax.lax.scan(tok_body, cache,
+                                 tokens.transpose(1, 0))
+    return logits.transpose(1, 0, 2), cache

@@ -1,0 +1,159 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* attention
+block (one set of weights, re-applied every ``attn_every`` mamba
+layers) -- arXiv:2411.15242. The mamba stack is scanned in groups so
+the HLO stays depth-independent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (PARAM_DTYPE, attention_block, attention_decode,
+                     attn_init, embed_init, mlp, mlp_init, rmsnorm,
+                     rmsnorm_init, unembed)
+from .mamba2 import (mamba_block, mamba_decode, mamba_init,
+                     mamba_state_init)
+
+
+def _group_shape(cfg):
+    every = cfg.attn_every or cfg.num_layers
+    groups = cfg.num_layers // every
+    tail = cfg.num_layers - groups * every
+    return every, groups, tail
+
+
+def init_params(key, cfg):
+    km, ks, ke, kh = jax.random.split(key, 4)
+    layer_keys = jax.random.split(km, cfg.num_layers)
+    layers = jax.vmap(lambda k: {
+        "ln": rmsnorm_init(cfg.d_model),
+        "mamba": mamba_init(k, cfg)})(layer_keys)
+    k1, k2 = jax.random.split(ks)
+    shared = {"ln1": rmsnorm_init(cfg.d_model), "attn": attn_init(k1, cfg),
+              "ln2": rmsnorm_init(cfg.d_model), "mlp": mlp_init(k2, cfg)}
+    params = {"layers": layers, "shared": shared,
+              "embed": embed_init(ke, cfg),
+              "ln_f": rmsnorm_init(cfg.d_model),
+              "head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size),
+                                         jnp.float32) * 0.02
+                       ).astype(PARAM_DTYPE)}
+    return params
+
+
+def _mamba_layer(lp, x, cfg):
+    return x + mamba_block(lp["mamba"], rmsnorm(lp["ln"], x, cfg.norm_eps),
+                           cfg)
+
+
+def _shared_attn(sp, x, cfg, positions):
+    h = x + attention_block(sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                            cfg, positions)
+    return h + mlp(sp["mlp"], rmsnorm(sp["ln2"], h, cfg.norm_eps), cfg)
+
+
+def hidden(params, tokens, cfg):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :],
+                                 (b, s))
+    every, groups, tail = _group_shape(cfg)
+    grouped = jax.tree.map(
+        lambda t: t[:groups * every].reshape((groups, every) + t.shape[1:]),
+        params["layers"])
+    tail_p = jax.tree.map(lambda t: t[groups * every:], params["layers"])
+
+    from ..distributed.act_sharding import constrain
+
+    def outer(x, gp):
+        def inner(x, lp):
+            return constrain(_mamba_layer(lp, x, cfg)), None
+        if cfg.remat == "full":
+            inner = jax.checkpoint(inner)
+        x, _ = jax.lax.scan(inner, x, gp)
+        x = constrain(_shared_attn(params["shared"], x, cfg, positions))
+        return x, None
+
+    x, _ = jax.lax.scan(outer, x, grouped)
+    if tail:
+        def inner(x, lp):
+            return constrain(_mamba_layer(lp, x, cfg)), None
+        if cfg.remat == "full":
+            inner = jax.checkpoint(inner)
+        x, _ = jax.lax.scan(inner, x, tail_p)
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps)
+
+
+def forward(params, tokens, cfg):
+    return unembed(params, hidden(params, tokens, cfg), cfg), {}
+
+
+def loss_fn(params, batch, cfg):
+    from .layers import chunked_cross_entropy, cross_entropy
+    x = hidden(params, batch["tokens"], cfg)
+    if cfg.loss_chunk:
+        loss = chunked_cross_entropy(params, x, batch["labels"], cfg,
+                                     cfg.loss_chunk)
+    else:
+        loss = cross_entropy(unembed(params, x, cfg), batch["labels"],
+                             batch.get("mask"))
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# serving: mamba recurrent states + one KV cache per shared-attn site
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, dtype=PARAM_DTYPE):
+    every, groups, tail = _group_shape(cfg)
+    kh, hd = cfg.num_kv_heads, cfg.hd
+    states = jax.vmap(lambda _: mamba_state_init(cfg, batch))(
+        jnp.arange(cfg.num_layers))
+    return {
+        "mamba": states,
+        "k": jnp.zeros((groups, batch, max_len, kh, hd), dtype),
+        "v": jnp.zeros((groups, batch, max_len, kh, hd), dtype),
+    }
+
+
+def decode_step(params, cache, token, pos, cfg):
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    every, groups, tail = _group_shape(cfg)
+    grouped = jax.tree.map(
+        lambda t: t[:groups * every].reshape((groups, every) + t.shape[1:]),
+        params["layers"])
+    tail_p = jax.tree.map(lambda t: t[groups * every:], params["layers"])
+    g_states = jax.tree.map(
+        lambda t: t[:groups * every].reshape((groups, every) + t.shape[1:]),
+        cache["mamba"])
+    t_states = jax.tree.map(lambda t: t[groups * every:], cache["mamba"])
+
+    def mamba_step(x, inp):
+        lp, st = inp
+        y, st2 = mamba_decode(lp["mamba"],
+                              rmsnorm(lp["ln"], x, cfg.norm_eps), cfg, st)
+        return x + y, st2
+
+    def outer(x, inp):
+        gp, st, ck, cv = inp
+        x, st2 = jax.lax.scan(mamba_step, x, (gp, st))
+        sp = params["shared"]
+        xin = rmsnorm(sp["ln1"], x, cfg.norm_eps)
+        y, ck, cv = attention_decode(sp["attn"], xin, cfg, ck, cv, pos)
+        h = x + y
+        x = h + mlp(sp["mlp"], rmsnorm(sp["ln2"], h, cfg.norm_eps), cfg)
+        return x, (st2, ck, cv)
+
+    x, (g_states2, ks, vs) = jax.lax.scan(
+        outer, x, (grouped, g_states, cache["k"], cache["v"]))
+    if tail:
+        x, t_states2 = jax.lax.scan(mamba_step, x, (tail_p, t_states))
+    else:
+        t_states2 = t_states
+    new_mamba = jax.tree.map(
+        lambda g, t: jnp.concatenate(
+            [g.reshape((groups * every,) + g.shape[2:]), t], axis=0),
+        g_states2, t_states2)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params, x, cfg)[:, 0]
+    return logits, {"mamba": new_mamba, "k": ks, "v": vs}

@@ -1,0 +1,2 @@
+from .adamw import (AdamWConfig, apply_updates, compressed_grad,
+                    global_norm, init_state, schedule)

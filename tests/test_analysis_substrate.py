@@ -1,0 +1,143 @@
+"""Coverage for the analysis/runtime substrate: HLO analyzer, network
+cost model, DPM GC, straggler policy, elasticity helpers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DEFAULT_MODEL, NetModel
+from repro.core.dpm_pool import DPMPool
+from repro.launch.elastic import straggler_scales
+from repro.launch.hlo_analysis import analyze_hlo, traffic_breakdown
+
+
+class TestHloAnalyzer:
+    def test_matmul_exact_vs_xla(self):
+        f = lambda a, b: a @ b
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        c = jax.jit(f).lower(x, x).compile()
+        t = analyze_hlo(c.as_text())
+        ca = c.cost_analysis()
+        assert abs(t.flops - ca["flops"]) / ca["flops"] < 1e-6
+        assert abs(t.bytes - ca["bytes accessed"]) / ca["bytes accessed"] \
+            < 0.05
+
+    def test_scan_trip_count_multiplied(self):
+        def f(x, w):
+            return jax.lax.scan(lambda c, _: (c @ w, None), x, None,
+                                length=12)[0]
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        c12 = jax.jit(f).lower(x, x).compile()
+        c1 = jax.jit(lambda a, b: a @ b).lower(x, x).compile()
+        t12 = analyze_hlo(c12.as_text())
+        t1 = analyze_hlo(c1.as_text())
+        assert abs(t12.flops / t1.flops - 12) < 0.2
+
+    def test_fusion_slice_not_overcharged(self):
+        """A fused dynamic-slice must bill the slice, not the buffer."""
+        def f(pool, i):
+            return jax.lax.dynamic_index_in_dim(pool, i,
+                                                keepdims=False) * 2.0
+        pool = jax.ShapeDtypeStruct((64, 256, 256), jnp.float32)
+        c = jax.jit(f).lower(pool,
+                             jax.ShapeDtypeStruct((), jnp.int32)).compile()
+        t = analyze_hlo(c.as_text())
+        slice_bytes = 256 * 256 * 4
+        assert t.bytes < 16 * slice_bytes   # nowhere near the 64x buffer
+
+    def test_breakdown_keys(self):
+        c = jax.jit(lambda a, b: a @ b).lower(
+            jax.ShapeDtypeStruct((64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+        bd = traffic_breakdown(c.as_text())
+        assert bd and all(v >= 0 for v in bd.values())
+
+
+class TestNetModel:
+    def test_caps_ordering(self):
+        m = DEFAULT_MODEL
+        # fewer RTs/op -> higher capacity, always
+        hi = m.cluster_throughput(num_kns=8, rts_per_op=0.2,
+                                  value_bytes=1024, write_fraction=0.1)
+        lo = m.cluster_throughput(num_kns=8, rts_per_op=3.0,
+                                  value_bytes=1024, write_fraction=0.1)
+        assert hi >= lo
+
+    def test_single_key_cap(self):
+        m = DEFAULT_MODEL
+        capped = m.cluster_throughput(num_kns=16, rts_per_op=0.2,
+                                      value_bytes=1024,
+                                      write_fraction=0.0,
+                                      top_key_share=0.5)
+        assert capped <= m.kn_cpu_ops / 0.5 + 1
+
+    def test_ms_load_scaling(self):
+        m = DEFAULT_MODEL
+        light = m.cluster_throughput(num_kns=16, rts_per_op=1.0,
+                                     value_bytes=1024, write_fraction=0.0,
+                                     metadata_server_cap=m.clover_ms_ops,
+                                     ms_load_fraction=0.1)
+        heavy = m.cluster_throughput(num_kns=16, rts_per_op=1.0,
+                                     value_bytes=1024, write_fraction=0.0,
+                                     metadata_server_cap=m.clover_ms_ops,
+                                     ms_load_fraction=1.0)
+        assert light > heavy
+
+    def test_merge_pm_slower(self):
+        m = DEFAULT_MODEL
+        assert m.merge_capacity(on_pm=True) < m.merge_capacity(on_pm=False)
+
+    def test_local_throughput_monotone(self):
+        m = DEFAULT_MODEL
+        assert m.kn_local_throughput(0.1) > m.kn_local_throughput(2.0)
+
+
+class TestDPMPoolGC:
+    def test_segment_collected_when_fully_invalidated(self):
+        pool = DPMPool(num_buckets=1 << 8, segment_capacity=4)
+        pool.register_kn("kn1")
+        # fill one segment with 4 writes to the same key set
+        for i in range(4):
+            pool.log_write("kn1", i, f"v{i}", 8)
+        pool.merge_all("kn1")
+        created = pool.gc.segments_created
+        # overwrite all 4 keys -> old pointers invalidated
+        for i in range(4):
+            pool.log_write("kn1", i, f"w{i}", 8)
+        pool.merge_all("kn1")
+        assert pool.gc.segments_collected >= 1
+
+    def test_tombstone_delete(self):
+        pool = DPMPool(num_buckets=1 << 8, segment_capacity=16)
+        pool.register_kn("kn1")
+        pool.log_write("kn1", 5, "v5", 8)
+        pool.merge_all("kn1")
+        assert pool.index_lookup(5)[0] is not None
+        pool.log_write("kn1", -5 - 1, None, 0)     # tombstone
+        pool.merge_all("kn1")
+        assert pool.index_lookup(5)[0] is None
+
+    def test_write_blocking_threshold(self):
+        pool = DPMPool(num_buckets=1 << 8, segment_capacity=2,
+                       unmerged_threshold=1)
+        pool.register_kn("kn1")
+        for i in range(6):                  # 3 rotated segments, no merge
+            pool.log_write("kn1", i, f"v{i}", 8)
+        assert pool.write_blocked("kn1")
+        pool.merge_budget(1 << 20)
+        assert not pool.write_blocked("kn1")
+
+
+class TestElasticHelpers:
+    def test_straggler_scales(self):
+        t = {"w0": 100.0, "w1": 100.0, "w2": 100.0, "w3": 40.0}
+        scales = straggler_scales(t)
+        assert scales["w3"] < min(scales["w0"], scales["w1"])
+        # shares renormalize to the same total work
+        assert abs(sum(scales.values()) - len(scales)) < 1e-6
+
+    def test_no_stragglers_identity(self):
+        t = {"w0": 100.0, "w1": 101.0}
+        scales = straggler_scales(t)
+        assert all(abs(s - 1.0) < 0.02 for s in scales.values())

@@ -1,0 +1,261 @@
+"""End-to-end cluster behaviour: variants, reconfiguration protocol,
+selective replication, failures, linearizability."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CLOVER, DINOMO, DINOMO_N, DINOMO_S, DinomoCluster,
+                        Op, check_history)
+from repro.core.mnode import (Action, EpochStats, PolicyConfig,
+                              PolicyEngine)
+
+
+def mk(variant, kns=4, keys=5000, **kw):
+    c = DinomoCluster(variant, num_kns=kns, cache_bytes=1 << 19,
+                      value_bytes=1024, num_buckets=1 << 13,
+                      segment_capacity=256, **kw)
+    c.load((k, f"v{k}") for k in range(keys))
+    return c
+
+
+def run_mixed(c, n=4000, write_frac=0.5, keys=5000, seed=0):
+    rng = np.random.default_rng(seed)
+    ks = rng.zipf(1.6, n) % keys
+    for i, k in enumerate(ks):
+        k = int(k)
+        if rng.random() < write_frac:
+            c.write(k, f"w{i}")
+        else:
+            v, rts, ok = c.read(k)
+        if i % 256 == 0:
+            c.advance_merge(1024)
+    c.advance_merge(1 << 30)
+
+
+class TestVariants:
+    def test_rts_ordering(self):
+        """Table 6's qualitative result: dinomo < dinomo-s << clover."""
+        stats = {}
+        for v in (DINOMO, DINOMO_S, CLOVER):
+            c = mk(v)
+            run_mixed(c)
+            stats[v.name] = c.aggregate_stats()["rts_per_op"]
+        assert stats["dinomo"] < stats["dinomo-s"] < stats["clover"]
+
+    def test_dinomo_reads_after_writes(self):
+        c = mk(DINOMO, kns=2, keys=200)
+        for i in range(300):
+            k = i % 100
+            c.write(k, f"w{i}")
+            v, _, ok = c.read(k)
+            assert ok and v == f"w{i}"
+            if i % 64 == 0:
+                c.advance_merge(512)
+
+    def test_clover_version_chain_growth(self):
+        """Shared-everything staleness: more KNs writing the same keys
+        -> longer chain walks (the paper's 8.7 RTs/op effect)."""
+        rts = {}
+        for kns in (1, 8):
+            c = mk(CLOVER, kns=kns, keys=50)
+            run_mixed(c, n=2000, keys=50, seed=1)
+            rts[kns] = c.aggregate_stats()["rts_per_op"]
+        assert rts[8] > rts[1]
+
+    def test_value_hit_ratio_grows_with_cache(self):
+        """The Fig. 3 effect: more cache -> DAC holds more values."""
+        ratios = {}
+        for name, cap in (("small", 1 << 16), ("big", 1 << 23)):
+            c = DinomoCluster(DINOMO, num_kns=1, cache_bytes=cap,
+                              value_bytes=1024, num_buckets=1 << 13,
+                              segment_capacity=256)
+            c.load((k, f"v{k}") for k in range(5000))
+            rng = np.random.default_rng(3)
+            for k in rng.integers(0, 5000, 6000):   # near-uniform reads
+                c.read(int(k))
+            ratios[name] = c.aggregate_stats()["value_hit_ratio"]
+        assert ratios["big"] > ratios["small"]
+
+
+class TestReconfiguration:
+    def test_add_kn_no_lost_updates(self):
+        c = mk(DINOMO, kns=2, keys=1000)
+        for i in range(500):
+            c.write(i % 1000, f"w{i}")
+        c.add_kn()                          # membership change mid-write
+        c.advance_merge(1 << 30)
+        for i in range(400, 500):           # latest writes visible
+            v, _, ok = c.read(i % 1000)
+            assert ok and v == f"w{i}"
+
+    def test_participants_only(self):
+        # with few vnodes per KN, a membership change touches only the
+        # ring-adjacent owners; the rest keep serving (protocol step 5)
+        c = DinomoCluster(DINOMO, num_kns=8, cache_bytes=1 << 19,
+                          value_bytes=1024, num_buckets=1 << 13,
+                          segment_capacity=256, vnodes=2)
+        c.load((k, f"v{k}") for k in range(1000))
+        name, ev = c.add_kn()
+        rec = c.reconfig_log[-1]
+        assert 0 < len(rec["participants"]) < 9
+
+    def test_zero_data_movement_dinomo(self):
+        c = mk(DINOMO, kns=4, keys=1000)
+        c.add_kn()
+        assert c.reconfig_log[-1]["moved_fraction"] == 0.0
+
+    def test_data_movement_dinomo_n(self):
+        c = mk(DINOMO_N, kns=4, keys=1000)
+        c.add_kn()
+        assert c.reconfig_log[-1]["moved_fraction"] > 0.0
+
+    def test_failure_recovers_pending_writes(self):
+        c = mk(DINOMO, kns=4, keys=1000)
+        for i in range(200):
+            c.write(i, f"w{i}")             # pending in failed KN's logs
+        victim = c.route(0)
+        c.fail_kn(victim)
+        c.advance_merge(1 << 30)
+        for i in range(200):
+            v, _, ok = c.read(i)
+            assert ok and v == f"w{i}"      # DPM logs survive KN DRAM loss
+
+    def test_remove_then_serve(self):
+        c = mk(DINOMO, kns=4, keys=500)
+        victim = c.ownership.kns[0]
+        c.remove_kn(victim)
+        for k in range(100):
+            v, _, ok = c.read(k)
+            assert ok and v == f"v{k}"
+
+
+class TestSelectiveReplication:
+    def test_replicated_key_spreads_load(self):
+        c = mk(DINOMO, kns=4, keys=1000)
+        c.replicate_key(7, 4)
+        owners = set()
+        for _ in range(200):
+            owners.add(c.route(7))
+        assert len(owners) == 4
+
+    def test_replicated_writes_linearizable(self):
+        c = mk(DINOMO, kns=4, keys=1000)
+        c.replicate_key(7, 4)
+        hist = []
+        t = 0.0
+        for i in range(60):
+            if i % 3 == 0:
+                c.write(7, f"w{i}")
+                hist.append(Op("write", 7, f"w{i}", t, t + 0.5))
+            else:
+                v, _, ok = c.read(7)
+                assert ok
+                hist.append(Op("read", 7, v, t, t + 0.5))
+            t += 1
+        assert check_history(hist, initial="v7")[7]
+
+    def test_dereplicate_restores_value_caching(self):
+        c = mk(DINOMO, kns=4, keys=1000)
+        c.replicate_key(9, 4)
+        c.write(9, "hot")
+        c.dereplicate_key(9)
+        assert not c.ownership.is_replicated(9)
+        v, _, ok = c.read(9)
+        assert ok and v == "hot"
+
+    def test_replicated_read_costs_two_rts(self):
+        c = mk(DINOMO, kns=4, keys=1000)
+        c.replicate_key(3, 2)
+        c.read(3)                          # warm the shortcut
+        _, rts, _ = c.read(3)
+        assert rts == 2.0                  # indirect ptr + value
+
+
+class TestLinearizability:
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=10, deadline=None)
+    def test_random_history(self, seed):
+        rng = np.random.default_rng(seed)
+        c = mk(DINOMO, kns=3, keys=50)
+        hist = []
+        t = 0.0
+        for i in range(80):
+            k = int(rng.integers(0, 10))
+            if rng.random() < 0.4:
+                c.write(k, f"w{i}")
+                hist.append(Op("write", k, f"w{i}", t, t + 0.5))
+            else:
+                v, _, ok = c.read(k)
+                assert ok
+                hist.append(Op("read", k, v, t, t + 0.5))
+            t += 1
+            if i % 17 == 0:
+                c.advance_merge(256)
+        res = check_history(hist, initial=lambda k: f"v{k}")
+        assert all(res.values()), res
+
+    def test_checker_rejects_bad(self):
+        bad = [Op("write", 1, "A", 0, 1), Op("write", 1, "B", 2, 3),
+               Op("read", 1, "A", 4, 5)]
+        assert not check_history(bad)[1]
+
+    def test_checker_accepts_concurrent(self):
+        h = [Op("write", 1, "A", 0, 10), Op("read", 1, "A", 2, 3),
+             Op("read", 1, None, 1, 2)]   # read before write linearizes
+        assert check_history(h, initial=None)[1]
+
+
+class TestPolicyEngine:
+    def cfg(self):
+        return PolicyConfig(avg_latency_slo=1.2e-3, tail_latency_slo=16e-3,
+                            grace_period_s=0.0, max_kns=8)
+
+    def stats(self, **kw):
+        base = dict(now=100.0, avg_latency=1e-4, p99_latency=1e-3,
+                    occupancy={"kn1": 0.5, "kn2": 0.5}, key_freq={},
+                    replication={})
+        base.update(kw)
+        return EpochStats(**base)
+
+    def test_add_on_violation_overutilized(self):
+        eng = PolicyEngine(self.cfg())
+        acts = eng.decide(self.stats(avg_latency=5e-3,
+                                     occupancy={"kn1": 0.9, "kn2": 0.8}))
+        assert any(a.kind == "add_kn" for a in acts)
+
+    def test_remove_on_underutilized(self):
+        eng = PolicyEngine(self.cfg())
+        acts = eng.decide(self.stats(occupancy={"kn1": 0.02, "kn2": 0.5}))
+        assert any(a.kind == "remove_kn" and a.node == "kn1"
+                   for a in acts)
+
+    def test_replicate_hot_key(self):
+        eng = PolicyEngine(self.cfg())
+        freq = {k: 1.0 for k in range(20)}
+        freq[7] = 500.0
+        acts = eng.decide(self.stats(
+            avg_latency=5e-3, occupancy={"kn1": 0.15, "kn2": 0.12},
+            key_freq=freq))
+        assert any(a.kind == "replicate" and a.key == 7 and a.factor >= 2
+                   for a in acts)
+
+    def test_dereplicate_cold_key(self):
+        eng = PolicyEngine(self.cfg())
+        freq = {k: float(100 + k) for k in range(20)}
+        freq[3] = 0.0
+        acts = eng.decide(self.stats(
+            occupancy={"kn1": 0.5, "kn2": 0.5}, key_freq=freq,
+            replication={3: 4}))
+        assert any(a.kind == "dereplicate" and a.key == 3 for a in acts)
+
+    def test_grace_period_blocks_membership(self):
+        cfg = PolicyConfig(grace_period_s=90.0)
+        eng = PolicyEngine(cfg)
+        s = self.stats(avg_latency=5e-3,
+                       occupancy={"kn1": 0.9, "kn2": 0.8})
+        assert any(a.kind == "add_kn" for a in eng.decide(s))
+        s2 = self.stats(now=110.0, avg_latency=5e-3,
+                        occupancy={"kn1": 0.9, "kn2": 0.8})
+        assert not eng.decide(s2)          # inside grace window

@@ -1,0 +1,236 @@
+"""Property + unit tests for DINOMO core data structures: hash ring,
+DAC, CLHT (jnp + numpy mirror), log segments."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.clht import (MAX_CHAIN, NumpyCLHT, clht_delete, clht_init,
+                             clht_insert, clht_lookup)
+from repro.core.dac import DAC, SHORTCUT_BYTES, StaticCache
+from repro.core.hashring import HashRing, stable_hash
+from repro.core.log import (heap_append, heap_init, heap_read, log_append,
+                            merge_segment, recover_segment, segment_init)
+
+
+# ---------------------------------------------------------------------------
+# hash ring
+# ---------------------------------------------------------------------------
+class TestHashRing:
+    def test_balance(self):
+        ring = HashRing([f"kn{i}" for i in range(8)], vnodes=128)
+        shares = [ring.share(m, samples=4096) for m in ring.members]
+        assert all(0.04 < s < 0.25 for s in shares), shares
+        assert abs(sum(shares) - 1.0) < 1e-6
+
+    @given(st.integers(2, 12), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_remap_blast_radius(self, n, seed):
+        """Consistent hashing: adding one member moves ~1/(n+1) of the
+        keyspace, never more than 3x that."""
+        ring = HashRing([f"kn{i}" for i in range(n)], vnodes=64)
+        old = ring.snapshot()
+        ring.add("newkn")
+        moved = ring.diff(old, samples=2048)
+        assert moved < 3.0 / (n + 1), (n, moved)
+
+    def test_owner_deterministic_and_member(self):
+        ring = HashRing(["a", "b", "c"])
+        for k in range(200):
+            o = ring.owner(k)
+            assert o == ring.owner(k)
+            assert o in ("a", "b", "c")
+
+    def test_owners_distinct(self):
+        ring = HashRing([f"kn{i}" for i in range(6)])
+        owners = ring.owners(42, 4)
+        assert len(owners) == len(set(owners)) == 4
+
+    def test_remove_restores_prior_owner(self):
+        ring = HashRing(["a", "b"])
+        old = {k: ring.owner(k) for k in range(100)}
+        ring.add("c")
+        ring.remove("c")
+        assert all(ring.owner(k) == old[k] for k in range(100))
+
+    @given(st.binary(min_size=0, max_size=64))
+    @settings(max_examples=50, deadline=None)
+    def test_stable_hash_deterministic(self, b):
+        assert stable_hash(b) == stable_hash(b)
+        assert 0 <= stable_hash(b) < (1 << 64)
+
+
+# ---------------------------------------------------------------------------
+# DAC
+# ---------------------------------------------------------------------------
+def zipf_trace(n_ops, n_keys, a, seed=0):
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_keys + 1) ** (-a)
+    cdf = np.cumsum(ranks) / ranks.sum()
+    return np.searchsorted(cdf, rng.random(n_ops))
+
+
+class TestDAC:
+    @given(st.integers(1, 400), st.floats(0.3, 2.0), st.integers(0, 99))
+    @settings(max_examples=25, deadline=None)
+    def test_capacity_invariant(self, n_keys, skew, seed):
+        cap = 2048
+        dac = DAC(cap)
+        for key in zipf_trace(500, n_keys, skew, seed):
+            key = int(key)
+            hit = dac.lookup(key)
+            if hit is None:
+                dac.note_miss_rts(2.0)
+                dac.fill_after_miss(key, ptr=key, length=64)
+            assert dac.used <= cap
+            # accounting is exact
+            expect = sum(DAC.value_bytes(e.length)
+                         for e in dac.values.values()) \
+                + SHORTCUT_BYTES * len(dac.shortcuts)
+            assert dac.used == expect
+
+    def test_hot_key_promoted(self):
+        dac = DAC(4096)
+        # fill with cold shortcuts (saturates the cache)
+        for k in range(200):
+            dac.lookup(k)
+            dac.fill_after_miss(k, ptr=k, length=256)
+        # hammer one key: Eq. 1 must eventually promote it to a value
+        for _ in range(80):
+            if dac.lookup(7) is None:
+                dac.note_miss_rts(2.5)
+                dac.fill_after_miss(7, ptr=7, length=256)
+        assert 7 in dac.values
+        assert dac.stats.promotions >= 1
+
+    def test_demotion_preserves_count(self):
+        # capacity fits exactly one value and no extra shortcut
+        dac = DAC(DAC.value_bytes(100) + SHORTCUT_BYTES // 2)
+        dac.fill_after_miss(1, ptr=1, length=100)   # value (fits)
+        for _ in range(5):
+            dac.lookup(1)
+        count = dac.values[1].count
+        # a miss needing space must DEMOTE the LRU value to a shortcut
+        dac.fill_after_miss(2, ptr=2, length=100)
+        assert 1 in dac.shortcuts and dac.shortcuts[1].count == count
+        assert dac.stats.demotions == 1
+
+    def test_replicated_key_shortcut_only(self):
+        dac = DAC(1 << 16)
+        dac.fill_after_miss(5, ptr=5, length=64)
+        assert 5 in dac.values
+        dac.demote_to_shortcut(5)
+        assert 5 in dac.shortcuts and 5 not in dac.values
+
+    def test_static_cache_fractions(self):
+        sc = StaticCache(4096, 0.0)     # shortcut-only
+        sc.fill_after_miss(1, 1, 64)
+        assert 1 in sc.shortcuts and not sc.values
+        vc = StaticCache(4096, 1.0)     # value-only
+        vc.fill_after_miss(1, 1, 64)
+        assert 1 in vc.values and not vc.shortcuts
+
+
+# ---------------------------------------------------------------------------
+# CLHT (jnp + numpy mirror vs python dict oracle)
+# ---------------------------------------------------------------------------
+class TestCLHT:
+    @given(st.lists(st.tuples(st.integers(0, 2000), st.integers(0, 10**6)),
+                    min_size=1, max_size=300))
+    @settings(max_examples=25, deadline=None)
+    def test_vs_dict_oracle(self, ops):
+        table = clht_init(256)
+        mirror = NumpyCLHT(256)
+        oracle = {}
+        keys = jnp.array([k for k, _ in ops], jnp.int32)
+        ptrs = jnp.array([v % (1 << 30) for _, v in ops], jnp.int32)
+        table, old, ok, _ = clht_insert(table, keys, ptrs)
+        for (k, v), o in zip(ops, np.asarray(ok)):
+            if o:
+                oracle[k] = v % (1 << 30)
+                mirror.insert(k, v % (1 << 30))
+        probe = jnp.array(sorted(set(k for k, _ in ops)), jnp.int32)
+        got, found, probes = clht_lookup(table, probe)
+        for k, g, f, pr in zip(np.asarray(probe), np.asarray(got),
+                               np.asarray(found), np.asarray(probes)):
+            if int(k) in oracle:
+                assert f and int(g) == oracle[int(k)]
+                assert 1 <= pr <= MAX_CHAIN
+                m_ptr, m_probes = mirror.lookup(int(k))
+                assert m_ptr == oracle[int(k)]
+            # keys whose insert failed (overflow) may legitimately miss
+
+    def test_delete(self):
+        table = clht_init(64)
+        keys = jnp.arange(50, dtype=jnp.int32)
+        table, *_ = clht_insert(table, keys, keys + 100)
+        table, old, found = clht_delete(table, keys[:10])
+        assert bool(found.all())
+        _, f, _ = clht_lookup(table, keys)
+        assert not bool(f[:10].any()) and bool(f[10:].all())
+
+    def test_common_case_one_probe(self):
+        """P-CLHT's claim: ~1 bucket access per lookup at sane load."""
+        table = clht_init(1024)
+        keys = jnp.array(np.random.default_rng(0).choice(
+            10**6, 1500, replace=False).astype(np.int32))
+        table, *_ = clht_insert(table, keys, keys)
+        _, found, probes = clht_lookup(table, keys)
+        assert bool(found.all())
+        assert float(probes.mean()) < 1.3
+
+
+# ---------------------------------------------------------------------------
+# log segments
+# ---------------------------------------------------------------------------
+class TestLog:
+    def test_append_seal_merge(self):
+        seg = segment_init(64)
+        seg, ok = log_append(seg, jnp.arange(10, dtype=jnp.int32),
+                             jnp.arange(10, dtype=jnp.int32) + 50)
+        assert bool(ok) and int(seg.count) == 10
+        table = clht_init(64)
+        table, seg, old, inval = merge_segment(table, seg)
+        assert int(seg.merged) == 10 and int(inval) == 0
+        _, found, _ = clht_lookup(table, jnp.arange(10, dtype=jnp.int32))
+        assert bool(found.all())
+
+    @given(st.integers(0, 19))
+    @settings(max_examples=20, deadline=None)
+    def test_crash_consistency(self, torn_at):
+        """A torn entry invalidates itself and the suffix (merge order
+        must match request order), never the sealed prefix."""
+        seg = segment_init(32)
+        seg, _ = log_append(seg, jnp.arange(20, dtype=jnp.int32),
+                            jnp.arange(20, dtype=jnp.int32))
+        torn = type(seg)(keys=seg.keys, ptrs=seg.ptrs,
+                         seal=seg.seal.at[torn_at].set(0),
+                         count=seg.count, merged=seg.merged)
+        rec = recover_segment(torn)
+        assert int(rec.count) == torn_at
+        table = clht_init(64)
+        table, _, _, _ = merge_segment(table, rec)
+        _, found, _ = clht_lookup(table, jnp.arange(20, dtype=jnp.int32))
+        f = np.asarray(found)
+        assert f[:torn_at].all() and not f[torn_at:].any()
+
+    def test_merge_order_last_write_wins(self):
+        seg = segment_init(32)
+        keys = jnp.array([5, 5, 5, 7, 5], jnp.int32)
+        ptrs = jnp.array([1, 2, 3, 9, 4], jnp.int32)
+        seg, _ = log_append(seg, keys, ptrs)
+        table = clht_init(64)
+        table, _, old, inval = merge_segment(table, seg)
+        got, found, _ = clht_lookup(table, jnp.array([5, 7], jnp.int32))
+        assert bool(found.all())
+        assert int(got[0]) == 4 and int(got[1]) == 9
+        assert int(inval) == 3       # three superseded pointers
+
+    def test_heap(self):
+        h = heap_init(32, 4)
+        h, idx = heap_append(h, jnp.arange(12, dtype=jnp.int32)
+                             .reshape(3, 4))
+        assert (np.asarray(heap_read(h, idx)) ==
+                np.arange(12).reshape(3, 4)).all()

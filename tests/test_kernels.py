@@ -1,0 +1,226 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret mode)
+against its pure-jnp/numpy oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clht import bucket_of, clht_init, clht_insert, clht_lookup
+from repro.core.log import log_append, segment_init
+from repro.kernels.clht_probe import clht_probe, clht_probe_ref, pack_table
+from repro.kernels.clht_probe.ops import lookup as probe_lookup
+from repro.kernels.decode_attention import (merge_partials, normalize,
+                                            paged_decode_attention,
+                                            paged_decode_ref)
+from repro.kernels.flash_attention import (attention, blocked_mha_jnp,
+                                           flash_attention, mha_ref)
+from repro.kernels.log_merge import (log_merge, log_merge_ref,
+                                     merge_segment_fast)
+from repro.kernels.ssd_scan import ssd, ssd_ref, ssd_scan
+
+RNG = np.random.default_rng(42)
+
+
+def randn(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nb,nkeys,dtype", [
+    (64, 100, np.int32), (128, 400, np.int32), (256, 50, np.int32)])
+def test_clht_probe_sweep(nb, nkeys, dtype):
+    keys = RNG.choice(10_000, nkeys, replace=False).astype(dtype)
+    t = clht_init(nb)
+    t, *_ = clht_insert(t, jnp.array(keys), jnp.arange(nkeys, dtype=jnp.int32))
+    lines = pack_table(t.keys, t.ptrs, t.nxt)
+    probe = jnp.array(np.concatenate(
+        [keys[:nkeys // 2], RNG.integers(10_001, 20_000, 25)]).astype(dtype))
+    bids = bucket_of(probe, nb)
+    p_k, f_k = clht_probe(lines, bids, probe)
+    p_r, f_r = clht_probe_ref(lines, bids, probe)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+
+
+def test_clht_probe_full_lookup_matches_chain_walk():
+    keys = RNG.choice(5000, 600, replace=False).astype(np.int32)
+    t = clht_init(64)   # heavy chains
+    t, _, ok, _ = clht_insert(t, jnp.array(keys),
+                              jnp.arange(600, dtype=jnp.int32))
+    probe = jnp.array(keys[np.asarray(ok)[:600]][:200])
+    p1, f1 = probe_lookup(t, probe)
+    p2, f2, _ = clht_lookup(t, probe)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nb,entries", [(64, 200), (128, 500), (32, 64)])
+def test_log_merge_sweep(nb, entries):
+    keys = RNG.integers(0, nb * 2, entries).astype(np.int32)
+    ptrs = np.arange(entries, dtype=np.int32)
+    t = clht_init(nb)
+    lines = pack_table(t.keys, t.ptrs, t.nxt)
+    bids = np.asarray(bucket_of(jnp.array(keys), nb))
+    l_k, o_k, ok_k = log_merge(jnp.array(lines), jnp.array(bids),
+                               jnp.array(keys), jnp.array(ptrs))
+    l_r, o_r, ok_r = log_merge_ref(np.asarray(lines), bids, keys, ptrs)
+    np.testing.assert_array_equal(np.asarray(l_k), l_r)
+    np.testing.assert_array_equal(np.asarray(o_k), o_r)
+    np.testing.assert_array_equal(np.asarray(ok_k), ok_r)
+
+
+def test_merge_segment_fast_equals_sequential_insert():
+    seg = segment_init(256)
+    keys = RNG.choice(4000, 200, replace=False).astype(np.int32)
+    seg, _ = log_append(seg, jnp.array(keys),
+                        jnp.arange(200, dtype=jnp.int32))
+    t1, _, ok1 = merge_segment_fast(clht_init(128), seg)
+    t2, _, ok2, _ = clht_insert(clht_init(128), seg.keys, seg.ptrs,
+                                jnp.arange(256) < 200)
+    p1, f1, _ = clht_lookup(t1, jnp.array(keys))
+    p2, f2, _ = clht_lookup(t2, jnp.array(keys))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kh,sq,sk,d,causal,dtype", [
+    (1, 4, 4, 64, 64, 32, True, jnp.float32),
+    (2, 8, 2, 128, 128, 64, True, jnp.bfloat16),
+    (1, 4, 1, 32, 128, 32, False, jnp.float32),
+    (1, 2, 2, 256, 256, 16, True, jnp.float32),
+])
+def test_flash_attention_sweep(b, h, kh, sq, sk, d, causal, dtype):
+    q = randn((b, h, sq, d), dtype)
+    k = randn((b, kh, sk, d), dtype)
+    v = randn((b, kh, sk, d), dtype)
+    o_k = flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    o_r = mha_ref(q, k, v, causal=causal)
+    tol = 2.5e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_blocked_jnp_equals_dense():
+    q = randn((1, 4, 64, 32))
+    k = randn((1, 2, 2048, 32))
+    v = randn((1, 2, 2048, 32))
+    o_b = blocked_mha_jnp(q, k, v, causal=False, bk=1024)
+    o_r = mha_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_attention_wrapper_paths_agree():
+    q = randn((2, 64, 4, 32))
+    k = randn((2, 64, 2, 32))
+    o1 = attention(q, k, k, causal=True, use_kernel=True, interpret=True,
+                   bq=32, bk=32)
+    o2 = attention(q, k, k, causal=True, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kh,d,ps,npages,p,dtype", [
+    (2, 8, 2, 32, 16, 12, 4, jnp.float32),
+    (1, 4, 4, 64, 8, 20, 6, jnp.float32),
+    (2, 4, 2, 16, 16, 8, 2, jnp.bfloat16),
+])
+def test_paged_decode_sweep(b, h, kh, d, ps, npages, p, dtype):
+    q = randn((b, h, d), dtype)
+    kp = randn((npages, ps, kh, d), dtype)
+    vp = randn((npages, ps, kh, d), dtype)
+    pt = np.full((b, p), -1, np.int32)
+    pos = np.zeros((b, p), np.int32)
+    lens = np.zeros((b,), np.int32)
+    for bi in range(b):
+        used = RNG.integers(1, p + 1)
+        pages = RNG.choice(npages, used, replace=False)
+        pt[bi, :used] = pages
+        pos[bi, :used] = np.arange(used) * ps
+        lens[bi] = (used - 1) * ps + RNG.integers(1, ps + 1)
+    args = (q, kp, vp, jnp.array(pt), jnp.array(pos), jnp.array(lens))
+    acc_k, m_k, l_k = paged_decode_attention(*args)
+    acc_r, m_r, l_r = paged_decode_ref(*args)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(acc_k), np.asarray(acc_r),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_r),
+                               atol=tol, rtol=tol)
+
+
+def test_ownership_split_merge_invariance():
+    """Any partition of pages across owners merges to the same output
+    -- the property that makes OP reconfiguration free."""
+    b, h, kh, d, ps, npages, p = 2, 4, 2, 16, 8, 16, 6
+    q = randn((b, h, d))
+    kp = randn((npages, ps, kh, d))
+    vp = randn((npages, ps, kh, d))
+    pt = jnp.array([[0, 1, 2, 3, 4, 5], [6, 7, 8, -1, -1, -1]], jnp.int32)
+    pos = jnp.array([[0, 8, 16, 24, 32, 40], [0, 8, 16, 0, 0, 0]],
+                    jnp.int32)
+    lens = jnp.array([44, 20], jnp.int32)
+    ref = paged_decode_ref(q, kp, vp, pt, pos, lens)
+    for nsplit in (2, 3):
+        parts = []
+        for s in range(nsplit):
+            mask = (jnp.arange(p) % nsplit) == s
+            pts = jnp.where(mask[None, :], pt, -1)
+            parts.append(paged_decode_attention(q, kp, vp, pts, pos,
+                                                lens))
+        merged = merge_partials(parts)
+        np.testing.assert_allclose(np.asarray(normalize(*merged)),
+                                   np.asarray(normalize(*ref)),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,h,g,n,p,chunk,dtype", [
+    (1, 64, 2, 1, 16, 8, 16, jnp.float32),
+    (2, 128, 4, 2, 32, 16, 32, jnp.float32),
+    (1, 64, 2, 1, 16, 8, 64, jnp.float32),     # chunk == S
+    (1, 64, 2, 1, 16, 8, 16, jnp.bfloat16),
+])
+def test_ssd_sweep(b, s, h, g, n, p, chunk, dtype):
+    x = randn((b, s, h, p), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm = randn((b, s, g, n), dtype, 0.3)
+    cm = randn((b, s, g, n), dtype, 0.3)
+    d = jnp.asarray(RNG.standard_normal(h) * 0.1, jnp.float32)
+    y_k = ssd_scan(x, dt, a, bm, cm, d, chunk=chunk)
+    y_r, _ = ssd_ref(x, dt, a, bm, cm, d)
+    y_j = ssd(x, dt, a, bm, cm, d, chunk=chunk, use_kernel=False)
+    tol = 4e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(y_j, np.float32),
+                               np.asarray(y_r, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_ssd_decode_matches_scan():
+    """Token-by-token decode recurrence == full-sequence scan."""
+    from repro.kernels.ssd_scan.ref import ssd_decode_step
+    b, s, h, g, n, p = 1, 16, 2, 1, 8, 4
+    x = randn((b, s, h, p))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm = randn((b, s, g, n), scale=0.3)
+    cm = randn((b, s, g, n), scale=0.3)
+    d = jnp.asarray(RNG.standard_normal(h) * 0.1, jnp.float32)
+    y_full, _ = ssd_ref(x, dt, a, bm, cm, d)
+    state = jnp.zeros((b, h, n, p), jnp.float32)
+    for t in range(s):
+        y_t, state = ssd_decode_step(state, x[:, t].astype(jnp.float32),
+                                     dt[:, t], a,
+                                     bm[:, t].astype(jnp.float32),
+                                     cm[:, t].astype(jnp.float32), d)
+        np.testing.assert_allclose(np.asarray(y_t),
+                                   np.asarray(y_full[:, t]), atol=2e-4,
+                                   rtol=2e-4)

@@ -1,0 +1,238 @@
+"""DINOMO paged KV store + prefix cache + hot rows + checkpoint store."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.embedding import (build_replica, lookup, select_cold_rows,
+                             select_hot_rows)
+from repro.kvcache import (PagedKVController, PrefixCache,
+                           decode_over_owners, pool_append, pool_init)
+
+RNG = np.random.default_rng(11)
+
+
+def build_pool(n_tokens=20, L=2, NP=16, PS=8, KH=2, D=16,
+               workers=("w0", "w1")):
+    pool = pool_init(L, NP, PS, KH, D, jnp.float32)
+    ctl = PagedKVController(NP, PS, list(workers))
+    ctl.new_sequence(0)
+    for _ in range(n_tokens):
+        pid, off = ctl.append_slot(0)
+        pool = pool_append(
+            pool, pid, off,
+            jnp.asarray(RNG.standard_normal((L, KH, D)), jnp.float32),
+            jnp.asarray(RNG.standard_normal((L, KH, D)), jnp.float32))
+    return pool, ctl
+
+
+class TestPagedStore:
+    def test_reconfig_invariance(self):
+        """Adding/removing workers never changes attention output and
+        never moves a page."""
+        pool, ctl = build_pool()
+        q = jnp.asarray(RNG.standard_normal((1, 4, 16)), jnp.float32)
+        base = decode_over_owners(q, pool, 0, ctl.page_tables([0]), [20])
+        pages_before = list(ctl.sequences[0].pages)
+        for action in (lambda: ctl.add_worker("w2"),
+                       lambda: ctl.add_worker("w3"),
+                       lambda: ctl.remove_worker("w0")):
+            action()
+            out = decode_over_owners(q, pool, 0, ctl.page_tables([0]),
+                                     [20])
+            np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                       atol=1e-5, rtol=1e-5)
+        assert ctl.sequences[0].pages == pages_before   # zero movement
+
+    def test_page_release_and_reuse(self):
+        pool, ctl = build_pool()
+        used_before = len(ctl.free)
+        ctl.release(0)
+        assert len(ctl.free) == used_before + 3   # 20 tokens / 8 = 3 pages
+
+    def test_pool_exhaustion(self):
+        pool, ctl = build_pool(NP=2, n_tokens=16)
+        ctl.new_sequence(1)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            for _ in range(24):
+                ctl.append_slot(1)
+
+    def test_owner_tables_partition_pages(self):
+        pool, ctl = build_pool()
+        tables = ctl.page_tables([0])
+        seen = []
+        for w, (pt, _) in tables.items():
+            seen.extend(int(p) for p in pt[pt >= 0].ravel())
+        assert sorted(seen) == sorted(ctl.sequences[0].pages)
+
+    def test_dac_tracks_page_locality(self):
+        pool, ctl = build_pool()
+        for _ in range(20):
+            ctl.page_tables([0])         # repeated touches -> promotions
+        assert any(ctl.local_copy_ratio(w) > 0 for w in ctl.workers)
+
+
+class TestPrefixCache:
+    def test_share_and_cow(self):
+        pool, ctl = build_pool(n_tokens=24)   # 3 full pages
+        pc = PrefixCache(ctl)
+        toks = list(range(24))
+        pc.seal_prefix(0, toks)
+        ctl.new_sequence(1)
+        pages, covered = pc.lookup(toks + [99])
+        assert covered == 24
+        pc.attach(1, pages, covered)
+        # divergence: sequence 1 appends its own page (copy-on-write)
+        pid, off = ctl.append_slot(1)
+        assert pid not in ctl.sequences[0].pages
+        assert all(ctl.refcount[p] == 2 for p in pages)
+        ctl.release(1)
+        assert all(ctl.refcount[p] == 1 for p in pages)
+
+    def test_partial_prefix(self):
+        pool, ctl = build_pool(n_tokens=20)   # 2 full + 1 partial page
+        pc = PrefixCache(ctl)
+        toks = list(range(20))
+        pc.seal_prefix(0, toks)
+        pages, covered = pc.lookup(toks)
+        assert covered == 16 and len(pages) == 2   # page-aligned only
+
+    def test_hot_prefix_ranking(self):
+        pool, ctl = build_pool(n_tokens=16)
+        pc = PrefixCache(ctl)
+        pc.seal_prefix(0, list(range(16)))
+        for _ in range(5):
+            pc.lookup(list(range(16)))
+        hot = pc.hot_prefixes(min_hits=2)
+        assert len(hot) >= 1 and hot[0][0] == 5
+
+
+class TestHotRows:
+    def test_policy_rules(self):
+        counts = np.ones(1000)
+        counts[[3, 14, 159]] = [900, 700, 800]
+        hot = select_hot_rows(counts, 3.0)
+        assert set(hot.tolist()) == {3, 14, 159}
+        counts[3] = 0.0
+        cold = select_cold_rows(counts, hot, 0.0)
+        assert 3 in cold.tolist()
+
+    def test_lookup_correct_and_flags(self):
+        table = jnp.asarray(RNG.standard_normal((256, 16)), jnp.float32)
+        hot = np.array([5, 200], np.int32)
+        st = build_replica(table, hot, pad_to=8)
+        ids = jnp.asarray(RNG.integers(0, 256, (4, 7)), jnp.int32)
+        out, is_hot = lookup(table, st, ids)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(table[ids]), atol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(is_hot), np.isin(np.asarray(ids), hot))
+
+    def test_refresh_after_update(self):
+        from repro.embedding import refresh_after_update
+        table = jnp.zeros((16, 4))
+        st = build_replica(table, np.array([2], np.int32), pad_to=2)
+        table = table.at[2].set(7.0)
+        st = refresh_after_update(table, st)
+        out, is_hot = lookup(table, st, jnp.array([2]))
+        assert bool(is_hot[0]) and float(out[0, 0]) == 7.0
+
+
+class TestCheckpointStore:
+    def test_roundtrip_and_elastic_restore(self):
+        from repro.checkpoint import CheckpointStore
+        d = tempfile.mkdtemp()
+        cs = CheckpointStore(d)
+        tree = {"layers": {"w": jnp.ones((8, 8), jnp.bfloat16)},
+                "step": jnp.int32(7)}
+        cs.save(5, tree, extra={"loss": 1.5}).result()
+        got, extra, step = cs.restore(tree)
+        assert step == 5 and extra["loss"] == 1.5
+        assert got["layers"]["w"].dtype == jnp.bfloat16
+
+    def test_torn_manifest_and_segment(self):
+        from repro.checkpoint import CheckpointStore
+        d = tempfile.mkdtemp()
+        cs = CheckpointStore(d)
+        tree = {"w": jnp.ones((4,))}
+        cs.save(1, tree).result()
+        cs.save(2, tree).result()
+        # tear step 2's segment: restore must fall back to step 1
+        seg = os.path.join(d, "segments", "2")
+        with open(os.path.join(seg, os.listdir(seg)[0]), "wb") as f:
+            f.write(b"garbage")
+        assert cs.latest_valid() == 1
+        _, _, step = cs.restore(tree)
+        assert step == 1
+
+    def test_gc_keeps_recent(self):
+        from repro.checkpoint import CheckpointStore
+        d = tempfile.mkdtemp()
+        cs = CheckpointStore(d, keep=2)
+        tree = {"w": jnp.ones((4,))}
+        for s in range(5):
+            cs.save(s, tree).result()
+        assert len(cs.steps()) <= 2
+
+    def test_async_futures(self):
+        from repro.checkpoint import CheckpointStore
+        d = tempfile.mkdtemp()
+        cs = CheckpointStore(d, async_flush=True)
+        futs = [cs.save(s, {"w": jnp.full((64, 64), s, jnp.float32)})
+                for s in range(4)]
+        cs.wait()
+        assert all(f.done() for f in futs)
+        got, _, step = cs.restore({"w": jnp.zeros((64, 64))})
+        assert step == 3 and float(got["w"][0, 0]) == 3.0
+
+
+class TestShardingRules:
+    """Spec computation is pure: test with an abstract 16x16 mesh."""
+
+    def rules(self):
+        from jax.sharding import AbstractMesh, AxisType
+        from repro.distributed.sharding import make_rules
+        mesh = AbstractMesh((16, 16), ("data", "model"),
+                            axis_types=(AxisType.Auto,) * 2)
+        return make_rules(mesh)
+
+    def test_param_divisibility(self):
+        from repro.distributed.sharding import param_spec
+        r = self.rules()
+        for shape in [(1024, 1024), (3072, 3072), (24, 128), (7, 5),
+                      (151936, 1024), (64, 2048, 1024)]:
+            for mode in ("train", "serve"):
+                spec = param_spec(shape, r, mode)
+                for dim, entry in enumerate(spec):
+                    if entry is None:
+                        continue
+                    axes = entry if isinstance(entry, tuple) else (entry,)
+                    div = 1
+                    for a in axes:
+                        div *= r.mesh.shape[a]
+                    assert shape[dim] % div == 0, (shape, mode, spec)
+
+    def test_scan_dim_never_sharded(self):
+        from repro.distributed.sharding import param_shardings
+        r = self.rules()
+        tree = {"layers": {"w": jax.ShapeDtypeStruct((48, 1024, 1024),
+                                                     jnp.bfloat16)}}
+        sh = param_shardings(tree, r, "train")
+        assert sh["layers"]["w"].spec[0] is None
+
+    def test_batch_spec(self):
+        from repro.distributed.sharding import batch_spec
+        r = self.rules()
+        assert batch_spec(256, r)[0] in ("data", ("data",))
+        assert batch_spec(1, r) == jax.sharding.PartitionSpec(None)
+
+    def test_cache_seq_sharded(self):
+        from repro.distributed.sharding import cache_sharding
+        r = self.rules()
+        s = cache_sharding((24, 128, 32768, 8, 64), r)
+        assert s.spec[1] in ("data", ("data",))   # batch over data
+        assert "model" in str(s.spec)       # something TP-sharded
