@@ -1,0 +1,210 @@
+"""Data-plane micro-benchmark: batched op engine vs the scalar per-op
+path, plus the fused Pallas kvs_lookup vs its jnp reference.
+
+Emits ``BENCH_dataplane.json`` next to this file so the perf trajectory
+of the hot path is tracked from PR 1 onward.
+
+Planes measured
+  * simulator plane: TimedSimulation sampled-ops/s. The *scalar* side
+    is the seed's per-op path -- reference DAC caches (OrderedDict +
+    lazy-heap bookkeeping, full Eq. 1 victim peek per shortcut hit)
+    driven one op at a time at the seed's default sample_ops=3000. The
+    *batched* side is the vectorized data plane (execute_batch) with
+    ArrayDAC caches at its default sampling. Both produce identical
+    statistics on the same op stream (property-tested in
+    tests/test_dataplane.py); only the wall-clock differs.
+  * cluster plane: raw execute_batch vs per-op read()/write() on the
+    same preloaded cluster, no simulation bookkeeping.
+  * JAX plane: fused kvs_lookup kernel vs the un-fused jnp reference
+    (chain walk + separate gather). NOTE: Pallas runs in interpret
+    mode on CPU hosts, so kernel wall-clock is not meaningful there;
+    the numbers are recorded for trend tracking on real accelerators.
+
+Usage:  PYTHONPATH=src python -m benchmarks.bench_dataplane [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import DinomoCluster, PolicyConfig, TimedSimulation, VARIANTS
+from repro.data import Workload
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "BENCH_dataplane.json")
+
+NUM_KEYS = 100_000
+VALUE_BYTES = 1024
+CACHE_FRAC = 0.03            # ~paper ratio: 1 GB cache vs 32 GB dataset
+SEED_SAMPLE_OPS = 3000       # the seed's TimedSimulation default
+
+
+def _cluster(reference: bool, num_kns: int = 4,
+             num_keys: int = NUM_KEYS) -> DinomoCluster:
+    c = DinomoCluster(VARIANTS["dinomo"], num_kns=num_kns,
+                      cache_bytes=int(num_keys * VALUE_BYTES * CACHE_FRAC),
+                      value_bytes=VALUE_BYTES, num_buckets=1 << 17,
+                      segment_capacity=512,
+                      policy=PolicyConfig(grace_period_s=1e9, epoch_s=1e9),
+                      reference_cache=reference)
+    c.load(((k, f"v{k}") for k in range(num_keys)), warm=True)
+    return c
+
+
+def bench_sim(mix: str, zipf: float, steps: int, num_keys: int) -> dict:
+    """Sampled-ops/s through TimedSimulation, scalar vs batched."""
+    out = {}
+    for label, reference, batched, sample_ops in (
+            ("scalar", True, False, SEED_SAMPLE_OPS),
+            ("batched", False, True, None)):
+        c = _cluster(reference, num_keys=num_keys)
+        w = Workload(num_keys=num_keys, zipf=zipf, mix=mix, seed=0)
+        kw = {} if sample_ops is None else {"sample_ops": sample_ops}
+        sim = TimedSimulation(c, w.timed_batched if batched else w.timed,
+                              dt=1.0, batched=batched, **kw)
+        sim.run(2.0, lambda t: 1e8)                     # warm-up
+        t0 = time.perf_counter()
+        sim.run(2.0 + steps, lambda t: 1e8)
+        dt = time.perf_counter() - t0
+        out[label] = {
+            "sampled_ops_per_s": steps * sim.sample_ops / dt,
+            "sample_ops": sim.sample_ops,
+            "wall_s": dt,
+        }
+    out["speedup"] = (out["batched"]["sampled_ops_per_s"]
+                      / out["scalar"]["sampled_ops_per_s"])
+    return out
+
+
+def bench_cluster(mix: str, zipf: float, n_ops: int,
+                  num_keys: int) -> dict:
+    """Raw data-plane ops/s: execute_batch vs per-op read()/write()."""
+    w1 = Workload(num_keys=num_keys, zipf=zipf, mix=mix, seed=0)
+    w2 = Workload(num_keys=num_keys, zipf=zipf, mix=mix, seed=0)
+    a, b = _cluster(True), _cluster(False)
+    vals = [f"w{i}" for i in range(n_ops)]
+    # warm both with the identical stream
+    for i, (kind, key) in enumerate(w1.ops(n_ops)):
+        if kind == "read":
+            a.read(key)
+        else:
+            a.write(key, vals[i])
+    kinds, keys = w2.ops_arrays(n_ops)
+    for s in range(0, n_ops, SEED_SAMPLE_OPS):
+        b.execute_batch(kinds[s:s + SEED_SAMPLE_OPS],
+                        keys[s:s + SEED_SAMPLE_OPS],
+                        values=vals[s:s + SEED_SAMPLE_OPS])
+    # measured pass
+    ops2 = w1.ops(n_ops)
+    kinds2, keys2 = w2.ops_arrays(n_ops)
+    t0 = time.perf_counter()
+    for i, (kind, key) in enumerate(ops2):
+        if kind == "read":
+            a.read(key)
+        else:
+            a.write(key, vals[i])
+    dt_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for s in range(0, n_ops, SEED_SAMPLE_OPS):
+        b.execute_batch(kinds2[s:s + SEED_SAMPLE_OPS],
+                        keys2[s:s + SEED_SAMPLE_OPS],
+                        values=vals[s:s + SEED_SAMPLE_OPS])
+    dt_b = time.perf_counter() - t0
+    sa, sb = a.aggregate_stats(), b.aggregate_stats()
+    assert sa == sb, f"stat divergence: {sa} vs {sb}"
+    return {
+        "scalar_ops_per_s": n_ops / dt_s,
+        "batched_ops_per_s": n_ops / dt_b,
+        "speedup": dt_s / dt_b,
+        "rts_per_op": sa["rts_per_op"],
+        "hit_ratio": sa["hit_ratio"],
+    }
+
+
+def bench_kernel(nb: int = 1 << 12, nkeys: int = 4096, width: int = 8,
+                 batch: int = 2048, reps: int = 5) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.clht import clht_init, clht_insert
+    from repro.core.log import heap_append, heap_init
+    from repro.kernels.clht_probe import kvs_lookup, kvs_lookup_ref
+
+    rng = np.random.default_rng(0)
+    keys = rng.choice(10 * nkeys, nkeys, replace=False).astype(np.int32)
+    t = clht_init(nb)
+    heap = heap_init(nkeys + 8, width)
+    heap, ptrs = heap_append(
+        heap, jnp.arange(nkeys * width, dtype=jnp.int32)
+        .reshape(nkeys, width))
+    t, *_ = clht_insert(t, jnp.array(keys), ptrs)
+    probe = jnp.array(rng.choice(keys, batch).astype(np.int32))
+
+    def timed(fn):
+        r = fn(t, heap, probe)
+        jax.block_until_ready(r)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(t, heap, probe))
+        return (time.perf_counter() - t0) / reps / batch * 1e6
+
+    return {
+        "fused_kernel_us_per_key": timed(kvs_lookup),
+        "jnp_ref_us_per_key": timed(kvs_lookup_ref),
+        "batch": batch,
+        "interpret_mode": True,
+        "note": ("Pallas interpret mode on CPU: kernel timing tracks "
+                 "trend only; the jnp reference is the CPU-meaningful "
+                 "number"),
+    }
+
+
+def main(fast: bool = False) -> dict:
+    steps = 4 if fast else 8
+    n_ops = 20_000 if fast else 60_000
+    num_keys = NUM_KEYS
+    sims = {}
+    for mix, zipf in (("read_only", 0.99), ("read_mostly_update", 0.99),
+                      ("read_only", 2.0), ("write_heavy_update", 0.5)):
+        name = f"{mix}_z{zipf}"
+        print(f"# sim plane: {name}", flush=True)
+        sims[name] = bench_sim(mix, zipf, steps, num_keys)
+        print(f"  scalar {sims[name]['scalar']['sampled_ops_per_s']:.0f} "
+              f"ops/s  batched "
+              f"{sims[name]['batched']['sampled_ops_per_s']:.0f} ops/s  "
+              f"{sims[name]['speedup']:.1f}x", flush=True)
+    print("# cluster plane", flush=True)
+    clu = bench_cluster("read_only", 0.99, n_ops, num_keys)
+    print(f"  scalar {clu['scalar_ops_per_s']:.0f}  batched "
+          f"{clu['batched_ops_per_s']:.0f}  {clu['speedup']:.1f}x",
+          flush=True)
+    print("# JAX plane (interpret mode)", flush=True)
+    kern = bench_kernel(batch=512 if fast else 2048,
+                        reps=2 if fast else 5)
+    best = max(s["speedup"] for s in sims.values())
+    record = {
+        "config": {"num_keys": num_keys, "value_bytes": VALUE_BYTES,
+                   "cache_frac": CACHE_FRAC, "num_kns": 4,
+                   "scalar_sample_ops": SEED_SAMPLE_OPS},
+        "simulator_plane": sims,
+        "cluster_plane": clu,
+        "jax_plane": kern,
+        "best_sim_speedup": best,
+        "target_speedup": 10.0,
+        "meets_target": best >= 10.0,
+    }
+    with open(OUT, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"\nwrote {OUT}; best sim-plane speedup {best:.1f}x "
+          f"(target >= 10x: {'MET' if best >= 10 else 'NOT MET'})")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    main(ap.parse_args().fast)

@@ -42,41 +42,71 @@ class RunResult:
 
 def build_cluster(variant_name: str, num_kns: int,
                   cache_bytes: int = CACHE_BYTES,
-                  num_keys: int = NUM_KEYS, seed: int = 0):
+                  num_keys: int = NUM_KEYS, seed: int = 0,
+                  reference_cache: bool = False):
     c = DinomoCluster(VARIANTS[variant_name], num_kns=num_kns,
                       cache_bytes=cache_bytes, value_bytes=VALUE_BYTES,
                       num_buckets=1 << 17, segment_capacity=512,
-                      seed=seed)
+                      seed=seed, reference_cache=reference_cache)
     c.load(((k, f"v{k}") for k in range(num_keys)), warm=True)
     return c
+
+
+def execute_ops_scalar(c: DinomoCluster, ops) -> int:
+    """The per-op reference path (seed behavior): one read()/write()
+    call per sampled op, merging every 512 ops."""
+    writes = 0
+    for i, (kind, key) in enumerate(ops):
+        if kind == "read":
+            c.read(key)
+        else:
+            writes += 1
+            c.write(key, f"w{i}")
+        if i % 512 == 0:
+            c.advance_merge(2048)
+    c.advance_merge(1 << 30)
+    return writes
+
+
+def execute_ops_batched(c: DinomoCluster, kinds, keys,
+                        chunk: int = 512) -> int:
+    """Batched data plane with the scalar loop's merge cadence (merge
+    after op 0, then after every ``chunk`` ops): statistics identical
+    to ``execute_ops_scalar`` on the same op stream (property-tested)."""
+    n = kinds.shape[0]
+    writes = 0
+    pos = 0
+    while pos < n:
+        end = 1 if pos == 0 else min(pos + chunk, n)
+        res = c.execute_batch(
+            kinds[pos:end], keys[pos:end],
+            values=lambda j, base=pos: f"w{base + j}")
+        writes += res.writes
+        c.advance_merge(2048)
+        pos = end
+    c.advance_merge(1 << 30)
+    return writes
 
 
 def run_workload(c: DinomoCluster, mix: str, zipf: float, n_ops: int,
                  num_keys: int = NUM_KEYS, seed: int = 0,
                  model: NetModel = DEFAULT_MODEL,
-                 warmup_frac: float = 1.0) -> RunResult:
+                 warmup_frac: float = 1.0,
+                 batched: bool = True) -> RunResult:
     w = Workload(num_keys=num_keys, zipf=zipf, mix=mix, seed=seed)
 
-    def execute(ops, count_writes=False):
-        writes = 0
-        for i, (kind, key) in enumerate(ops):
-            if kind == "read":
-                c.read(key)
-            else:
-                writes += 1
-                c.write(key, f"w{i}")
-            if i % 512 == 0:
-                c.advance_merge(2048)
-        c.advance_merge(1 << 30)
-        return writes
+    def execute(n):
+        if batched:
+            kinds, keys = w.ops_arrays(n)
+            return execute_ops_batched(c, kinds, keys)
+        return execute_ops_scalar(c, w.ops(n))
 
     # warm-up pass (the paper measures after a 1-minute warm-up)
     if warmup_frac > 0:
-        execute(w.ops(int(n_ops * warmup_frac)))
+        execute(int(n_ops * warmup_frac))
         c.reset_stats()
-    ops = w.ops(n_ops)
     t0 = time.perf_counter()
-    writes = execute(ops)
+    writes = execute(n_ops)
     dt = time.perf_counter() - t0
     s = c.aggregate_stats()
     tput = model.cluster_throughput(

@@ -32,7 +32,7 @@ def run_variant(variant, duration=300.0, seed=0):
     c.load((k, f"v{k}") for k in range(NUM_KEYS))
     w = Workload(num_keys=NUM_KEYS, zipf=0.5, mix="write_heavy_update",
                  seed=seed)
-    sim = TimedSimulation(c, w.timed, dt=2.0, sample_ops=500,
+    sim = TimedSimulation(c, w.timed_batched, dt=2.0, sample_ops=2000,
                           dataset_bytes=32e9)
 
     def offered(t):

@@ -31,16 +31,13 @@ def make_workload(seed=0):
 
     def timed(t, rng, n):
         if t < 20:
-            return lo.timed(t, rng, n)
+            return lo.timed_batched(t, rng, n)
         # zipf 2.0: ~all mass on a handful of keys
-        out = []
-        for _ in range(n):
-            if rng_hot.random() < 0.9:
-                k = hot_keys[int(rng_hot.integers(0, HOT))]
-            else:
-                k = int(rng_hot.integers(0, NUM_KEYS))
-            out.append(("write" if rng_hot.random() < 0.5 else "read", k))
-        return out
+        hot = rng_hot.random(n) < 0.9
+        keys = np.where(hot, rng_hot.integers(0, HOT, n),
+                        rng_hot.integers(0, NUM_KEYS, n)).astype(np.int64)
+        kinds = (rng_hot.random(n) < 0.5).astype(np.uint8)
+        return kinds, keys
 
     return timed
 
@@ -56,7 +53,7 @@ def run_variant(variant, duration=180.0):
                                           avg_latency_slo=1.2e-3,
                                           tail_latency_slo=16e-3))
     c.load((k, f"v{k}") for k in range(NUM_KEYS))
-    sim = TimedSimulation(c, make_workload(), dt=2.0, sample_ops=600)
+    sim = TimedSimulation(c, make_workload(), dt=2.0, sample_ops=2400)
     sim.run(duration, lambda t: 1.2e7)
     return c, sim
 

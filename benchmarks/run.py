@@ -9,6 +9,7 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+import traceback
 
 from .common import csv_line
 
@@ -82,7 +83,7 @@ def main() -> None:
     args = ap.parse_args()
 
     lines = []
-    failures = 0
+    failed: list[str] = []
     for name, fn in BENCHES:
         if args.only and args.only not in name:
             continue
@@ -92,7 +93,8 @@ def main() -> None:
             us, derived = fn(args.fast)
             lines.append(csv_line(name, us, derived))
         except Exception as e:
-            failures += 1
+            failed.append(name)
+            traceback.print_exc()
             lines.append(csv_line(name, 0.0,
                                   f"ERROR:{type(e).__name__}:{e}"))
         print(f"===== {name} done in {time.time() - t0:.0f}s =====",
@@ -101,7 +103,10 @@ def main() -> None:
     print("\n# ===== summary: name,us_per_call,derived =====")
     for line in lines:
         print(line)
-    sys.exit(1 if failures else 0)
+    if failed:
+        print(f"\nFAILED benchmarks ({len(failed)}): {', '.join(failed)}",
+              file=sys.stderr)
+    sys.exit(1 if failed else 0)
 
 
 if __name__ == "__main__":

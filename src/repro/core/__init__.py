@@ -4,8 +4,8 @@
 # accounting (the JAX/Pallas data plane lives in clht.py / log.py and
 # src/repro/kernels; the serving integration in src/repro/kvcache).
 from .cluster import (CLOVER, DINOMO, DINOMO_N, DINOMO_S, VARIANTS,
-                      DinomoCluster, VariantConfig)
-from .dac import DAC, StaticCache
+                      BatchResult, DinomoCluster, VariantConfig)
+from .dac import ArrayDAC, DAC, StaticCache
 from .dpm_pool import DPMPool
 from .hashring import HashRing, stable_hash
 from .linearizability import Op, check_history, check_key_history
@@ -15,8 +15,10 @@ from .ownership import OwnershipMap, ReconfigEvent
 from .simulate import TimedSimulation
 
 __all__ = [
-    "DinomoCluster", "VariantConfig", "DINOMO", "DINOMO_S", "DINOMO_N",
-    "CLOVER", "VARIANTS", "DAC", "StaticCache", "DPMPool", "HashRing",
+    "DinomoCluster", "VariantConfig", "BatchResult", "DINOMO",
+    "DINOMO_S", "DINOMO_N",
+    "CLOVER", "VARIANTS", "DAC", "ArrayDAC", "StaticCache", "DPMPool",
+    "HashRing",
     "stable_hash", "Op", "check_history", "check_key_history", "Action",
     "EpochStats", "PolicyConfig", "PolicyEngine", "NetModel",
     "DEFAULT_MODEL", "OwnershipMap", "ReconfigEvent", "TimedSimulation",

@@ -250,6 +250,9 @@ class NumpyCLHT:
         self.nxt = np.full((total,), -1, np.int64)
         self.overflow_head = num_buckets
         self.size = 0
+        # bumped on every mutation: batched probes prefetched against one
+        # version are only valid while the version is unchanged
+        self.version = 0
 
     def _bucket(self, key: int) -> int:
         m = 0xFFFFFFFF
@@ -273,6 +276,46 @@ class NumpyCLHT:
             b = int(self.nxt[b])
         return None, probes
 
+    def _bucket_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized ``_bucket``: identical mixing per element."""
+        m = np.uint32(0xFFFFFFFF)
+        x = (np.asarray(keys, dtype=np.int64)
+             & np.int64(0xFFFFFFFF)).astype(np.uint32)
+        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+        x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+        x = (x ^ (x >> np.uint32(16))) & m
+        return (x & np.uint32(self.num_buckets - 1)).astype(np.int64)
+
+    def lookup_batch(self, keys: np.ndarray):
+        """Vectorized chain walk over a batch of keys.
+
+        -> (ptrs, probes): int64 arrays; ptr == -1 where absent. Matches
+        ``lookup`` per element (the batched data plane's index gather).
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        n = keys.shape[0]
+        cur = self._bucket_batch(keys)
+        ptrs = np.full(n, -1, np.int64)
+        probes = np.zeros(n, np.int64)
+        active = np.ones(n, bool)
+        for _ in range(MAX_CHAIN):
+            if not active.any():
+                break
+            rows_k = self.keys[cur]                     # (n, SLOTS)
+            hit = (rows_k == keys[:, None]) & active[:, None]
+            hit_any = hit.any(axis=1)
+            probes += active
+            if hit_any.any():
+                rows_p = self.ptrs[cur]
+                # first matching slot, as in the scalar walk (insert keeps
+                # keys unique per chain, so at most one slot matches)
+                slot = np.argmax(hit, axis=1)
+                ptrs[hit_any] = rows_p[np.arange(n), slot][hit_any]
+            nxt = self.nxt[cur]
+            active = active & ~hit_any & (nxt != -1)
+            cur = np.where(active, nxt, cur)
+        return ptrs, probes
+
     def insert(self, key: int, ptr: int):
         """-> (old_ptr or None, ok)"""
         b = self._bucket(key)
@@ -283,6 +326,7 @@ class NumpyCLHT:
                 if self.keys[b, s] == key:
                     old = int(self.ptrs[b, s])
                     self.ptrs[b, s] = ptr
+                    self.version += 1
                     return old, True
                 if empty is None and self.keys[b, s] == -1:
                     empty = (b, s)
@@ -295,6 +339,7 @@ class NumpyCLHT:
             self.keys[eb, es] = key
             self.ptrs[eb, es] = ptr
             self.size += 1
+            self.version += 1
             return None, True
         if self.overflow_head < self.keys.shape[0]:
             nb = self.overflow_head
@@ -303,6 +348,7 @@ class NumpyCLHT:
             self.keys[nb, 0] = key
             self.ptrs[nb, 0] = ptr
             self.size += 1
+            self.version += 1
             return None, True
         return None, False  # overflow region exhausted
 
@@ -315,6 +361,7 @@ class NumpyCLHT:
                     self.keys[b, s] = -1
                     self.ptrs[b, s] = -1
                     self.size -= 1
+                    self.version += 1
                     return old, True
             if self.nxt[b] == -1:
                 return None, False

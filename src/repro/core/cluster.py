@@ -15,11 +15,15 @@ Four system variants share this machinery (paper Sec. 5):
 
 from __future__ import annotations
 
+import heapq
+import itertools
 import random
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
-from .dac import DAC, StaticCache, CacheStats
+import numpy as np
+
+from .dac import ArrayDAC, DAC, StaticCache, CacheStats
 from .dpm_pool import DPMPool
 from .mnode import PolicyConfig, PolicyEngine
 from .netmodel import NetModel, DEFAULT_MODEL
@@ -42,9 +46,14 @@ CLOVER = VariantConfig("clover", "clover", "shared_everything", False)
 VARIANTS = {v.name: v for v in (DINOMO, DINOMO_S, DINOMO_N, CLOVER)}
 
 
-def make_cache(policy: str, capacity_bytes: int):
+def make_cache(policy: str, capacity_bytes: int, reference: bool = False):
     if policy == "dac":
-        return DAC(capacity_bytes)
+        # array-backed DAC: decision-for-decision equivalent to the
+        # reference DAC (property-tested), built for the batched data
+        # plane. ``reference=True`` selects the unoptimized oracle --
+        # used by equivalence tests and as the bench baseline.
+        return DAC(capacity_bytes) if reference \
+            else ArrayDAC(capacity_bytes)
     if policy == "shortcut":
         return StaticCache(capacity_bytes, 0.0)
     if policy == "value":
@@ -101,15 +110,27 @@ class KNStats:
         self.writes = 0
 
 
+@dataclass
+class BatchResult:
+    """What a batched execution observed (aggregates the scalar loop
+    would have produced; per-op stats land in kn.stats / cache.stats)."""
+    executed: int                  # ops that reached a KN (incl. refused)
+    writes: int                    # write attempts among them
+    per_kn: dict[str, int]         # executed ops per KN name
+    executed_keys: np.ndarray      # keys of executed ops, in order
+    values: list | None = None     # read results iff collect_values
+
+
 class KVSNode:
     """One KN: cache + exclusive log + soft ownership state."""
 
     def __init__(self, name: str, variant: VariantConfig, cache_bytes: int,
                  pool: DPMPool, write_batch: int = 8,
-                 segcache_segments: int = 4):
+                 segcache_segments: int = 4, reference_cache: bool = False):
         self.name = name
         self.variant = variant
-        self.cache = make_cache(variant.cache_policy, cache_bytes)
+        self.cache = make_cache(variant.cache_policy, cache_bytes,
+                                reference=reference_cache)
         self.pool = pool
         self.write_batch = write_batch
         self._pending_flush = 0
@@ -149,8 +170,12 @@ class DinomoCluster:
                  model: NetModel = DEFAULT_MODEL,
                  policy: PolicyConfig | None = None,
                  num_buckets: int = 1 << 18, segment_capacity: int = 2048,
-                 vnodes: int = 64, seed: int = 0):
+                 vnodes: int = 64, seed: int = 0,
+                 reference_cache: bool = False):
         self.variant = variant
+        # reference_cache selects the unoptimized per-op DAC oracle
+        # (the batched plane then runs the fused per-op fallback)
+        self.reference_cache = reference_cache
         self.model = model
         self.value_bytes = value_bytes
         self.cache_bytes = cache_bytes
@@ -180,7 +205,8 @@ class DinomoCluster:
         name = self._new_kn_name()
         self.pool.register_kn(name)
         self.kns[name] = KVSNode(name, self.variant, self.cache_bytes,
-                                 self.pool)
+                                 self.pool,
+                                 reference_cache=self.reference_cache)
         ev = self.ownership.add_kn(name)
         cost = self._reconfigure(ev) if record else None
         return name, ev if record else None
@@ -276,7 +302,10 @@ class DinomoCluster:
             raise KeyError("no owner")
         return owners[0] if len(owners) == 1 else self.rng.choice(owners)
 
-    def read(self, key: int, kn_name: str | None = None):
+    def read(self, key: int, kn_name: str | None = None, _probe=None):
+        """``_probe``: optional (ptr_or_None, probes) pair prefetched by
+        execute_batch against the current index version -- used in place
+        of the per-key index traversal on the miss path."""
         kn_name = kn_name or self.route(key)
         kn = self.kns[kn_name]
         if not kn.available or not kn.alive:
@@ -313,7 +342,8 @@ class DinomoCluster:
                 kn.cache.fill_after_write(key, ptr, length,
                                           segment_cached=True)
             else:
-                ptr, probes = self.pool.index_lookup(key)
+                ptr, probes = (self.pool.index_lookup(key)
+                               if _probe is None else _probe)
                 rts += probes                               # index traversal
                 if ptr is None:
                     kn.stats.rts += rts
@@ -398,6 +428,538 @@ class DinomoCluster:
         kn.cache.fill(key, self.versions[key])
         kn.stats.rts += rts
         return rts, True
+
+    # ---------------------------------------------------------------------
+    # batched data plane (the tentpole of the vectorized op engine):
+    # routes a whole batch with one ring gather, classifies each op
+    # against its owner's ArrayDAC with one gather per KN, applies runs
+    # of value hits with one scatter per KN, and only drops to the exact
+    # scalar path for structural ops (writes, misses, shortcut hits,
+    # replicated keys). Produces *identical* statistics and cache
+    # decisions to calling read()/write() per op (property-tested).
+    # ---------------------------------------------------------------------
+    def execute_batch(self, kinds, keys, *, value=None, values=None,
+                      blocked_kns=(), collect_values: bool = False
+                      ) -> "BatchResult":
+        """Execute a batch of operations in submission order.
+
+        kinds: (N,) array, 0 == read, nonzero == write
+        keys:  (N,) int array
+        value/values: write payloads (constant, sequence, or callable)
+        blocked_kns: KN names whose ops are dropped before execution
+            (the timed simulation's outage windows)
+        collect_values: materialize read results (costs a python pass)
+        """
+        keys = np.ascontiguousarray(np.asarray(keys, dtype=np.int64))
+        kinds = np.asarray(kinds, dtype=np.uint8)
+        n = keys.shape[0]
+        out_values: list | None = [None] * n if collect_values else None
+        if n == 0 or not self.kns:
+            return BatchResult(0, 0, {}, keys[:0], out_values)
+        if self.variant.architecture == "shared_everything" or not all(
+                isinstance(k.cache, ArrayDAC) for k in self.kns.values()):
+            # clover routes through the client rng and the static caches
+            # have no vectorized plane: run the fused scalar loop (same
+            # per-op semantics, without the simulator-level overhead)
+            return self._execute_batch_fused(kinds, keys, value, values,
+                                             blocked_kns, out_values)
+
+        names = list(self.kns.keys())
+        name_idx = {nm: j for j, nm in enumerate(names)}
+
+        # ----- vectorized routing over the ownership ring ------------------
+        ring_ids, ring_names = self.ownership.primary_ids(keys)
+        ring_to_kn = np.array([name_idx.get(nm, -1) for nm in ring_names],
+                              dtype=np.int64)
+        kn_ids = ring_to_kn[ring_ids]
+        rep_arr = self.ownership.replicated_keys_array()
+        if rep_arr.size:
+            rep_mask = np.isin(keys, rep_arr)
+            for p in np.nonzero(rep_mask)[0]:
+                try:   # replicated keys draw a random owner, as scalar
+                    kn_ids[p] = name_idx[self.route(int(keys[p]))]
+                except KeyError:
+                    kn_ids[p] = -1
+        else:
+            rep_mask = np.zeros(n, bool)
+
+        # ----- availability masks ------------------------------------------
+        blocked = np.zeros(len(names), bool)
+        for nm in blocked_kns:
+            j = name_idx.get(nm)
+            if j is not None:
+                blocked[j] = True
+        refusing = np.array([not (self.kns[nm].alive
+                                  and self.kns[nm].available)
+                             for nm in names], bool)
+        safe_ids = np.maximum(kn_ids, 0)
+        exec_mask = (kn_ids >= 0) & ~blocked[safe_ids]
+        refused_mask = exec_mask & refusing[safe_ids]
+        live = exec_mask & ~refused_mask
+        rcnt = np.bincount(kn_ids[refused_mask], minlength=len(names))
+        for j in np.nonzero(rcnt)[0]:
+            self.kns[names[j]].stats.refused += int(rcnt[j])
+
+        # ----- prefetch index probes for the predicted misses ---------------
+        # (one vectorized CLHT gather replaces per-key chain walks; each
+        # use re-checks the metadata version so mid-batch merges fall
+        # back to the live per-key traversal)
+        probe_map: dict[int, tuple] = {}
+        probe_ver = -1
+        reads_m = live & (kinds == 0) & ~rep_mask
+        all_reads = bool(reads_m[live].all()) if live.any() else False
+        value_run_kns = []       # (kn, grp, kcls): vectorized hit runs
+        for grp in self._kn_groups(np.nonzero(live)[0], kn_ids):
+            cache = self.kns[names[int(kn_ids[grp[0]])]].cache
+            # grow the per-key vectors up front: the fused loop caches
+            # bound accessors, so the arrays must not move mid-batch
+            cache._ensure(int(keys[grp].max()))
+            rsub = grp[reads_m[grp]]
+            if not rsub.size:
+                continue
+            kcls = cache.kind[keys[rsub]]
+            pm_pos = rsub[kcls == ArrayDAC.KIND_NONE]
+            if pm_pos.size:
+                pptr, pprob = self.pool.index_lookup_batch(keys[pm_pos])
+                for p, pp_, pb in zip(pm_pos.tolist(), pptr.tolist(),
+                                      pprob.tolist()):
+                    probe_map[p] = (None if pp_ < 0 else pp_, pb)
+                probe_ver = self.pool.meta_version
+            # a read-only batch whose predicted non-value-hit fraction
+            # is tiny (high-skew warm caches): apply long vectorized
+            # value-hit runs instead of the per-op interpreter. Safe:
+            # reads of one KN only interact through that KN's cache,
+            # and each run is re-validated against the live entry kinds
+            # before being applied.
+            if all_reads and rsub.size == grp.size and \
+                    rsub.size >= 256 and \
+                    int((kcls != ArrayDAC.KIND_VALUE).sum()) \
+                    <= rsub.size // 20:
+                value_run_kns.append((names[int(kn_ids[grp[0]])], grp,
+                                      kcls))
+                live[grp] = False
+
+        for nm, grp, kcls in value_run_kns:
+            self._apply_value_runs(self.kns[nm], grp, kcls, keys,
+                                   probe_map, probe_ver, out_values)
+
+        # ----- fused interpreter over the live ops, in global order ---------
+        writes = self._run_fused_ops(np.nonzero(live)[0], keys, kinds,
+                                     kn_ids, rep_mask, names, value,
+                                     values, probe_map, probe_ver,
+                                     out_values)
+
+        cnt = np.bincount(kn_ids[exec_mask], minlength=len(names))
+        per_kn = {names[j]: int(cnt[j]) for j in np.nonzero(cnt)[0]}
+        # scalar loops count refused writes too (the write() call refuses
+        # after the attempt is recorded by the driver)
+        writes += int((kinds[refused_mask] != 0).sum())
+        return BatchResult(int(exec_mask.sum()), writes, per_kn,
+                           keys[exec_mask], out_values)
+
+    def _run_fused_ops(self, live_pos, keys, kinds, kn_ids, rep_mask,
+                       names, value, values, probe_map, probe_ver,
+                       out_values) -> int:
+        """One pass over the batch in submission order, with every op
+        inlined against its owner KN's array-backed cache.
+
+        Value hits are three list writes; always-promoting shortcut
+        hits (Eq. 1 with free space or free victims -- the common case
+        on warm zipfian caches) run an inlined promote-and-demote
+        transition over the same lazy heaps; undecided promotions,
+        misses, writes and replicated keys drop to the exact library
+        methods, with the per-KN state mirrors synced around the call.
+        Misses consume the batched index-probe prefetch (re-validated
+        against the pool's metadata version). Per-KN statistics
+        accumulate in context slots and are applied once at the end.
+        The result is operation-for-operation identical to calling
+        read()/write() per op (property-tested), minus the per-op
+        routing and dispatch overhead.
+
+        ctx slots: 0 kn, 1 cache, 2 count, 3 stamp, 4 kind.item,
+        5 ptr, 6 clock, 7 value_hits, 8 misses, 9 rts, 10 unused,
+        11 unused, 12 writes, 13 stalls, 14 length, 15 kind array,
+        16 used, 17 zero_shortcuts, 18 nvals, 19 nshort,
+        20 shortcut_hits, 21 promotions, 22 demotions, 23 evictions,
+        24 lru heap, 25 lfu heap, 26 capacity, 27 pending mutation
+        bumps (flushed to cache.mutations by sync)
+        """
+        pool = self.pool
+        heap = pool.heap_val
+        heap_len = pool.heap_len
+        versions = self.versions
+        vbytes = self.value_bytes
+        collect = out_values is not None
+        heappush, heappop = heapq.heappush, heapq.heappop
+        ctxs = []
+        for nm in names:
+            kn = self.kns[nm]
+            c = kn.cache
+            ctxs.append([kn, c, c.count, c.stamp, c.kind.item, c.ptr,
+                         c._clock, 0, 0, 0.0, 0, 0, 0, 0,
+                         c.length, c.kind, c.used, c._zero_shortcuts,
+                         c._nvals, c._nshort, 0, 0, 0, 0,
+                         c._lru, c._lfu, c.capacity, 0])
+
+        def sync(ctx):
+            c = ctx[1]
+            c._clock = ctx[6]
+            c.used = ctx[16]
+            c._zero_shortcuts = ctx[17]
+            c._nvals = ctx[18]
+            c._nshort = ctx[19]
+            if ctx[27]:
+                c.mutations += ctx[27]
+                ctx[27] = 0
+
+        def reload(ctx):
+            c = ctx[1]
+            ctx[6] = c._clock
+            ctx[16] = c.used
+            ctx[17] = c._zero_shortcuts
+            ctx[18] = c._nvals
+            ctx[19] = c._nshort
+            ctx[24] = c._lru
+            ctx[25] = c._lfu
+
+        # the inline transitions must keep cache.mutations observable
+        # (the Eq. 1 victim-sum cache keys on it), so promotions /
+        # demotions / evictions bump it inside the loop via ctx[1]
+        pos_l = live_pos.tolist()
+        key_l = keys[live_pos].tolist()
+        op_l = kinds[live_pos].tolist()
+        kn_l = kn_ids[live_pos].tolist()
+        if rep_mask.any():
+            rep_l = rep_mask[live_pos].tolist()
+        else:
+            rep_l = itertools.repeat(False)
+        writes = 0
+        seq = 0
+        for p_, k, op, j, rep in zip(pos_l, key_l, op_l, kn_l, rep_l):
+            ctx = ctxs[j]
+            if rep:
+                # replicated keys: exact generic path (indirection RTs,
+                # CAS publication)
+                kn = ctx[0]
+                sync(ctx)
+                if op == 0:
+                    r = self.read(k, kn.name)
+                    if collect:
+                        out_values[p_] = r[0]
+                else:
+                    writes += 1
+                    self.write(k, self._value_at(p_, value, values),
+                               kn.name)
+                reload(ctx)
+                continue
+            if op == 0:
+                kd = ctx[4](k)
+                if kd == 2:                                  # value hit
+                    ctx[2][k] += 1
+                    ctx[3][k] = ctx[6]
+                    ctx[6] += 1
+                    ctx[7] += 1                              # value_hits
+                    if collect:
+                        out_values[p_] = heap[ctx[5][k]]
+                elif kd == 1:                                # shortcut hit
+                    cnt = ctx[2]
+                    c = cnt[k] + 1
+                    cnt[k] = c
+                    if c == 1:
+                        ctx[17] -= 1
+                    ctx[20] += 1                             # shortcut_hits
+                    ctx[9] += 1.0          # one-sided pointer chase
+                    if collect:
+                        out_values[p_] = heap[ctx[5][k]]
+                    # Eq. 1 fast decision (exact: sufficient conditions)
+                    lenl = ctx[14]
+                    vb = lenl[k] + 40      # VALUE_OVERHEAD_BYTES
+                    used = ctx[16]
+                    free = ctx[26] - used
+                    if free >= vb - 32:
+                        promote = True
+                    elif ctx[17] >= -((free - vb + 32) // 32):
+                        promote = True     # victims all free: Eq.1 rhs 0
+                    else:
+                        promote = None     # undecided: exact slow path
+                    if promote is None:
+                        cache = ctx[1]
+                        sync(ctx)
+                        if cache._should_promote(k, c, lenl[k]):
+                            cache._promote(k)
+                            cache.stats.promotions += 1
+                        reload(ctx)
+                        continue
+                    # ---- inline promote: shortcut -> value (Table 3) --
+                    ctx[21] += 1                             # promotions
+                    ctx[27] += 1                             # a mutation
+                    kind_a = ctx[15]
+                    kind_a[k] = 0
+                    used -= 32
+                    ctx[19] -= 1                             # nshort
+                    cap = ctx[26]
+                    stp = ctx[3]
+                    # make space: demote LRU values, then evict LFU
+                    if used + vb > cap:
+                        lru = ctx[24]
+                        nvals = ctx[18]
+                        while used + vb > cap and nvals:
+                            if len(lru) > 4 * nvals + 64:
+                                cache = ctx[1]
+                                cache._compact_lru()
+                                lru = cache._lru
+                                ctx[24] = lru
+                            v = None
+                            while lru:
+                                st_, kk = heappop(lru)
+                                if kind_a[kk] != 2:
+                                    continue           # stale: drop
+                                cur = stp[kk]
+                                if cur != st_:
+                                    heappush(lru, (cur, kk))  # refresh
+                                    continue
+                                v = kk
+                                break
+                            if v is None:
+                                break
+                            used -= lenl[v] + 40
+                            nvals -= 1
+                            kind_a[v] = 0
+                            ctx[22] += 1                     # demotions
+                            if used + 32 + vb <= cap:
+                                kind_a[v] = 1
+                                heappush(ctx[25], (cnt[v], v))
+                                used += 32
+                                ctx[19] += 1
+                                if cnt[v] == 0:
+                                    ctx[17] += 1
+                        ctx[18] = nvals
+                        while used + vb > cap and ctx[19]:
+                            lfu = ctx[25]
+                            if len(lfu) > 4 * ctx[19] + 64:
+                                cache = ctx[1]
+                                cache._compact_lfu()
+                                lfu = cache._lfu
+                                ctx[25] = lfu
+                            v = None
+                            while lfu:
+                                ct_, kk = heappop(lfu)
+                                if kind_a[kk] != 1:
+                                    continue
+                                cur = cnt[kk]
+                                if cur != ct_:
+                                    heappush(lfu, (cur, kk))
+                                    continue
+                                v = kk
+                                break
+                            if v is None:
+                                break
+                            kind_a[v] = 0
+                            used -= 32
+                            ctx[19] -= 1
+                            if cnt[v] == 0:
+                                ctx[17] -= 1
+                            ctx[23] += 1                     # evictions
+                    if used + vb > cap:
+                        # degenerate: cannot fit the value even after
+                        # demotions/evictions -> falls back to a
+                        # shortcut entry, exactly as _insert_value
+                        if used + 32 <= cap:
+                            kind_a[k] = 1
+                            heappush(ctx[25], (c, k))
+                            used += 32
+                            ctx[19] += 1
+                    else:
+                        kind_a[k] = 2
+                        clock = ctx[6]
+                        stp[k] = clock
+                        heappush(ctx[24], (clock, k))
+                        ctx[6] = clock + 1
+                        used += vb
+                        ctx[18] += 1
+                    ctx[16] = used
+                else:                                        # miss
+                    ctx[8] += 1                              # misses
+                    kn = ctx[0]
+                    cache = ctx[1]
+                    seg = kn.segcache.get(k)
+                    if seg is not None:
+                        ptr, length = seg    # local segment: 0 RTs
+                        sync(ctx)
+                        cache.fill_after_write(k, ptr, length,
+                                               segment_cached=True)
+                        reload(ctx)
+                        if collect:
+                            out_values[p_] = heap[ptr]
+                    else:
+                        probe = None
+                        if probe_ver == pool.meta_version:
+                            probe = probe_map.get(p_)
+                        ptr, probes = (pool.index_lookup(k)
+                                       if probe is None else probe)
+                        if ptr is None:
+                            ctx[9] += probes
+                        else:
+                            rts_op = probes + 1.0   # traversal + value
+                            ctx[9] += rts_op
+                            cache.note_miss_rts(rts_op)
+                            sync(ctx)
+                            cache.fill_after_miss(k, ptr, heap_len[ptr])
+                            reload(ctx)
+                            if collect:
+                                out_values[p_] = heap[ptr]
+            else:                                            # write
+                writes += 1
+                seq += 1
+                ctx[12] += 1                                 # writes
+                kn = ctx[0]
+                pf = kn._pending_flush + 1   # amortized batched log write
+                if pf >= kn.write_batch:
+                    kn._pending_flush = 0
+                    ctx[9] += 1.0
+                else:
+                    kn._pending_flush = pf
+                nm = kn.name
+                ptr, _rot = pool.log_write(
+                    nm, k, self._value_at(p_, value, values), vbytes)
+                if pool.write_blocked(nm):
+                    ctx[13] += 1                             # write_stalls
+                    pool.merge_budget(pool.segment_capacity)
+                kn._segcache_put(k, ptr, vbytes)
+                cache = ctx[1]
+                sync(ctx)
+                cache.fill_after_write(k, ptr, vbytes, segment_cached=True)
+                reload(ctx)
+                versions[k] = versions.get(k, 0) + 1
+        self._seq += seq
+        for ctx in ctxs:
+            kn, cache = ctx[0], ctx[1]
+            sync(ctx)
+            cs = cache.stats
+            cs.value_hits += ctx[7]
+            cs.misses += ctx[8]
+            cs.shortcut_hits += ctx[20]
+            cs.promotions += ctx[21]
+            cs.demotions += ctx[22]
+            cs.evictions += ctx[23]
+            kn.stats.rts += ctx[9]
+            reads = ctx[7] + ctx[20] + ctx[8]
+            kn.stats.ops += reads + ctx[12]
+            kn.stats.reads += reads
+            kn.stats.writes += ctx[12]
+            kn.stats.write_stalls += ctx[13]
+        return writes
+
+    def _apply_value_runs(self, kn, grp, kcls, keys, probe_map,
+                          probe_ver, out_values) -> None:
+        """One KN's read-only ops, almost all predicted value hits:
+        bulk-apply the hit runs between the (few) predicted structural
+        reads, which take the exact generic path."""
+        cur = 0
+        for sl in np.nonzero(kcls != ArrayDAC.KIND_VALUE)[0].tolist():
+            if sl > cur:
+                self._bulk_value_run(kn, grp[cur:sl], keys, out_values)
+            p = int(grp[sl])
+            probe = None
+            if probe_ver == self.pool.meta_version:
+                probe = probe_map.get(p)
+            r = self.read(int(keys[p]), kn.name, _probe=probe)
+            if out_values is not None:
+                out_values[p] = r[0]
+            cur = sl + 1
+        if cur < grp.shape[0]:
+            self._bulk_value_run(kn, grp[cur:], keys, out_values)
+
+    def _bulk_value_run(self, kn, pos, keys, out_values) -> None:
+        """Apply a run of predicted value hits, re-validating against
+        the live cache (an earlier structural read may have demoted or
+        evicted a key); mispredictions take the exact scalar path in
+        order."""
+        cache = kn.cache
+        while pos.size:
+            ck = keys[pos]
+            ok = cache.kind[ck] == ArrayDAC.KIND_VALUE
+            if ok.all():
+                b = pos.size
+            else:
+                b = int(np.argmax(~ok))
+            if b:
+                cache.bulk_value_hits(ck[:b])
+                kn.stats.ops += b
+                kn.stats.reads += b
+                if out_values is not None:
+                    ptr_l = cache.ptr
+                    heap = self.pool.heap_val
+                    for p, k in zip(pos[:b].tolist(), ck[:b].tolist()):
+                        out_values[p] = heap[ptr_l[k]]
+            if b == pos.size:
+                return
+            p = int(pos[b])
+            r = self.read(int(keys[p]), kn.name)
+            if out_values is not None:
+                out_values[p] = r[0]
+            pos = pos[b + 1:]
+
+    @staticmethod
+    def _kn_groups(pos: np.ndarray, kn_ids: np.ndarray):
+        """Split sorted global positions into per-KN groups (each group
+        keeps ascending op order)."""
+        if not pos.size:
+            return
+        ids = kn_ids[pos]
+        order = np.argsort(ids, kind="stable")
+        sp = pos[order]
+        bounds = np.nonzero(np.diff(ids[order]))[0] + 1
+        yield from np.split(sp, bounds)
+
+    def _execute_batch_fused(self, kinds, keys, value, values, blocked_kns,
+                             out_values):
+        blocked = set(blocked_kns)
+        per_kn: dict[str, int] = {}
+        writes = 0
+        exec_idx = []
+        read, write, route = self.read, self.write, self.route
+        for i in range(keys.shape[0]):
+            key = int(keys[i])
+            try:
+                kn = route(key)
+            except KeyError:
+                continue
+            if kn in blocked:
+                continue
+            exec_idx.append(i)
+            per_kn[kn] = per_kn.get(kn, 0) + 1
+            if kinds[i] == 0:
+                r = read(key, kn)
+                if out_values is not None:
+                    out_values[i] = r[0]
+            else:
+                writes += 1
+                write(key, self._value_at(i, value, values), kn)
+        idx = np.asarray(exec_idx, dtype=np.int64)
+        return BatchResult(len(exec_idx), writes, per_kn, keys[idx],
+                           out_values)
+
+    @staticmethod
+    def _value_at(i: int, value, values):
+        if values is None:
+            return value
+        if callable(values):
+            return values(i)
+        return values[i]
+
+    def batch_read(self, keys, collect_values: bool = True):
+        """Batched read entry point: returns (values, result)."""
+        keys = np.asarray(keys, dtype=np.int64)
+        res = self.execute_batch(np.zeros(keys.shape[0], np.uint8), keys,
+                                 collect_values=collect_values)
+        return res.values, res
+
+    def batch_write(self, keys, values):
+        """Batched write entry point: returns the BatchResult."""
+        keys = np.asarray(keys, dtype=np.int64)
+        return self.execute_batch(np.ones(keys.shape[0], np.uint8), keys,
+                                  values=values)
 
     # ---------------------------------------------------------------------
     # background work + bookkeeping

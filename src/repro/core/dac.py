@@ -25,6 +25,8 @@ import heapq
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
+import numpy as np
+
 # Entry overheads (bytes): key + pointer + length (+ access count for values)
 SHORTCUT_BYTES = 32
 VALUE_OVERHEAD_BYTES = 40
@@ -246,6 +248,7 @@ class DAC:
         pop/validate/push-back, O(n log H) -- never a full sort)."""
         popped = []
         out = []
+        seen = set()
         while self._lfu and len(out) < n:
             cnt, k = heapq.heappop(self._lfu)
             ent = self.shortcuts.get(k)
@@ -255,7 +258,10 @@ class DAC:
                 heapq.heappush(self._lfu, (ent.count, k))  # refresh
                 continue
             popped.append((cnt, k))
-            if k != exclude:
+            # a re-inserted key can leave two identical live records;
+            # count each victim once or Eq. 1 double-bills its evictions
+            if k != exclude and k not in seen:
+                seen.add(k)
                 out.append((cnt, k))
         for item in popped:
             heapq.heappush(self._lfu, item)
@@ -282,6 +288,411 @@ class DAC:
         self.used -= SHORTCUT_BYTES
         # inherits access count (paper Sec. 4)
         self._insert_value(key, ent.ptr, ent.length, count=ent.count)
+
+
+class ArrayDAC:
+    """Array-backed DAC: the batched data plane's cache.
+
+    Same policy as ``DAC``, decision-for-decision (property-tested): the
+    difference is representation. Entries live in dense numpy vectors
+    indexed *by key* -- kind (0 absent / 1 shortcut / 2 value), pointer,
+    length, frequency (``count``) and recency (``stamp``, a monotonic
+    clock equal to OrderedDict move-to-end order) -- so a whole batch of
+    operations can be classified with one gather and a run of value hits
+    applied with one scatter-add (see ``classify_batch`` /
+    ``bulk_value_hits``). LRU/LFU victim selection uses the same lazy
+    heaps as the scalar DAC: argmin (stamp, key) over values == LRU
+    order, argmin (count, key) over shortcuts == LFU order.
+
+    The scalar per-op interface is kept in full so this class is a
+    drop-in replacement anywhere a ``DAC`` is used.
+    """
+
+    KIND_NONE, KIND_SHORTCUT, KIND_VALUE = 0, 1, 2
+
+    def __init__(self, capacity_bytes: int, avg_miss_rts_init: float = 2.0,
+                 ema: float = 0.05, initial_keys: int = 1024):
+        self.capacity = capacity_bytes
+        self.used = 0
+        self.avg_miss_rts = avg_miss_rts_init
+        self.avg_shortcut_hit_rts = 1.0
+        self._ema = ema
+        self.stats = CacheStats()
+        n = max(initial_keys, 8)
+        # ``kind`` is numpy so a whole batch classifies with one gather;
+        # the other per-key vectors are python lists: the structural
+        # paths touch them one key at a time, and list indexing is ~4x
+        # cheaper than numpy scalar indexing (measured; it dominates
+        # the scalar op cost otherwise). ``counts_array`` / # ``stamps_array`` expose numpy views on demand.
+        self.kind = np.zeros(n, np.int8)
+        self.ptr = [-1] * n
+        self.length = [0] * n
+        self.count = [0] * n
+        self.stamp = [0] * n
+        self._clock = 1
+        self._lru: list[tuple[int, int]] = []   # lazy heap (stamp, key)
+        self._lfu: list[tuple[int, int]] = []   # lazy heap (count, key)
+        self._nvals = 0
+        self._nshort = 0
+        # bumped whenever membership / kinds / used change: the batch
+        # engine's promotion screen is valid while this is unchanged
+        self.mutations = 0
+        self._screen_cache: tuple[int, dict] = (-1, {})
+        self._zero_shortcuts = 0   # live shortcuts with count == 0
+
+    # ----- sizes -----------------------------------------------------------
+    value_bytes = staticmethod(DAC.value_bytes)
+
+    def _ensure(self, key: int) -> None:
+        n = self.kind.shape[0]
+        if key < n:
+            return
+        m = max(2 * n, key + 1)
+        self.kind = np.concatenate(
+            [self.kind, np.zeros(m - n, np.int8)])
+        self.ptr.extend([-1] * (m - n))
+        self.length.extend([0] * (m - n))
+        self.count.extend([0] * (m - n))
+        self.stamp.extend([0] * (m - n))
+
+    # ----- public per-op API (mirrors DAC) ---------------------------------
+    def lookup(self, key: int):
+        self._ensure(key)
+        kd = self.kind[key]
+        if kd == self.KIND_VALUE:
+            c = self.count[key] + 1
+            self.count[key] = c
+            self.stamp[key] = self._clock
+            self._clock += 1
+            self.stats.value_hits += 1
+            return ("value", self.ptr[key], self.length[key])
+        if kd == self.KIND_SHORTCUT:
+            c = self.count[key] + 1
+            self.count[key] = c
+            if c == 1:
+                self._zero_shortcuts -= 1
+            self.stats.shortcut_hits += 1
+            p, ln = self.ptr[key], self.length[key]
+            if self._should_promote(key, c, ln):
+                self._promote(key)
+                self.stats.promotions += 1
+            return ("shortcut", p, ln)
+        self.stats.misses += 1
+        return None
+
+    def note_miss_rts(self, rts: float) -> None:
+        self.avg_miss_rts += self._ema * (rts - self.avg_miss_rts)
+
+    def fill_after_miss(self, key: int, ptr: int, length: int) -> None:
+        self._ensure(key)
+        if self.used + self.value_bytes(length) <= self.capacity:
+            self._insert_value(key, ptr, length, count=1)
+        else:
+            self._insert_shortcut(key, ptr, length, count=1)
+
+    def fill_after_write(self, key: int, ptr: int, length: int,
+                         segment_cached: bool) -> None:
+        self._ensure(key)
+        prior = self._remove(key)
+        cnt = prior[2] if prior else 0
+        if segment_cached and \
+                self.used + self.value_bytes(length) <= self.capacity:
+            self._insert_value(key, ptr, length, count=cnt)
+        else:
+            self._insert_shortcut(key, ptr, length, count=cnt)
+
+    def invalidate(self, key: int) -> None:
+        self._ensure(key)
+        self._remove(key)
+
+    def demote_to_shortcut(self, key: int) -> None:
+        self._ensure(key)
+        if self.kind[key] == self.KIND_VALUE:
+            p, ln, cnt = self.ptr[key], self.length[key], self.count[key]
+            self.kind[key] = self.KIND_NONE
+            self.used -= self.value_bytes(ln)
+            self._nvals -= 1
+            self.mutations += 1
+            self._insert_shortcut(key, p, ln, count=cnt)
+
+    def update_pointer(self, key: int, ptr: int, length: int) -> None:
+        self._ensure(key)
+        kd = self.kind[key]
+        if kd == self.KIND_NONE:
+            return
+        delta = length - self.length[key]
+        if kd == self.KIND_VALUE:
+            if self.used + delta > self.capacity:
+                self.demote_to_shortcut(key)
+                self.update_pointer(key, ptr, length)
+                return
+            self.used += delta
+            self.mutations += 1
+        self.ptr[key] = ptr
+        self.length[key] = length
+
+    def clear(self) -> None:
+        n = self.kind.shape[0]
+        self.kind[:] = 0
+        self.count[:] = [0] * n
+        self.stamp[:] = [0] * n
+        self._lru.clear()
+        self._lfu.clear()
+        self.used = 0
+        self._nvals = 0
+        self._nshort = 0
+        self._zero_shortcuts = 0
+        self.mutations += 1
+
+    def __contains__(self, key: int) -> bool:
+        return key < self.kind.shape[0] and self.kind[key] != 0
+
+    @property
+    def num_values(self) -> int:
+        return self._nvals
+
+    @property
+    def num_shortcuts(self) -> int:
+        return self._nshort
+
+    def bulk_value_hits(self, keys: np.ndarray) -> None:
+        """Apply a run of value hits whose every key is (still) a value
+        entry: frequency += multiplicity, recency = clock at the key's
+        last position in the run -- exactly what per-op lookups do."""
+        n = keys.shape[0]
+        cnt, stp, c0 = self.count, self.stamp, self._clock
+        if n > 48:
+            u, ridx, mult = np.unique(keys[::-1], return_index=True,
+                                      return_counts=True)
+            for k, r, m in zip(u.tolist(), ridx.tolist(), mult.tolist()):
+                cnt[k] += m
+                stp[k] = c0 + (n - 1 - r)
+        else:
+            for i, k in enumerate(keys.tolist()):
+                cnt[k] += 1
+                stp[k] = c0 + i
+        self._clock += n
+        self.stats.value_hits += n
+
+    def counts_array(self) -> np.ndarray:
+        """Frequency vector as numpy (copy; for analysis/tests)."""
+        return np.asarray(self.count, dtype=np.int64)
+
+    def stamps_array(self) -> np.ndarray:
+        """Recency vector as numpy (copy; for analysis/tests)."""
+        return np.asarray(self.stamp, dtype=np.int64)
+
+    # ----- batched API ------------------------------------------------------
+    def classify_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Gather entry kinds for a batch: 0 absent, 1 shortcut, 2 value."""
+        if keys.size:
+            self._ensure(int(keys.max()))
+        return self.kind[keys]
+
+    def _lfu_prefix(self, n: int):
+        """(sum of the n cheapest live shortcut counts, enough-victims
+        flag), cached until the next structural mutation."""
+        if self._screen_cache[0] != self.mutations:
+            self._screen_cache = (self.mutations, {})
+        d = self._screen_cache[1]
+        if n not in d:
+            if self._zero_shortcuts >= n:
+                d[n] = (0, True)       # n cheapest victims are all free
+            else:
+                victims = self._peek_lfu(n, exclude=-1)
+                d[n] = (sum(c for c, _ in victims), len(victims) >= n)
+        return d[n]
+
+    # ----- internals --------------------------------------------------------
+    def _remove(self, key: int):
+        kd = self.kind[key]
+        if kd == self.KIND_NONE:
+            return None
+        out = (self.ptr[key], self.length[key], self.count[key])
+        self.mutations += 1
+        if kd == self.KIND_VALUE:
+            self.used -= self.value_bytes(out[1])
+            self._nvals -= 1
+        else:
+            self.used -= SHORTCUT_BYTES
+            self._nshort -= 1
+            if out[2] == 0:
+                self._zero_shortcuts -= 1
+        self.kind[key] = self.KIND_NONE
+        return out
+
+    def _insert_value(self, key: int, ptr: int, length: int,
+                      count: int) -> None:
+        self._remove(key)
+        need = self.value_bytes(length)
+        self._make_space(need)
+        if self.used + need > self.capacity:
+            self._insert_shortcut(key, ptr, length, count)
+            return
+        self.mutations += 1
+        self.kind[key] = self.KIND_VALUE
+        self.ptr[key] = ptr
+        self.length[key] = length
+        self.count[key] = count
+        self.stamp[key] = self._clock
+        heapq.heappush(self._lru, (self._clock, key))
+        self._clock += 1
+        self.used += need
+        self._nvals += 1
+
+    def _insert_shortcut(self, key: int, ptr: int, length: int,
+                         count: int) -> None:
+        self._remove(key)
+        self._make_space(SHORTCUT_BYTES)
+        if self.used + SHORTCUT_BYTES > self.capacity:
+            return  # cache smaller than one entry: degenerate, skip
+        self.mutations += 1
+        self.kind[key] = self.KIND_SHORTCUT
+        self.ptr[key] = ptr
+        self.length[key] = length
+        self.count[key] = count
+        heapq.heappush(self._lfu, (count, key))
+        self.used += SHORTCUT_BYTES
+        self._nshort += 1
+        if count == 0:
+            self._zero_shortcuts += 1
+
+    def _compact_lru(self) -> None:
+        """Rebuild the LRU heap with one live record per value entry.
+        Pure optimization: lazy pops return argmin (stamp, key) of the
+        live entries regardless of stale records, but workloads that
+        refresh every hot stamp per batch otherwise bloat the heap."""
+        stp = self.stamp
+        self._lru = [(stp[k], k) for k in
+                     np.nonzero(self.kind == self.KIND_VALUE)[0].tolist()]
+        heapq.heapify(self._lru)
+
+    def _compact_lfu(self) -> None:
+        cnt = self.count
+        self._lfu = [(cnt[k], k) for k in
+                     np.nonzero(self.kind == self.KIND_SHORTCUT)[0]
+                     .tolist()]
+        heapq.heapify(self._lfu)
+
+    def _pop_lru(self) -> int | None:
+        """Pop the least-recently-used *live* value key."""
+        if len(self._lru) > 4 * self._nvals + 64:
+            self._compact_lru()
+        while self._lru:
+            st, k = heapq.heappop(self._lru)
+            if self.kind[k] != self.KIND_VALUE:
+                continue                          # stale record: drop
+            cur = self.stamp[k]
+            if cur != st:
+                heapq.heappush(self._lru, (cur, k))   # refresh
+                continue
+            return k
+        return None
+
+    def _make_space(self, need: int) -> None:
+        """Demote LRU values first, then evict LFU shortcuts (Table 3)."""
+        while self.used + need > self.capacity and self._nvals:
+            k = self._pop_lru()
+            if k is None:
+                break
+            ln = self.length[k]
+            self.used -= self.value_bytes(ln)
+            self._nvals -= 1
+            self.kind[k] = self.KIND_NONE
+            self.mutations += 1
+            self.stats.demotions += 1
+            if self.used + SHORTCUT_BYTES + need <= self.capacity:
+                self.kind[k] = self.KIND_SHORTCUT
+                heapq.heappush(self._lfu, (self.count[k], k))
+                self.used += SHORTCUT_BYTES
+                self._nshort += 1
+                if self.count[k] == 0:
+                    self._zero_shortcuts += 1
+        while self.used + need > self.capacity and self._nshort:
+            k = self._pop_lfu()
+            if k is None:
+                break
+            self.kind[k] = self.KIND_NONE
+            self.used -= SHORTCUT_BYTES
+            self._nshort -= 1
+            if self.count[k] == 0:
+                self._zero_shortcuts -= 1
+            self.mutations += 1
+            self.stats.evictions += 1
+
+    def _pop_lfu(self) -> int | None:
+        """Pop the least-frequently-used *live* shortcut key."""
+        if len(self._lfu) > 4 * self._nshort + 64:
+            self._compact_lfu()
+        while self._lfu:
+            cnt, k = heapq.heappop(self._lfu)
+            if self.kind[k] != self.KIND_SHORTCUT:
+                continue                          # stale record: drop
+            cur = self.count[k]
+            if cur != cnt:
+                heapq.heappush(self._lfu, (cur, k))   # refresh
+                continue
+            return k
+        return None
+
+    def _peek_lfu(self, n: int, exclude: int):
+        """Up-to-n least-frequently-used live shortcuts, dedup'd, in
+        (count, key) order -- identical to DAC._peek_lfu."""
+        if len(self._lfu) > 4 * self._nshort + 64:
+            self._compact_lfu()
+        popped = []
+        out = []
+        seen = set()
+        while self._lfu and len(out) < n:
+            cnt, k = heapq.heappop(self._lfu)
+            if self.kind[k] != self.KIND_SHORTCUT:
+                continue
+            cur = self.count[k]
+            if cur != cnt:
+                heapq.heappush(self._lfu, (cur, k))
+                continue
+            popped.append((cnt, k))
+            if k != exclude and k not in seen:
+                seen.add(k)
+                out.append((cnt, k))
+        for item in popped:
+            heapq.heappush(self._lfu, item)
+        return out
+
+    def _should_promote(self, key: int, cnt: int, length: int) -> bool:
+        """Eq. 1, exactly as DAC._should_promote."""
+        need = self.value_bytes(length) - SHORTCUT_BYTES
+        free = self.capacity - self.used
+        if free >= need:
+            return True
+        deficit = need - free
+        n_evict = -(-deficit // SHORTCUT_BYTES)     # ceil
+        if self._zero_shortcuts >= n_evict:
+            # enough never-hit shortcuts: eviction is free (Eq. 1 rhs 0)
+            return True
+        saving = cnt * self.avg_shortcut_hit_rts
+        total, enough = self._lfu_prefix(n_evict)
+        if not enough:
+            return False
+        if saving < total * self.avg_miss_rts:
+            # the cached victim-sum only underestimates the true cost
+            return False
+        victims = self._peek_lfu(n_evict, exclude=key)
+        if len(victims) < n_evict:
+            return False
+        evict_cost = sum(c for c, _ in victims) * self.avg_miss_rts
+        return saving >= evict_cost
+
+    def _promote(self, key: int) -> None:
+        p, ln, cnt = self.ptr[key], self.length[key], self.count[key]
+        self.kind[key] = self.KIND_NONE
+        self.used -= SHORTCUT_BYTES
+        self._nshort -= 1
+        if cnt == 0:
+            self._zero_shortcuts -= 1
+        self.mutations += 1
+        # inherits access count (paper Sec. 4)
+        self._insert_value(key, p, ln, count=cnt)
 
 
 class StaticCache:

@@ -19,6 +19,8 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from .clht import NumpyCLHT
 from .log import PySegment
 
@@ -46,6 +48,8 @@ class DPMPool:
         self.merge_backlog: deque[tuple[PySegment, int]] = deque()
         # indirection table for replicated keys: key -> ptr  (CAS target)
         self.indirect: dict[int, int] = {}
+        self._indirect_version = 0
+        self._indirect_cache: tuple[int, np.ndarray] | None = None
         # durable policy metadata (ownership map snapshots, Sec. 3.5)
         self.policy_metadata: dict = {}
         self.gc = GCStats()
@@ -73,9 +77,20 @@ class DPMPool:
         return self.segments[kn][-1]
 
     def unmerged_count(self, kn: str) -> int:
-        """Segments of this KN not yet fully merged (active excluded)."""
-        return sum(1 for s in self.segments.get(kn, [])[:-1]
-                   if s.merged_upto < len(s.entries))
+        """Segments of this KN not yet fully merged (active excluded).
+        Fully-merged sealed segments are pruned as a side effect: they
+        can never become unmerged again, and without pruning this scan
+        is O(total segments ever written) on every write."""
+        segs = self.segments.get(kn)
+        if segs is None:
+            return 0
+        if len(segs) > 1:
+            keep = [s for s in segs[:-1]
+                    if s.merged_upto < len(s.entries)]
+            if len(keep) + 1 < len(segs):
+                keep.append(segs[-1])
+                self.segments[kn] = segs = keep
+        return len(segs) - 1
 
     def log_write(self, kn: str, key: int, value, length: int,
                   sealed: bool = True) -> tuple[int, bool]:
@@ -198,6 +213,32 @@ class DPMPool:
             return self.indirect[key], probes + 1
         return self.index.lookup(key)
 
+    @property
+    def meta_version(self) -> int:
+        """Changes whenever a batched probe prefetch would go stale."""
+        return self.index.version + self._indirect_version
+
+    def _indirect_keys_array(self) -> np.ndarray:
+        if self._indirect_cache is None or \
+                self._indirect_cache[0] != self._indirect_version:
+            arr = np.sort(np.fromiter(self.indirect.keys(), dtype=np.int64,
+                                      count=len(self.indirect)))
+            self._indirect_cache = (self._indirect_version, arr)
+        return self._indirect_cache[1]
+
+    def index_lookup_batch(self, keys: np.ndarray):
+        """Vectorized ``index_lookup``: (ptrs, probes) int64 arrays with
+        ptr == -1 where absent; element-wise identical to the scalar."""
+        keys = np.asarray(keys, dtype=np.int64)
+        ptrs, probes = self.index.lookup_batch(keys)
+        if self.indirect:
+            ind = np.isin(keys, self._indirect_keys_array())
+            if ind.any():
+                probes = probes + ind          # extra indirection RT
+                for i in np.nonzero(ind)[0]:
+                    ptrs[i] = self.indirect[int(keys[i])]
+        return ptrs, probes
+
     # ----- indirection (selective replication, one-sided CAS) ----------------
     def install_indirect(self, key: int) -> None:
         if key in self.indirect:
@@ -206,6 +247,7 @@ class DPMPool:
         if ptr is None:
             return
         self.indirect[key] = ptr
+        self._indirect_version += 1
         # the index now names the indirection slot; readers discover
         # 'replicated' status via ownership metadata at RNs/KNs.
 
@@ -214,6 +256,7 @@ class DPMPool:
         if cur != expect:
             return False
         self.indirect[key] = new
+        self._indirect_version += 1
         if expect is not None and expect != new:
             self._invalidate_ptr(expect)
         return True
@@ -226,6 +269,7 @@ class DPMPool:
         the indirection slot is dropped and the index points directly."""
         ptr = self.indirect.pop(key, None)
         if ptr is not None:
+            self._indirect_version += 1
             self.index.insert(key, ptr)
 
     # ----- bulk load (experiment setup, bypasses the timed path) -------------

@@ -14,6 +14,8 @@ from __future__ import annotations
 import bisect
 from typing import Hashable, Iterable
 
+import numpy as np
+
 _MASK64 = (1 << 64) - 1
 
 
@@ -23,6 +25,15 @@ def mix64(x: int) -> int:
     x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
     x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _MASK64
     return (x ^ (x >> 31)) & _MASK64
+
+
+def mix64_batch(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64: bit-identical to ``mix64`` per element."""
+    x = x.astype(np.uint64, copy=True)
+    x += np.uint64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
 
 
 def stable_hash(key: Hashable) -> int:
@@ -51,10 +62,18 @@ class HashRing:
         self._points: list[int] = []     # sorted vnode positions
         self._owners: list[str] = []     # owner of each vnode position
         self._members: set[str] = set()
+        self.generation = 0              # bumped on every membership change
+        self._np_cache = None            # (points, owner_ids, names)
+        self._share_cache: dict[int, np.ndarray] = {}  # samples -> ids
         for m in members:
             self.add(m)
 
     # -- membership ---------------------------------------------------------
+    def _invalidate(self) -> None:
+        self.generation += 1
+        self._np_cache = None
+        self._share_cache.clear()
+
     def add(self, member: str) -> None:
         if member in self._members:
             return
@@ -64,6 +83,7 @@ class HashRing:
             i = bisect.bisect_left(self._points, pos)
             self._points.insert(i, pos)
             self._owners.insert(i, member)
+        self._invalidate()
 
     def remove(self, member: str) -> None:
         if member not in self._members:
@@ -73,6 +93,7 @@ class HashRing:
                 if o != member]
         self._points = [p for p, _ in keep]
         self._owners = [o for _, o in keep]
+        self._invalidate()
 
     @property
     def members(self) -> list[str]:
@@ -112,20 +133,59 @@ class HashRing:
                     break
         return out
 
+    # -- vectorized lookup (the batched data plane's routing path) ----------
+    def _np_view(self):
+        """(sorted vnode positions, owner id per position, names) --
+        cached numpy mirror of the ring, rebuilt on membership change."""
+        if self._np_cache is None:
+            names = sorted(self._members)
+            idx = {n: i for i, n in enumerate(names)}
+            points = np.asarray(self._points, dtype=np.uint64)
+            owner_ids = np.asarray([idx[o] for o in self._owners],
+                                   dtype=np.int64)
+            self._np_cache = (points, owner_ids, names)
+        return self._np_cache
+
+    def owner_ids(self, keys: np.ndarray):
+        """Vectorized ``owner`` for int keys: returns (ids, names) where
+        ``names[ids[i]]`` == ``self.owner(int(keys[i]))`` exactly."""
+        points, owner_ids, names = self._np_view()
+        if not len(points):
+            raise RuntimeError("empty hash ring")
+        pos = mix64_batch(np.asarray(keys))
+        i = np.searchsorted(points, pos, side="right")
+        i[i == len(points)] = 0
+        return owner_ids[i], names
+
+    def _sample_ids(self, samples: int) -> np.ndarray:
+        ids = self._share_cache.get(samples)
+        if ids is None:
+            ids, _ = self.owner_ids(np.arange(samples, dtype=np.uint64))
+            self._share_cache[samples] = ids
+        return ids
+
     # -- introspection ---------------------------------------------------------
     def share(self, member: str, samples: int = 4096) -> float:
         """Approximate fraction of the keyspace owned by ``member``."""
-        hits = sum(1 for k in range(samples) if self.owner(k) == member)
-        return hits / samples
+        if not self._points or member not in self._members:
+            return 0.0
+        _, _, names = self._np_view()
+        mid = names.index(member)
+        ids = self._sample_ids(samples)
+        return int((ids == mid).sum()) / samples
 
     def diff(self, other: "HashRing", samples: int = 4096) -> float:
         """Fraction of sampled keys whose owner differs between two rings
         (the reconfiguration 'blast radius')."""
         if not self._points or not other._points:
             return 1.0
-        moved = sum(1 for k in range(samples)
-                    if self.owner(k) != other.owner(k))
-        return moved / samples
+        a_ids = self._sample_ids(samples)
+        b_ids = other._sample_ids(samples)
+        _, _, a_names = self._np_view()
+        _, _, b_names = other._np_view()
+        a = np.asarray(a_names, dtype=object)[a_ids]
+        b = np.asarray(b_names, dtype=object)[b_ids]
+        return int((a != b).sum()) / samples
 
     def snapshot(self) -> "HashRing":
         r = HashRing(vnodes=self.vnodes)

@@ -14,6 +14,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from .hashring import HashRing, stable_hash
 
 
@@ -37,10 +39,24 @@ class OwnershipMap:
         self.threads_per_kn = threads_per_kn
         self.replicated: dict[int, list[str]] = {}
         self.version = 0
+        self._rep_cache: tuple[int, np.ndarray] | None = None
 
     # ----- lookup --------------------------------------------------------
     def primary(self, key: int) -> str:
         return self.ring.owner(key)
+
+    def primary_ids(self, keys: np.ndarray):
+        """Vectorized ``primary``: (ids, names) from the global ring."""
+        return self.ring.owner_ids(keys)
+
+    def replicated_keys_array(self) -> np.ndarray:
+        """Sorted int64 array of replicated keys (cached per version)."""
+        if self._rep_cache is None or self._rep_cache[0] != self.version:
+            arr = np.sort(np.fromiter(self.replicated.keys(),
+                                      dtype=np.int64,
+                                      count=len(self.replicated)))
+            self._rep_cache = (self.version, arr)
+        return self._rep_cache[1]
 
     def owners(self, key: int) -> list[str]:
         """All owners: primary plus secondaries if replicated."""
@@ -85,12 +101,16 @@ class OwnershipMap:
         changed: set[str] = set()
         if not old._points or not self.ring._points:
             return set(self.ring.members)
-        for k in range(samples):
-            a, b = old.owner(k), self.ring.owner(k)
-            if a != b:
-                changed.add(b)
-                if a in self.ring:
-                    changed.add(a)
+        keys = np.arange(samples, dtype=np.uint64)
+        a_ids, a_names = old.owner_ids(keys)
+        b_ids, b_names = self.ring.owner_ids(keys)
+        a_arr = np.asarray(a_names, dtype=object)[a_ids]
+        b_arr = np.asarray(b_names, dtype=object)[b_ids]
+        moved = a_arr != b_arr
+        for a in set(a_arr[moved]):
+            if a in self.ring:
+                changed.add(a)
+        changed.update(set(b_arr[moved]))
         return changed
 
     def _repair_replicas(self, gone: str | None = None) -> None:

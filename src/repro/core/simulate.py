@@ -10,6 +10,7 @@ data reorganization for DINOMO-N, membership refresh for Clover).
 
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field
 
@@ -42,22 +43,32 @@ class Outage:
 class TimedSimulation:
     def __init__(self, cluster: DinomoCluster, workload,
                  model: NetModel = DEFAULT_MODEL, dt: float = 1.0,
-                 sample_ops: int = 3000, seed: int = 0,
-                 dataset_bytes: float | None = None):
+                 sample_ops: int = 20_000, seed: int = 0,
+                 dataset_bytes: float | None = None,
+                 batched: bool = True):
         # the sampled working set stands in for a paper-scale dataset;
         # reorganization physics (Dinomo-N) uses the represented bytes
         self.dataset_bytes = dataset_bytes
-        """``workload(t, rng, n)`` yields n (op, key) pairs for time t."""
+        """``workload(t, rng, n)`` yields n (op, key) pairs for time t
+        -- either a list of tuples or a (kinds, keys) array pair (see
+        Workload.timed_batched). ``batched=True`` drives the sampled
+        ops through DinomoCluster.execute_batch (the vectorized data
+        plane, statistically identical to the per-op loop);
+        ``batched=False`` keeps the per-op loop for equivalence tests.
+        The raised ``sample_ops`` default leans on the batched plane to
+        sample closer to paper-scale op counts per epoch."""
         self.c = cluster
         self.workload = workload
         self.model = model
         self.dt = dt
         self.sample_ops = sample_ops
+        self.batched = batched
         self.rng = np.random.default_rng(seed)
         self.now = 0.0
         self.outages: list[Outage] = []
         self.trace: list[TimePoint] = []
         self._epoch_freq: dict[int, float] = {}
+        self._epoch_total = 0.0
         self._next_epoch = cluster.mnode.cfg.epoch_s
 
     # ------------------------------------------------------------------
@@ -96,36 +107,26 @@ class TimedSimulation:
                                             1))
         ops = self.workload(self.now, self.rng, n_sample)
         c.reset_stats()
-        per_kn_ops: dict[str, int] = {}
-        writes = 0
-        for kind, key in ops:
-            try:
-                kn = c.route(key)
-            except KeyError:
-                continue
-            if not self._available(kn):
-                continue
-            per_kn_ops[kn] = per_kn_ops.get(kn, 0) + 1
-            if kind == "read":
-                c.read(key, kn)
-            else:
-                writes += 1
-                c.write(key, f"v@{self.now}", kn)
-            self._epoch_freq[key] = self._epoch_freq.get(key, 0.0) + 1.0
+        if self.batched:
+            n_ops, per_kn_ops, writes = self._step_batched(ops)
+        else:
+            n_ops, per_kn_ops, writes = self._step_scalar(ops)
         c.advance_merge(int(model.merge_capacity() * self.dt))
 
         stats = c.aggregate_stats()
         rts = max(stats["rts_per_op"], 1e-3)
-        wf = writes / max(len(ops), 1)
+        wf = writes / max(n_ops, 1)
         shares = self._load_shares(per_kn_ops)
         # hottest single-owner key: its effective share is divided by
         # its replication factor (paper Sec. 3.4 / selective replication)
         top_share = 0.0
         if self._epoch_freq and c.variant.architecture \
                 != "shared_everything":
-            tot_f = sum(self._epoch_freq.values())
-            for k, f in sorted(self._epoch_freq.items(),
-                               key=lambda kv: -kv[1])[:8]:
+            tot_f = self._epoch_total
+            # top-8 without a full sort: the epoch-frequency map holds
+            # every sampled key (paper-scale with the batched plane)
+            for k, f in heapq.nlargest(8, self._epoch_freq.items(),
+                                       key=lambda kv: kv[1]):
                 eff = (f / tot_f) / c.ownership.replication_factor(k)
                 top_share = max(top_share, eff)
         cap = model.cluster_throughput(
@@ -153,6 +154,62 @@ class TimedSimulation:
                                     len(self._alive_kns()),
                                     offered_ops_per_s, events))
         return util, avg_lat, p99, per_kn_ops, cap
+
+    def _step_batched(self, ops):
+        """Run the sampled ops through the vectorized data plane; the
+        KN/cache statistics are identical to the per-op loop
+        (property-tested). Ops owned by KNs inside an outage window
+        are dropped exactly as the scalar loop drops them."""
+        c = self.c
+        if isinstance(ops, tuple):
+            kinds, keys = ops
+        else:
+            n = len(ops)
+            kinds = np.fromiter((0 if k == "read" else 1 for k, _ in ops),
+                                np.uint8, n)
+            keys = np.fromiter((key for _, key in ops), np.int64, n)
+        blocked: set[str] = set()
+        for o in self.outages:
+            if o.until > self.now:
+                if o.node is None:
+                    blocked.update(c.kns)
+                    break
+                blocked.add(o.node)
+        res = c.execute_batch(kinds, keys, value=f"v@{self.now}",
+                              blocked_kns=blocked)
+        if res.executed:
+            ef = self._epoch_freq
+            u, cnt = np.unique(res.executed_keys, return_counts=True)
+            for k, f in zip(u.tolist(), cnt.tolist()):
+                ef[k] = ef.get(k, 0.0) + f
+            self._epoch_total += float(res.executed)
+        return kinds.shape[0], res.per_kn, res.writes
+
+    def _step_scalar(self, ops):
+        """The original per-op sampling loop (equivalence baseline)."""
+        c = self.c
+        if isinstance(ops, tuple):
+            kinds, keys = ops
+            ops = [("read" if kd == 0 else "write", int(k))
+                   for kd, k in zip(kinds, keys)]
+        per_kn_ops: dict[str, int] = {}
+        writes = 0
+        for kind, key in ops:
+            try:
+                kn = c.route(key)
+            except KeyError:
+                continue
+            if not self._available(kn):
+                continue
+            per_kn_ops[kn] = per_kn_ops.get(kn, 0) + 1
+            if kind == "read":
+                c.read(key, kn)
+            else:
+                writes += 1
+                c.write(key, f"v@{self.now}", kn)
+            self._epoch_freq[key] = self._epoch_freq.get(key, 0.0) + 1.0
+            self._epoch_total += 1.0
+        return len(ops), per_kn_ops, writes
 
     def _load_shares(self, per_kn_ops: dict[str, int]):
         tot = sum(per_kn_ops.values())
@@ -193,8 +250,8 @@ class TimedSimulation:
             kn_rate = share * offered
             occupancy[n] = min(kn_rate / max(self.model.kn_cpu_ops, 1.0),
                                1.0)
-        top = dict(sorted(self._epoch_freq.items(), key=lambda kv: -kv[1])
-                   [:64])
+        top = dict(heapq.nlargest(64, self._epoch_freq.items(),
+                                  key=lambda kv: kv[1]))
         epoch_s = c.mnode.cfg.epoch_s
         stats = EpochStats(
             now=self.now, avg_latency=avg_lat, p99_latency=p99,
@@ -206,6 +263,7 @@ class TimedSimulation:
         for action in c.mnode.decide(stats):
             self._apply(action)
         self._epoch_freq.clear()
+        self._epoch_total = 0.0
 
     def _apply(self, action):
         c = self.c

@@ -68,6 +68,21 @@ class Workload:
                 out.append(("read" if kind == 0 else "update", int(key)))
         return out
 
+    def ops_arrays(self, n: int):
+        """Batched ``ops``: (kinds, keys) arrays with kind 0 == read,
+        1 == write (update or insert). Consumes the generator's RNG
+        exactly like ``ops`` so the two produce identical streams."""
+        r, u, ins = MIXES[self.mix]
+        kinds3 = self._rng.choice(3, size=n, p=[r, u, ins])
+        keys = self._sample_keys(n).astype(np.int64)
+        is_ins = kinds3 == 2
+        n_ins = int(is_ins.sum())
+        if n_ins:
+            keys[is_ins] = np.arange(self._next_insert,
+                                     self._next_insert + n_ins)
+            self._next_insert += n_ins
+        return (kinds3 != 0).astype(np.uint8), keys
+
     def initial_load(self):
         return ((k, f"v{k}") for k in range(self.num_keys))
 
@@ -83,3 +98,8 @@ class Workload:
         ops = self.ops(n)
         return [("read" if k == "read" else "write", key)
                 for k, key in ops]
+
+    def timed_batched(self, t: float, rng, n: int):
+        """TimedSimulation adapter for the batched data plane:
+        (kinds, keys) arrays, same stream as ``timed``."""
+        return self.ops_arrays(n)

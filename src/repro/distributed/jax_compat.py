@@ -1,0 +1,107 @@
+"""Compatibility shims for older JAX releases (installed: 0.4.x).
+
+Newer code in this repo (and its tests) uses the explicit-sharding API
+surface that landed after 0.4.37:
+
+  * ``jax.sharding.AxisType`` (Auto / Explicit / Manual)
+  * ``jax.make_mesh(..., axis_types=...)``
+  * ``jax.sharding.AbstractMesh(axis_sizes, axis_names, axis_types=...)``
+
+On JAX versions that predate these, importing this module installs
+behaviour-preserving shims: ``AxisType`` becomes a plain enum,
+``axis_types`` keyword arguments are accepted and dropped (the pre-0.5
+default is Auto everywhere, which is exactly what the callers request),
+and the new ``AbstractMesh`` calling convention is translated to the old
+``shape_tuple`` one. On JAX versions that already provide the real API
+this module is a no-op, so it is always safe to import.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding as _sharding
+
+
+class _AxisTypeShim(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _patch_axis_type() -> None:
+    if not hasattr(_sharding, "AxisType"):
+        _sharding.AxisType = _AxisTypeShim
+
+
+def _patch_make_mesh() -> None:
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):          # pragma: no cover
+        return
+    if "axis_types" in params:
+        return
+
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+        # pre-0.5 meshes are implicitly Auto on every axis; dropping the
+        # argument preserves semantics for Auto (the only type callers
+        # in this repo request).
+        return orig(axis_shapes, axis_names, *args, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def _patch_abstract_mesh() -> None:
+    orig = getattr(_sharding, "AbstractMesh", None)
+    if orig is None:                          # pragma: no cover
+        return
+    try:
+        params = inspect.signature(orig).parameters
+    except (TypeError, ValueError):           # pragma: no cover
+        return
+    if "axis_names" in params:                # already the new API
+        return
+
+    @functools.wraps(orig, updated=())
+    def abstract_mesh(axis_sizes, axis_names=None, *, axis_types=None):
+        if axis_names is None:                # old-style shape_tuple call
+            return orig(axis_sizes)
+        return orig(tuple(zip(axis_names, axis_sizes)))
+
+    _sharding.AbstractMesh = abstract_mesh
+
+
+def _patch_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    try:
+        from jax.experimental.shard_map import shard_map as _sm
+    except ImportError:                       # pragma: no cover
+        return
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                  **kw):
+        # pre-0.5: the flag is named check_rep; semantics match for the
+        # False value this repo passes
+        if check_vma is not None and "check_rep" not in kw:
+            kw["check_rep"] = check_vma
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   **kw)
+
+    jax.shard_map = shard_map
+
+
+def install() -> None:
+    _patch_axis_type()
+    _patch_make_mesh()
+    _patch_abstract_mesh()
+    _patch_shard_map()
+
+
+install()

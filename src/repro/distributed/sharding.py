@@ -17,6 +17,8 @@ from dataclasses import dataclass
 
 import jax
 import numpy as np
+
+from . import jax_compat  # noqa: F401  (installs AxisType/mesh shims)
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -58,6 +58,84 @@ def _probe_kernel(bucket_ids_ref, keys_ref, line_ref, ptr_ref, found_ref,
     found_ref[0] = hit.any().astype(jnp.int32)
 
 
+def _kvs_lookup_kernel(bucket_ids_ref, keys_ref, lines_ref, heap_ref,
+                       vals_ref, ptr_ref, found_ref, *, slots: int,
+                       block: int):
+    """One grid step = one *block* of keys, fused probe + value gather.
+
+    The per-key work of ``_probe_kernel`` is unchanged, but the grid is
+    ``B/block`` instead of ``B``: the scalar-prefetched bucket ids for
+    the whole block are walked with a fori_loop, so the per-step
+    dispatch/DMA setup is amortized over ``block`` keys, and the value
+    row is gathered from the heap in the same step -- no separate
+    probe-then-gather round trip (DINOMO's one-RDMA-read common case,
+    extended to the value fetch)."""
+    base = pl.program_id(0) * block
+    lane = jax.lax.iota(jnp.int32, LANES)
+
+    def body(j, _):
+        bid = bucket_ids_ref[base + j]
+        line = lines_ref[bid, :]              # one bucket line per key
+        key = keys_ref[j]
+        slot_keys = jnp.where(lane < slots, line, -1)
+        hit = (slot_keys == key) & (key >= 0)
+        # pointer lives ``slots`` lanes to the right of its key
+        ptr_lane = jnp.where(hit, lane + slots, 0).sum()
+        ptr = jnp.where(hit.any(), jnp.take(line, ptr_lane, axis=0), -1)
+        row = heap_ref[jnp.maximum(ptr, 0), :]   # fused heap gather
+        vals_ref[j, :] = jnp.where(ptr >= 0, row, 0)
+        ptr_ref[j] = ptr.astype(jnp.int32)
+        found_ref[j] = hit.any().astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("slots", "block", "interpret"))
+def kvs_lookup_fused(lines: jax.Array, heap: jax.Array,
+                     bucket_ids: jax.Array, keys: jax.Array, *,
+                     slots: int = 3, block: int = 128,
+                     interpret: bool = True):
+    """Fused KVS lookup: probe each key's primary bucket AND gather its
+    value row from the heap in one kernel.
+
+    lines:      (TB, 128) packed bucket lines
+    heap:       (H, D) int32 value rows (core.log.ValueHeap.data)
+    bucket_ids: (B,) int32 primary buckets (scalar-prefetched)
+    keys:       (B,) int32 probe keys; B must be a multiple of block
+
+    Returns (values, ptrs, found): (B, D) gathered rows (zeros where
+    absent), (B,) int32 pointers (-1 if absent from the primary
+    bucket), (B,) int32 {0,1} hit flags.
+    """
+    b = keys.shape[0]
+    assert b % block == 0, "pad keys to a multiple of the key block"
+    d = heap.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i, ids: (i,)),        # keys
+            pl.BlockSpec(lines.shape, lambda i, ids: (0, 0)),   # table
+            pl.BlockSpec(heap.shape, lambda i, ids: (0, 0)),    # heap
+        ],
+        out_specs=[
+            pl.BlockSpec((block, d), lambda i, ids: (i, 0)),
+            pl.BlockSpec((block,), lambda i, ids: (i,)),
+            pl.BlockSpec((block,), lambda i, ids: (i,)),
+        ],
+    )
+    vals, ptrs, found = pl.pallas_call(
+        functools.partial(_kvs_lookup_kernel, slots=slots, block=block),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, d), jnp.int32),
+                   jax.ShapeDtypeStruct((b,), jnp.int32),
+                   jax.ShapeDtypeStruct((b,), jnp.int32)],
+        interpret=interpret,
+    )(bucket_ids, keys, lines, heap)
+    return vals, ptrs, found
+
+
 @functools.partial(jax.jit, static_argnames=("slots", "interpret"))
 def clht_probe(lines: jax.Array, bucket_ids: jax.Array, keys: jax.Array,
                *, slots: int = 3, interpret: bool = True):

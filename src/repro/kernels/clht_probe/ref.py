@@ -6,6 +6,16 @@ import jax
 import jax.numpy as jnp
 
 
+def kvs_lookup_ref(table, heap, keys: jax.Array):
+    """Pure-jnp oracle for the fused kvs_lookup: full chain-walk lookup
+    followed by a heap gather -- the un-fused two-round-trip path."""
+    from ...core.clht import clht_lookup
+    ptrs, found, _ = clht_lookup(table, keys)
+    rows = heap.data[jnp.maximum(ptrs, 0)].astype(jnp.int32)
+    vals = jnp.where(found[:, None], rows, 0)
+    return vals, ptrs, found
+
+
 def clht_probe_ref(lines: jax.Array, bucket_ids: jax.Array,
                    keys: jax.Array, *, slots: int = 3):
     rows = lines[bucket_ids]                       # (B, 128)

@@ -59,6 +59,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):        # older jaxlib returns [dict]
+        cost = cost[0] if cost else {}
     # trip-count-aware totals (XLA's cost_analysis counts while bodies
     # once; analyze_hlo multiplies scan-over-layers through)
     totals = analyze_hlo(compiled.as_text())

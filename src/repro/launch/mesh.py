@@ -8,6 +8,8 @@ explicitly-launched multi-device runs) force a 512-way host platform.
 from __future__ import annotations
 
 import jax
+
+from ..distributed import jax_compat  # noqa: F401  (installs AxisType shim)
 from jax.sharding import AxisType
 
 

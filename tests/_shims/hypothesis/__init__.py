@@ -1,0 +1,172 @@
+"""Minimal stand-in for the ``hypothesis`` package.
+
+The real dependency is declared in ``pyproject.toml``; this shim is only
+used when it is not installed (the CI container cannot pip-install).
+``tests/conftest.py`` appends ``tests/_shims`` to ``sys.path`` *after*
+trying ``import hypothesis``, so a real installation always wins.
+
+It implements the subset this repo's property tests use: ``@given`` with
+deterministic pseudo-random example generation, ``@settings``
+(``max_examples`` honoured, everything else accepted and ignored), and
+the ``strategies`` below. Shrinking is not implemented — on failure the
+generated arguments are attached to the exception instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+
+__version__ = "0.0-shim"
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class HealthCheck:                                    # accepted, ignored
+    all = classmethod(lambda cls: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class settings:  # noqa: N801  (mirrors hypothesis' lowercase class)
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(100):
+                x = self._draw(rng)
+                if pred(x):
+                    return x
+            raise _Unsatisfied()
+        return SearchStrategy(draw)
+
+
+class strategies:  # noqa: N801  (imported as ``st``)
+    @staticmethod
+    def integers(min_value=-(1 << 32), max_value=(1 << 32)):
+        def draw(rng):
+            # bias toward the boundaries, like real hypothesis
+            r = rng.random()
+            if r < 0.05:
+                return min_value
+            if r < 0.1:
+                return max_value
+            return rng.randint(min_value, max_value)
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return SearchStrategy(
+            lambda rng: min_value + (max_value - min_value) * rng.random())
+
+    @staticmethod
+    def booleans():
+        return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def binary(min_size=0, max_size=64):
+        return SearchStrategy(
+            lambda rng: bytes(rng.getrandbits(8) for _ in
+                              range(rng.randint(min_size, max_size))))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return SearchStrategy(lambda rng: elements[rng.randrange(
+            len(elements))])
+
+    @staticmethod
+    def just(value):
+        return SearchStrategy(lambda rng: value)
+
+    @staticmethod
+    def tuples(*strats):
+        return SearchStrategy(
+            lambda rng: tuple(s.example_from(rng) for s in strats))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example_from(rng) for _ in range(n)]
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def one_of(*strats):
+        return SearchStrategy(lambda rng: strats[rng.randrange(
+            len(strats))].example_from(rng))
+
+
+st = strategies
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        cfg = getattr(fn, "_shim_settings", None)
+        import inspect
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # strategies fill the trailing positional params + named kwargs;
+        # hide them from pytest's fixture resolution
+        keep = params[:len(params) - len(strats)]
+        keep = [p for p in keep if p.name not in kw_strats]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # read at call time so @settings works above or below @given
+            live = getattr(wrapper, "_shim_settings", None)
+            n = (live.max_examples if live is not None
+                 else _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"shim:{fn.__module__}.{fn.__qualname__}")
+            done = 0
+            attempts = 0
+            while done < n and attempts < 10 * n + 100:
+                attempts += 1
+                ex_args = tuple(s.example_from(rng) for s in strats)
+                ex_kw = {k: s.example_from(rng)
+                         for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *ex_args, **{**kwargs, **ex_kw})
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on example args={ex_args!r} "
+                        f"kwargs={ex_kw!r}: {e!r}") from e
+                done += 1
+            return None
+
+        # carry the settings through repeated decoration orders
+        wrapper._shim_settings = cfg
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        del wrapper.__wrapped__          # stop pytest unwrapping to fn
+        return wrapper
+    return deco

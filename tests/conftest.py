@@ -6,6 +6,25 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+SHIMS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "_shims")
+
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+# Older JAX lacks jax.sharding.AxisType / make_mesh(axis_types=...);
+# importing the compat module patches them in-process before any test
+# does ``from jax.sharding import AxisType``.
+import repro.distributed.jax_compat  # noqa: E402,F401
+
+# Prefer a real hypothesis installation; fall back to the vendored shim
+# (tests/_shims) when the container doesn't have it.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:                                    # pragma: no cover
+    sys.path.append(SHIMS)
+
+# run in subprocesses *before* their first ``from jax.sharding import``:
+_SUBPROC_PREAMBLE = "import repro.distributed.jax_compat\n"
 
 
 def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
@@ -14,7 +33,8 @@ def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
     env = os.environ.copy()
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+    r = subprocess.run([sys.executable, "-c", _SUBPROC_PREAMBLE + code],
+                       capture_output=True,
                        text=True, env=env, timeout=timeout, cwd=REPO)
     assert r.returncode == 0, \
         f"subprocess failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"

@@ -7,8 +7,10 @@ import numpy as np
 import pytest
 
 from repro.core.clht import bucket_of, clht_init, clht_insert, clht_lookup
-from repro.core.log import log_append, segment_init
-from repro.kernels.clht_probe import clht_probe, clht_probe_ref, pack_table
+from repro.core.log import heap_append, heap_init, log_append, segment_init
+from repro.kernels.clht_probe import (clht_probe, clht_probe_ref,
+                                      kvs_lookup, kvs_lookup_ref,
+                                      pack_table)
 from repro.kernels.clht_probe.ops import lookup as probe_lookup
 from repro.kernels.decode_attention import (merge_partials, normalize,
                                             paged_decode_attention,
@@ -41,6 +43,27 @@ def test_clht_probe_sweep(nb, nkeys, dtype):
     p_r, f_r = clht_probe_ref(lines, bids, probe)
     np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
     np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+
+
+@pytest.mark.parametrize("nb,nkeys,width,block", [
+    (64, 100, 8, 128), (256, 500, 4, 64), (64, 600, 4, 128)])
+def test_kvs_lookup_fused_matches_ref(nb, nkeys, width, block):
+    """Fused probe+gather kernel == chain walk + separate heap gather,
+    including keys that overflow into chained buckets and misses."""
+    keys = RNG.choice(10_000, nkeys, replace=False).astype(np.int32)
+    t = clht_init(nb)
+    heap = heap_init(nkeys + 8, width)
+    vals = jnp.arange(nkeys * width, dtype=jnp.int32).reshape(nkeys, width)
+    heap, ptrs = heap_append(heap, vals)
+    t, _, ok, _ = clht_insert(t, jnp.array(keys), ptrs)
+    probe = jnp.array(np.concatenate(
+        [keys[:nkeys // 2], RNG.integers(10_001, 20_000, 37)])
+        .astype(np.int32))
+    v1, p1, f1 = kvs_lookup(t, heap, probe, block=block)
+    v2, p2, f2 = kvs_lookup_ref(t, heap, probe)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
 
 
 def test_clht_probe_full_lookup_matches_chain_walk():
