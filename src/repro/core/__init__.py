@@ -4,8 +4,9 @@
 # accounting (the JAX/Pallas data plane lives in clht.py / log.py and
 # src/repro/kernels; the serving integration in src/repro/kvcache).
 from .cluster import (CLOVER, DINOMO, DINOMO_N, DINOMO_S, VARIANTS,
-                      BatchResult, DinomoCluster, VariantConfig)
-from .dac import ArrayDAC, DAC, StaticCache
+                      ArrayCloverCache, BatchResult, CloverCache,
+                      DinomoCluster, VariantConfig)
+from .dac import ArrayDAC, ArrayStaticCache, DAC, StaticCache
 from .dpm_pool import DPMPool
 from .hashring import HashRing, stable_hash
 from .linearizability import Op, check_history, check_key_history
@@ -17,7 +18,8 @@ from .simulate import TimedSimulation
 __all__ = [
     "DinomoCluster", "VariantConfig", "BatchResult", "DINOMO",
     "DINOMO_S", "DINOMO_N",
-    "CLOVER", "VARIANTS", "DAC", "ArrayDAC", "StaticCache", "DPMPool",
+    "CLOVER", "VARIANTS", "DAC", "ArrayDAC", "ArrayStaticCache",
+    "StaticCache", "CloverCache", "ArrayCloverCache", "DPMPool",
     "HashRing",
     "stable_hash", "Op", "check_history", "check_key_history", "Action",
     "EpochStats", "PolicyConfig", "PolicyEngine", "NetModel",

@@ -316,6 +316,127 @@ class NumpyCLHT:
             cur = np.where(active, nxt, cur)
         return ptrs, probes
 
+    def _locate_batch(self, keys: np.ndarray):
+        """Vectorized chain walk locating each key's slot.
+
+        -> (rows, slots, found): (row, slot) holds key i where found;
+        undefined (zeros) where not found."""
+        keys = np.asarray(keys, dtype=np.int64)
+        n = keys.shape[0]
+        cur = self._bucket_batch(keys)
+        rows = np.zeros(n, np.int64)
+        slots = np.zeros(n, np.int64)
+        found = np.zeros(n, bool)
+        active = np.ones(n, bool)
+        for _ in range(MAX_CHAIN):
+            if not active.any():
+                break
+            rk = self.keys[cur]
+            hit = (rk == keys[:, None]) & active[:, None]
+            hit_any = hit.any(axis=1)
+            if hit_any.any():
+                s = np.argmax(hit, axis=1)
+                rows[hit_any] = cur[hit_any]
+                slots[hit_any] = s[hit_any]
+                found |= hit_any
+            nxt = self.nxt[cur]
+            active = active & ~hit_any & (nxt != -1)
+            cur = np.where(active, nxt, cur)
+        return rows, slots, found
+
+    def insert_batch(self, keys: np.ndarray, ptrs: np.ndarray):
+        """Vectorized sequential insert: element-wise identical to
+        calling ``insert`` per (key, ptr) in order -- same superseded
+        pointers (including within-batch duplicate chains), same slot
+        placement, same overflow allocation order.
+
+        Fast paths (one gather + one scatter each): in-place pointer
+        updates for present keys; first-empty-primary-slot claims for
+        absent keys whose bucket is not contested within the batch.
+        Contested or overflowing buckets fall back to the scalar insert
+        in first-occurrence order (the order the scalar sequence would
+        have claimed slots in).
+
+        -> (old_ptrs, ok, grown_buckets): old_ptrs[i] is the pointer
+        entry i superseded (-1 for a fresh insert), ok[i] mirrors the
+        scalar ok flag, and grown_buckets lists primary buckets whose
+        chains grew -- a probe-count hazard for concurrently prefetched
+        lookups of other keys in those chains."""
+        keys = np.asarray(keys, dtype=np.int64)
+        ptrs = np.asarray(ptrs, dtype=np.int64)
+        n = keys.shape[0]
+        old = np.full(n, -1, np.int64)
+        ok = np.ones(n, bool)
+        grown: list[int] = []
+        if n == 0:
+            return old, ok, grown
+        v0 = self.version
+        order = np.argsort(keys, kind="stable")
+        sk = keys[order]
+        sp = ptrs[order]
+        newgrp = np.empty(n, bool)
+        newgrp[0] = True
+        np.not_equal(sk[1:], sk[:-1], out=newgrp[1:])
+        last = np.empty(n, bool)
+        last[-1] = True
+        np.not_equal(sk[1:], sk[:-1], out=last[:-1])
+        uk = sk[newgrp]                   # unique keys (sorted)
+        ufinal = sp[last]                 # final ptr per unique key
+        ufirst = order[newgrp]            # first-occurrence position
+        # one chain walk resolves both the pre-batch mapping (the old
+        # ptrs) and the in-place update targets for present keys
+        rows, slots, found = self._locate_batch(uk)
+        ucur = np.where(found, self.ptrs[rows, slots], -1)
+        # per-entry superseded ptr: pre-batch mapping for the first
+        # occurrence of each key, the previous occurrence's ptr after
+        prev = np.empty(n, np.int64)
+        prev[newgrp] = ucur
+        if n > 1:
+            dup = ~newgrp
+            prev[dup] = sp[:-1][dup[1:]]
+        old[order] = prev
+        if found.any():
+            self.ptrs[rows[found], slots[found]] = ufinal[found]
+        failed: list[int] = []
+        ab = ~found
+        if ab.any():
+            ak = uk[ab]
+            ap = ufinal[ab]
+            apos = ufirst[ab]
+            b = self._bucket_batch(ak)
+            has_empty = (self.keys[b] == -1).any(axis=1)
+            ub, cnts = np.unique(b, return_counts=True)
+            shared = np.isin(b, ub[cnts > 1])
+            # a primary row with an empty slot takes the first empty
+            # slot regardless of any chain (the scalar walk records the
+            # first empty along the chain, and primary comes first)
+            fast = has_empty & ~shared
+            if fast.any():
+                fb = b[fast]
+                slot = np.argmax(self.keys[fb] == -1, axis=1)
+                self.keys[fb, slot] = ak[fast]
+                self.ptrs[fb, slot] = ap[fast]
+                self.size += int(fast.sum())
+            slow = np.nonzero(~fast)[0]
+            if slow.size:
+                so = slow[np.argsort(apos[slow], kind="stable")]
+                for j in so.tolist():
+                    head0 = self.overflow_head
+                    _, okk = self.insert(int(ak[j]), int(ap[j]))
+                    if self.overflow_head != head0:
+                        grown.append(int(self._bucket(int(ak[j]))))
+                    if not okk:
+                        failed.append(int(ak[j]))
+        nsucc = n
+        if failed:
+            bad = np.isin(keys, np.asarray(failed, np.int64))
+            ok[bad] = False
+            old[bad] = -1
+            nsucc -= int(bad.sum())
+        # one version bump per successful entry, as the scalar sequence
+        self.version = v0 + nsucc
+        return old, ok, grown
+
     def insert(self, key: int, ptr: int):
         """-> (old_ptr or None, ok)"""
         b = self._bucket(key)

@@ -23,8 +23,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .dac import ArrayDAC, DAC, StaticCache, CacheStats
+from .dac import (ArrayDAC, ArrayStaticCache, DAC, StaticCache,
+                  CacheStats, CNT_HIST_MAX)
 from .dpm_pool import DPMPool
+from .log import PySegment
 from .mnode import PolicyConfig, PolicyEngine
 from .netmodel import NetModel, DEFAULT_MODEL
 from .hashring import stable_hash
@@ -47,21 +49,27 @@ VARIANTS = {v.name: v for v in (DINOMO, DINOMO_S, DINOMO_N, CLOVER)}
 
 
 def make_cache(policy: str, capacity_bytes: int, reference: bool = False):
+    """Build a KN cache. Every policy has two decision-for-decision
+    equivalent implementations (property-tested): the array-backed one
+    the batched data plane vectorizes over, and the seed's
+    OrderedDict/heapq one -- ``reference=True`` selects the latter as
+    the oracle for equivalence tests and bench baselines."""
     if policy == "dac":
-        # array-backed DAC: decision-for-decision equivalent to the
-        # reference DAC (property-tested), built for the batched data
-        # plane. ``reference=True`` selects the unoptimized oracle --
-        # used by equivalence tests and as the bench baseline.
         return DAC(capacity_bytes) if reference \
             else ArrayDAC(capacity_bytes)
     if policy == "shortcut":
-        return StaticCache(capacity_bytes, 0.0)
+        return StaticCache(capacity_bytes, 0.0) if reference \
+            else ArrayStaticCache(capacity_bytes, 0.0)
     if policy == "value":
-        return StaticCache(capacity_bytes, 1.0)
+        return StaticCache(capacity_bytes, 1.0) if reference \
+            else ArrayStaticCache(capacity_bytes, 1.0)
     if policy.startswith("static:"):
-        return StaticCache(capacity_bytes, float(policy.split(":")[1]))
+        frac = float(policy.split(":")[1])
+        return StaticCache(capacity_bytes, frac) if reference \
+            else ArrayStaticCache(capacity_bytes, frac)
     if policy == "clover":
-        return CloverCache(capacity_bytes)
+        return CloverCache(capacity_bytes) if reference \
+            else ArrayCloverCache(capacity_bytes)
     raise ValueError(f"unknown cache policy {policy!r}")
 
 
@@ -94,6 +102,77 @@ class CloverCache:
         self.entries.clear()
 
 
+class ArrayCloverCache:
+    """Array-backed CloverCache: the batched Clover plane's version
+    cache. Same policy as ``CloverCache`` decision-for-decision
+    (property-tested): presence + version + recency stamp per key, LRU
+    eviction through a lazy (stamp, key) heap -- argmin stamp over
+    present keys equals the OrderedDict front."""
+
+    def __init__(self, capacity_bytes: int, entry_bytes: int = 32,
+                 initial_keys: int = 1024):
+        self.cap_entries = max(capacity_bytes // entry_bytes, 1)
+        n = max(initial_keys, 8)
+        self.present = np.zeros(n, bool)
+        self.ver = [0] * n
+        self.stamp = [0] * n
+        self._clock = 1
+        self._lru: list[tuple[int, int]] = []
+        self._n = 0
+        self.stats = CacheStats()
+
+    def _ensure(self, key: int) -> None:
+        n = self.present.shape[0]
+        if key < n:
+            return
+        m = max(2 * n, key + 1)
+        self.present = np.concatenate(
+            [self.present, np.zeros(m - n, bool)])
+        self.ver.extend([0] * (m - n))
+        self.stamp.extend([0] * (m - n))
+
+    def lookup(self, key: int):
+        self._ensure(key)
+        if not self.present[key]:
+            self.stats.misses += 1
+            return None
+        self.stamp[key] = self._clock
+        self._clock += 1
+        self.stats.shortcut_hits += 1
+        return self.ver[key]
+
+    def fill(self, key: int, version: int):
+        self._ensure(key)
+        if not self.present[key]:
+            self.present[key] = True
+            self._n += 1
+        self.ver[key] = version
+        self.stamp[key] = self._clock
+        heapq.heappush(self._lru, (self._clock, key))
+        self._clock += 1
+        while self._n > self.cap_entries:
+            if len(self._lru) > 4 * self._n + 64:
+                stp = self.stamp
+                self._lru = [(stp[k], k) for k in
+                             np.nonzero(self.present)[0].tolist()]
+                heapq.heapify(self._lru)
+            st, k = heapq.heappop(self._lru)
+            if not self.present[k]:
+                continue                          # stale record: drop
+            cur = self.stamp[k]
+            if cur != st:
+                heapq.heappush(self._lru, (cur, k))   # refresh
+                continue
+            self.present[k] = False
+            self._n -= 1
+            self.stats.evictions += 1
+
+    def clear(self):
+        self.present[:] = False
+        self._lru.clear()
+        self._n = 0
+
+
 @dataclass
 class KNStats:
     ops: int = 0
@@ -119,6 +198,43 @@ class BatchResult:
     per_kn: dict[str, int]         # executed ops per KN name
     executed_keys: np.ndarray      # keys of executed ops, in order
     values: list | None = None     # read results iff collect_values
+
+
+class _WritePlan:
+    """One batch's staged write plane (built by _build_write_plan):
+    per-write pointers/flush-RTs in global write order, rotation events
+    for the coordinator to replay, and per-KN write positions for the
+    stall scan."""
+    __slots__ = ("nw", "ptrs", "rts", "wrank", "wkeys", "rotations",
+                 "wpos_by_name", "segq", "rot_done", "staged",
+                 "ptrs_l", "rts_l", "wrank_l")
+
+    def __init__(self):
+        self.nw = 0
+        self.ptrs = None
+        self.rts = None
+        self.wrank = None
+        self.wkeys = None
+        self.ptrs_l = None
+        self.rts_l = None
+        self.wrank_l = None
+        self.rotations: list = []
+        self.wpos_by_name: dict = {}
+        self.segq: dict = {}       # kn -> [(segment, lo, hi) ranges]
+        self.rot_done: dict = {}   # kn -> rotations executed so far
+        self.staged: dict = {}     # kn -> (logical_keys, ptrs) lists
+
+
+class _KnWindow:
+    """Per-KN cursor over its live non-replicated ops in a batch."""
+    __slots__ = ("kn", "cache", "pos", "idx", "is_dac")
+
+    def __init__(self, kn, cache, pos):
+        self.kn = kn
+        self.cache = cache
+        self.pos = pos
+        self.idx = 0
+        self.is_dac = isinstance(cache, ArrayDAC)
 
 
 class KVSNode:
@@ -430,20 +546,26 @@ class DinomoCluster:
         return rts, True
 
     # ---------------------------------------------------------------------
-    # batched data plane (the tentpole of the vectorized op engine):
-    # routes a whole batch with one ring gather, classifies each op
-    # against its owner's ArrayDAC with one gather per KN, applies runs
-    # of value hits with one scatter per KN, and only drops to the exact
-    # scalar path for structural ops (writes, misses, shortcut hits,
-    # replicated keys). Produces *identical* statistics and cache
-    # decisions to calling read()/write() per op (property-tested).
+    # batched data plane (vectorized op engine, PR 1 read plane + PR 2
+    # write plane): routes a whole batch with one consistent-hash
+    # gather, stages the entire write plane up front (one bulk heap
+    # extension, bulk per-KN segment fills, precomputed amortized-flush
+    # RTs), then coordinates the batch as per-KN windows between global
+    # events -- segment rotations, stall-triggered merges (which run
+    # through the pool's grouped-bucket merge_entries_batch), and
+    # replicated-key ops. Inside a window, per-KN streams are provably
+    # independent, so ops are applied as vectorized runs (bulk value
+    # hits, bulk write fills) with exact scalar fallbacks at every
+    # boundary the vectorized regime cannot prove. Produces *identical*
+    # statistics and cache decisions to calling read()/write() per op
+    # (property-tested in tests/test_dataplane.py + test_writeplane.py).
     # ---------------------------------------------------------------------
     def execute_batch(self, kinds, keys, *, value=None, values=None,
                       blocked_kns=(), collect_values: bool = False
                       ) -> "BatchResult":
         """Execute a batch of operations in submission order.
 
-        kinds: (N,) array, 0 == read, nonzero == write
+        kinds: (N,) array, 0 == read, 1 == write, 2 == delete
         keys:  (N,) int array
         value/values: write payloads (constant, sequence, or callable)
         blocked_kns: KN names whose ops are dropped before execution
@@ -456,16 +578,34 @@ class DinomoCluster:
         out_values: list | None = [None] * n if collect_values else None
         if n == 0 or not self.kns:
             return BatchResult(0, 0, {}, keys[:0], out_values)
-        if self.variant.architecture == "shared_everything" or not all(
-                isinstance(k.cache, ArrayDAC) for k in self.kns.values()):
-            # clover routes through the client rng and the static caches
-            # have no vectorized plane: run the fused scalar loop (same
-            # per-op semantics, without the simulator-level overhead)
+        if self.variant.architecture == "shared_everything":
+            if all(isinstance(k.cache, ArrayCloverCache)
+                   for k in self.kns.values()) \
+                    and not self.pool.indirect \
+                    and not self.pool.merge_backlog \
+                    and all(not s[-1].entries
+                            for s in self.pool.segments.values()):
+                # clover merges per write, so the batched plane assumes
+                # (and every batch re-establishes) empty active logs
+                return self._execute_batch_clover(kinds, keys, value,
+                                                  values, blocked_kns,
+                                                  out_values)
             return self._execute_batch_fused(kinds, keys, value, values,
                                              blocked_kns, out_values)
+        if not all(isinstance(k.cache, (ArrayDAC, ArrayStaticCache))
+                   for k in self.kns.values()):
+            # reference caches have no vectorized plane: run the fused
+            # scalar loop (same per-op semantics, minus driver overhead)
+            return self._execute_batch_fused(kinds, keys, value, values,
+                                             blocked_kns, out_values)
+        return self._execute_batch_spans(kinds, keys, value, values,
+                                         blocked_kns, out_values)
 
+    def _execute_batch_spans(self, kinds, keys, value, values, blocked_kns,
+                             out_values) -> "BatchResult":
         names = list(self.kns.keys())
         name_idx = {nm: j for j, nm in enumerate(names)}
+        n = keys.shape[0]
 
         # ----- vectorized routing over the ownership ring ------------------
         ring_ids, ring_names = self.ownership.primary_ids(keys)
@@ -500,405 +640,879 @@ class DinomoCluster:
         for j in np.nonzero(rcnt)[0]:
             self.kns[names[j]].stats.refused += int(rcnt[j])
 
-        # ----- prefetch index probes for the predicted misses ---------------
+        # ----- stage the write plane ---------------------------------------
+        pool = self.pool
+        plan = self._build_write_plan(kinds, keys, kn_ids, live, names,
+                                      value, values)
+
+        # ----- per-KN windows + predicted-miss probe prefetch --------------
         # (one vectorized CLHT gather replaces per-key chain walks; each
-        # use re-checks the metadata version so mid-batch merges fall
-        # back to the live per-key traversal)
+        # prefetched probe stays exact until a mid-batch merge remaps
+        # its key or grows its bucket chain -- the pool's dirty sets --
+        # after which that key's misses take the live per-key traversal,
+        # exactly as the per-op path would)
         probe_map: dict[int, tuple] = {}
-        probe_ver = -1
-        reads_m = live & (kinds == 0) & ~rep_mask
-        all_reads = bool(reads_m[live].all()) if live.any() else False
-        value_run_kns = []       # (kn, grp, kcls): vectorized hit runs
-        for grp in self._kn_groups(np.nonzero(live)[0], kn_ids):
-            cache = self.kns[names[int(kn_ids[grp[0]])]].cache
-            # grow the per-key vectors up front: the fused loop caches
+        dkeys, dbuckets = pool.track_merge_dirty()
+        windows = []
+        for grp in self._kn_groups(np.nonzero(live & ~rep_mask)[0], kn_ids):
+            kn = self.kns[names[int(kn_ids[grp[0]])]]
+            cache = kn.cache
+            # grow the per-key vectors up front: the window loops cache
             # bound accessors, so the arrays must not move mid-batch
             cache._ensure(int(keys[grp].max()))
-            rsub = grp[reads_m[grp]]
-            if not rsub.size:
-                continue
-            kcls = cache.kind[keys[rsub]]
-            pm_pos = rsub[kcls == ArrayDAC.KIND_NONE]
-            if pm_pos.size:
-                pptr, pprob = self.pool.index_lookup_batch(keys[pm_pos])
-                for p, pp_, pb in zip(pm_pos.tolist(), pptr.tolist(),
-                                      pprob.tolist()):
-                    probe_map[p] = (None if pp_ < 0 else pp_, pb)
-                probe_ver = self.pool.meta_version
-            # a read-only batch whose predicted non-value-hit fraction
-            # is tiny (high-skew warm caches): apply long vectorized
-            # value-hit runs instead of the per-op interpreter. Safe:
-            # reads of one KN only interact through that KN's cache,
-            # and each run is re-validated against the live entry kinds
-            # before being applied.
-            if all_reads and rsub.size == grp.size and \
-                    rsub.size >= 256 and \
-                    int((kcls != ArrayDAC.KIND_VALUE).sum()) \
-                    <= rsub.size // 20:
-                value_run_kns.append((names[int(kn_ids[grp[0]])], grp,
-                                      kcls))
-                live[grp] = False
+            rsub = grp[kinds[grp] == 0]
+            if rsub.size:
+                pm = rsub[cache.kind[keys[rsub]] == 0]
+                if pm.size:
+                    pk = keys[pm]
+                    pptr, pprob = pool.index_lookup_batch(pk)
+                    pbuck = pool.index._bucket_batch(pk)
+                    for p_, pp, pb, bk in zip(pm.tolist(), pptr.tolist(),
+                                              pprob.tolist(),
+                                              pbuck.tolist()):
+                        probe_map[p_] = (None if pp < 0 else pp, pb, bk)
+            windows.append(_KnWindow(kn, cache, grp))
 
-        for nm, grp, kcls in value_run_kns:
-            self._apply_value_runs(self.kns[nm], grp, kcls, keys,
-                                   probe_map, probe_ver, out_values)
+        # ----- event-driven coordination -----------------------------------
+        # Global events order the cross-KN interactions exactly as the
+        # per-op loop would: a rotation pushes its segment to the shared
+        # FIFO backlog at its global position; a blocked KN's write
+        # stalls and merges one budget chunk (all KNs' windows advance
+        # first, so their reads observe the pre-merge index); a
+        # replicated-key op synchronizes on the shared indirection slot.
+        rep_pos = np.nonzero(live & rep_mask)[0]
+        rot = plan.rotations
+        cap = pool.segment_capacity
+        stalls: dict[str, int] = {}
+        try:
+            ri, nrot = 0, len(rot)
+            si, nrep = 0, int(rep_pos.size)
+            cursor = -1
+            while True:
+                nr = rot[ri][0] if ri < nrot else n
+                nrp = int(rep_pos[si]) if si < nrep else n
+                ns, ns_name = n, None
+                for nm, arr in plan.wpos_by_name.items():
+                    if arr.size and pool.write_blocked(nm):
+                        ii = int(np.searchsorted(arr, cursor, side="right"))
+                        if ii < arr.size and arr[ii] < ns:
+                            ns, ns_name = int(arr[ii]), nm
+                p = min(nr, nrp, ns)
+                if p >= n:
+                    break
+                if nr == p:                       # segment rotation
+                    pos_, nm = rot[ri]
+                    ri += 1
+                    self._fill_planned_segment(plan, nm, final=False)
+                    cursor = max(cursor, pos_)
+                    if pool.write_blocked(nm):    # the rotating write stalls
+                        self._advance_windows(windows, pos_, keys, kinds,
+                                              plan, probe_map, dkeys,
+                                              dbuckets, out_values)
+                        stalls[nm] = stalls.get(nm, 0) + 1
+                        pool.merge_budget(cap)
+                    continue
+                if ns == p:                       # stalled write
+                    self._advance_windows(windows, p, keys, kinds, plan,
+                                          probe_map, dkeys, dbuckets,
+                                          out_values)
+                    stalls[ns_name] = stalls.get(ns_name, 0) + 1
+                    pool.merge_budget(cap)
+                    cursor = p
+                    continue
+                # replicated-key op: exact generic path at its position
+                self._advance_windows(windows, p - 1, keys, kinds, plan,
+                                      probe_map, dkeys, dbuckets,
+                                      out_values)
+                self._exec_rep_op(p, kinds, keys, kn_ids, names, plan,
+                                  dkeys, out_values)
+                si += 1
+                cursor = max(cursor, p)
+            self._advance_windows(windows, n - 1, keys, kinds, plan,
+                                  probe_map, dkeys, dbuckets, out_values)
+        finally:
+            pool.untrack_merge_dirty()
 
-        # ----- fused interpreter over the live ops, in global order ---------
-        writes = self._run_fused_ops(np.nonzero(live)[0], keys, kinds,
-                                     kn_ids, rep_mask, names, value,
-                                     values, probe_map, probe_ver,
-                                     out_values)
-
+        # ----- finalize -----------------------------------------------------
+        for nm in plan.segq:
+            self._fill_planned_segment(plan, nm, final=True)
+        for nm, c in stalls.items():
+            self.kns[nm].stats.write_stalls += c
+        nw = plan.nw
+        if nw:
+            vs = self.versions
+            uk, uc = np.unique(plan.wkeys, return_counts=True)
+            for k, c in zip(uk.tolist(), uc.tolist()):
+                vs[k] = vs.get(k, 0) + c
+            self._seq += nw
         cnt = np.bincount(kn_ids[exec_mask], minlength=len(names))
         per_kn = {names[j]: int(cnt[j]) for j in np.nonzero(cnt)[0]}
         # scalar loops count refused writes too (the write() call refuses
         # after the attempt is recorded by the driver)
-        writes += int((kinds[refused_mask] != 0).sum())
+        writes = nw + int((kinds[refused_mask] != 0).sum())
         return BatchResult(int(exec_mask.sum()), writes, per_kn,
                            keys[exec_mask], out_values)
 
-    def _run_fused_ops(self, live_pos, keys, kinds, kn_ids, rep_mask,
-                       names, value, values, probe_map, probe_ver,
-                       out_values) -> int:
-        """One pass over the batch in submission order, with every op
-        inlined against its owner KN's array-backed cache.
-
-        Value hits are three list writes; always-promoting shortcut
-        hits (Eq. 1 with free space or free victims -- the common case
-        on warm zipfian caches) run an inlined promote-and-demote
-        transition over the same lazy heaps; undecided promotions,
-        misses, writes and replicated keys drop to the exact library
-        methods, with the per-KN state mirrors synced around the call.
-        Misses consume the batched index-probe prefetch (re-validated
-        against the pool's metadata version). Per-KN statistics
-        accumulate in context slots and are applied once at the end.
-        The result is operation-for-operation identical to calling
-        read()/write() per op (property-tested), minus the per-op
-        routing and dispatch overhead.
-
-        ctx slots: 0 kn, 1 cache, 2 count, 3 stamp, 4 kind.item,
-        5 ptr, 6 clock, 7 value_hits, 8 misses, 9 rts, 10 unused,
-        11 unused, 12 writes, 13 stalls, 14 length, 15 kind array,
-        16 used, 17 zero_shortcuts, 18 nvals, 19 nshort,
-        20 shortcut_hits, 21 promotions, 22 demotions, 23 evictions,
-        24 lru heap, 25 lfu heap, 26 capacity, 27 pending mutation
-        bumps (flushed to cache.mutations by sync)
-        """
+    def _build_write_plan(self, kinds, keys, kn_ids, live, names, value,
+                          values) -> "_WritePlan":
+        """Stage every live write's log append up front: one bulk heap
+        extension in global write order (pointer values are observable,
+        so allocation order must match the per-op sequence) with the
+        owning segments pre-assigned, vectorized amortized-flush RTs
+        from each KN's pending-flush counter, and the rotation schedule
+        (purely count-based, hence exact). Segment *entries* are filled
+        lazily -- a segment's entries land when it rotates (or at batch
+        end for the final partial segment), which is exactly when the
+        per-op path would have completed them; filling earlier would
+        inflate unmerged_count and distort the write-stall cadence."""
         pool = self.pool
-        heap = pool.heap_val
-        heap_len = pool.heap_len
-        versions = self.versions
-        vbytes = self.value_bytes
-        collect = out_values is not None
-        heappush, heappop = heapq.heappush, heapq.heappop
-        ctxs = []
-        for nm in names:
+        plan = _WritePlan()
+        wpos = np.nonzero(live & (kinds != 0))[0]
+        nw = int(wpos.size)
+        plan.nw = nw
+        if nw == 0:
+            return plan
+        wkeys = keys[wpos]
+        wkn = kn_ids[wpos]
+        wdel = kinds[wpos] == 2
+        vb = self.value_bytes
+        del_l = wdel.tolist()
+        vals = [None if d else self._value_at(p, value, values)
+                for p, d in zip(wpos.tolist(), del_l)]
+        lens = [0 if d else vb for d in del_l]
+        base = pool.alloc_values_batch(vals, lens)
+        ptrs = base + np.arange(nw, dtype=np.int64)
+        rts = np.zeros(nw, np.float64)
+        cap = pool.segment_capacity
+        hs = pool.heap_seg
+        rotations = []
+        for j in np.unique(wkn):
+            nm = names[int(j)]
             kn = self.kns[nm]
-            c = kn.cache
-            ctxs.append([kn, c, c.count, c.stamp, c.kind.item, c.ptr,
-                         c._clock, 0, 0, 0.0, 0, 0, 0, 0,
-                         c.length, c.kind, c.used, c._zero_shortcuts,
-                         c._nvals, c._nshort, 0, 0, 0, 0,
-                         c._lru, c._lfu, c.capacity, 0])
+            sel = np.nonzero(wkn == j)[0]
+            m = sel.size
+            seq = np.arange(1, m + 1)
+            rts[sel] = ((kn._pending_flush + seq) % kn.write_batch == 0)
+            kn._pending_flush = (kn._pending_flush + m) % kn.write_batch
+            logical = np.where(wdel[sel], -wkeys[sel] - 1, wkeys[sel])
+            pl = ptrs[sel].tolist()
+            # segment ranges: the active segment takes the first
+            # cap - c0 staged entries, fresh segments take cap each
+            active = pool.segments[nm][-1]
+            if len(active.entries) >= cap:
+                # defensively rotate a full active segment (log_write
+                # and the event loop never leave one, but an external
+                # caller could) -- mirrors fill_segments_batch
+                pool.merge_backlog.append((active, 0))
+                active = PySegment(cap, nm)
+                pool.segments[nm].append(active)
+                pool.gc.segments_created += 1
+            c0 = len(active.entries)
+            segq: list[tuple] = []
+            lo = 0
+            seg = active
+            while True:
+                hi_ = min(lo + (cap if lo else cap - c0), m)
+                segq.append((seg, lo, hi_))
+                for p in pl[lo:hi_]:
+                    hs[p] = seg
+                lo = hi_
+                if lo >= m:
+                    break
+                seg = PySegment(cap, nm)
+            rotm = (c0 + seq) % cap == 0
+            rpos = wpos[sel][rotm]
+            # every full range in segq corresponds to one rotation
+            assert int(rotm.sum()) == sum(
+                1 for s, a, b in segq
+                if b - a == (cap if a else cap - c0))
+            rotations.extend(zip(rpos.tolist(), itertools.repeat(nm)))
+            plan.segq[nm] = segq
+            plan.rot_done[nm] = 0
+            plan.staged[nm] = (logical.tolist(), pl)
+            plan.wpos_by_name[nm] = wpos[sel]
+        rotations.sort(key=lambda t: t[0])
+        plan.rotations = rotations
+        plan.ptrs = ptrs
+        plan.rts = rts
+        plan.wkeys = wkeys
+        wrank = np.full(keys.shape[0], -1, np.int64)
+        wrank[wpos] = np.arange(nw)
+        plan.wrank = wrank
+        # list mirrors for the per-op window loops (python list indexing
+        # beats numpy scalar indexing in the short-run regime)
+        plan.ptrs_l = ptrs.tolist()
+        plan.rts_l = rts.tolist()
+        plan.wrank_l = wrank.tolist()
+        return plan
 
-        def sync(ctx):
-            c = ctx[1]
-            c._clock = ctx[6]
-            c.used = ctx[16]
-            c._zero_shortcuts = ctx[17]
-            c._nvals = ctx[18]
-            c._nshort = ctx[19]
-            if ctx[27]:
-                c.mutations += ctx[27]
-                ctx[27] = 0
+    def _fill_planned_segment(self, plan, nm, final: bool) -> None:
+        """Land a planned segment's staged entries. ``final=False``:
+        the segment just rotated -- fill it to capacity, enqueue it for
+        async merge, and install the next planned (or a fresh) segment
+        as the KN's active one, exactly as per-op log_write would have.
+        ``final=True``: the batch is over -- fill the partial tail."""
+        pool = self.pool
+        k = plan.rot_done.get(nm, 0)
+        segq = plan.segq.get(nm)
+        if segq is None or k >= len(segq):
+            return
+        seg, lo, hi = segq[k]
+        if not final:
+            lk, pl = plan.staged[nm]
+            seg.entries.extend(zip(lk[lo:hi], pl[lo:hi]))
+            seg.sealed.extend([True] * (hi - lo))
+            seg.valid += hi - lo
+            plan.rot_done[nm] = k + 1
+            pool.merge_backlog.append((seg, 0))
+            nxt = segq[k + 1][0] if k + 1 < len(segq) \
+                else PySegment(pool.segment_capacity, nm)
+            pool.segments[nm].append(nxt)
+            pool.gc.segments_created += 1
+            return
+        # batch end: the remaining range (if any) is the partial tail
+        if hi > lo:
+            lk, pl = plan.staged[nm]
+            seg.entries.extend(zip(lk[lo:hi], pl[lo:hi]))
+            seg.sealed.extend([True] * (hi - lo))
+            seg.valid += hi - lo
+            plan.rot_done[nm] = k + 1
 
-        def reload(ctx):
-            c = ctx[1]
-            ctx[6] = c._clock
-            ctx[16] = c.used
-            ctx[17] = c._zero_shortcuts
-            ctx[18] = c._nvals
-            ctx[19] = c._nshort
-            ctx[24] = c._lru
-            ctx[25] = c._lfu
+    # ----- window processing -----------------------------------------------
+    def _advance_windows(self, windows, hi, keys, kinds, plan, probe_map,
+                         dkeys, dbuckets, out_values) -> None:
+        for w in windows:
+            pos = w.pos
+            if w.idx < pos.size and pos[w.idx] <= hi:
+                self._run_window(w, hi, keys, kinds, plan, probe_map,
+                                 dkeys, dbuckets, out_values)
 
-        # the inline transitions must keep cache.mutations observable
-        # (the Eq. 1 victim-sum cache keys on it), so promotions /
-        # demotions / evictions bump it inside the loop via ctx[1]
-        pos_l = live_pos.tolist()
-        key_l = keys[live_pos].tolist()
-        op_l = kinds[live_pos].tolist()
-        kn_l = kn_ids[live_pos].tolist()
-        if rep_mask.any():
-            rep_l = rep_mask[live_pos].tolist()
-        else:
-            rep_l = itertools.repeat(False)
-        writes = 0
-        seq = 0
-        for p_, k, op, j, rep in zip(pos_l, key_l, op_l, kn_l, rep_l):
-            ctx = ctxs[j]
-            if rep:
-                # replicated keys: exact generic path (indirection RTs,
-                # CAS publication)
-                kn = ctx[0]
-                sync(ctx)
-                if op == 0:
-                    r = self.read(k, kn.name)
-                    if collect:
-                        out_values[p_] = r[0]
-                else:
-                    writes += 1
-                    self.write(k, self._value_at(p_, value, values),
-                               kn.name)
-                reload(ctx)
+    def _run_window(self, w, hi, keys, kinds, plan, probe_map, dkeys,
+                    dbuckets, out_values) -> None:
+        """One KN's ops in (last window end, hi], in order: classify the
+        span with one kind-gather, split into maximal same-class runs,
+        apply vectorizable runs in bulk (re-validated against the live
+        cache at run boundaries), drop to the exact scalar op
+        otherwise. The scaffold is shared by the DAC and static planes;
+        only the per-class run handlers differ."""
+        pos = w.pos
+        i0 = w.idx
+        i1 = int(np.searchsorted(pos, hi, side="right"))
+        if i1 <= i0:
+            return
+        w.idx = i1
+        span = pos[i0:i1]
+        kn, cache = w.kn, w.cache
+        is_dac = w.is_dac
+        skeys = keys[span]
+        sops = kinds[span]
+        cls = np.where(sops == 0, cache.kind[skeys],
+                       np.where(sops == 1, np.int8(3), np.int8(4)))
+        m = span.size
+        bnd = np.nonzero(cls[1:] != cls[:-1])[0] + 1
+        starts = (0, *bnd.tolist())
+        ends = (*bnd.tolist(), m)
+        cls_l = cls.tolist()
+        span_l = keys_l = None
+        for s, e in zip(starts, ends):
+            c = cls_l[s]
+            if c == 2 and e - s >= 48:
+                # a long value-hit run stays in numpy end to end
+                self._vh_run_big(kn, cache, span[s:e], skeys[s:e],
+                                 probe_map, dkeys, dbuckets, out_values)
                 continue
-            if op == 0:
-                kd = ctx[4](k)
-                if kd == 2:                                  # value hit
-                    ctx[2][k] += 1
-                    ctx[3][k] = ctx[6]
-                    ctx[6] += 1
-                    ctx[7] += 1                              # value_hits
-                    if collect:
-                        out_values[p_] = heap[ctx[5][k]]
-                elif kd == 1:                                # shortcut hit
-                    cnt = ctx[2]
-                    c = cnt[k] + 1
-                    cnt[k] = c
-                    if c == 1:
-                        ctx[17] -= 1
-                    ctx[20] += 1                             # shortcut_hits
-                    ctx[9] += 1.0          # one-sided pointer chase
-                    if collect:
-                        out_values[p_] = heap[ctx[5][k]]
-                    # Eq. 1 fast decision (exact: sufficient conditions)
-                    lenl = ctx[14]
-                    vb = lenl[k] + 40      # VALUE_OVERHEAD_BYTES
-                    used = ctx[16]
-                    free = ctx[26] - used
-                    if free >= vb - 32:
-                        promote = True
-                    elif ctx[17] >= -((free - vb + 32) // 32):
-                        promote = True     # victims all free: Eq.1 rhs 0
-                    else:
-                        promote = None     # undecided: exact slow path
-                    if promote is None:
-                        cache = ctx[1]
-                        sync(ctx)
-                        if cache._should_promote(k, c, lenl[k]):
-                            cache._promote(k)
-                            cache.stats.promotions += 1
-                        reload(ctx)
-                        continue
-                    # ---- inline promote: shortcut -> value (Table 3) --
-                    ctx[21] += 1                             # promotions
-                    ctx[27] += 1                             # a mutation
-                    kind_a = ctx[15]
-                    kind_a[k] = 0
-                    used -= 32
-                    ctx[19] -= 1                             # nshort
-                    cap = ctx[26]
-                    stp = ctx[3]
-                    # make space: demote LRU values, then evict LFU
-                    if used + vb > cap:
-                        lru = ctx[24]
-                        nvals = ctx[18]
-                        while used + vb > cap and nvals:
-                            if len(lru) > 4 * nvals + 64:
-                                cache = ctx[1]
-                                cache._compact_lru()
-                                lru = cache._lru
-                                ctx[24] = lru
-                            v = None
-                            while lru:
-                                st_, kk = heappop(lru)
-                                if kind_a[kk] != 2:
-                                    continue           # stale: drop
-                                cur = stp[kk]
-                                if cur != st_:
-                                    heappush(lru, (cur, kk))  # refresh
-                                    continue
-                                v = kk
-                                break
-                            if v is None:
-                                break
-                            used -= lenl[v] + 40
-                            nvals -= 1
-                            kind_a[v] = 0
-                            ctx[22] += 1                     # demotions
-                            if used + 32 + vb <= cap:
-                                kind_a[v] = 1
-                                heappush(ctx[25], (cnt[v], v))
-                                used += 32
-                                ctx[19] += 1
-                                if cnt[v] == 0:
-                                    ctx[17] += 1
-                        ctx[18] = nvals
-                        while used + vb > cap and ctx[19]:
-                            lfu = ctx[25]
-                            if len(lfu) > 4 * ctx[19] + 64:
-                                cache = ctx[1]
-                                cache._compact_lfu()
-                                lfu = cache._lfu
-                                ctx[25] = lfu
-                            v = None
-                            while lfu:
-                                ct_, kk = heappop(lfu)
-                                if kind_a[kk] != 1:
-                                    continue
-                                cur = cnt[kk]
-                                if cur != ct_:
-                                    heappush(lfu, (cur, kk))
-                                    continue
-                                v = kk
-                                break
-                            if v is None:
-                                break
-                            kind_a[v] = 0
-                            used -= 32
-                            ctx[19] -= 1
-                            if cnt[v] == 0:
-                                ctx[17] -= 1
-                            ctx[23] += 1                     # evictions
-                    if used + vb > cap:
-                        # degenerate: cannot fit the value even after
-                        # demotions/evictions -> falls back to a
-                        # shortcut entry, exactly as _insert_value
-                        if used + 32 <= cap:
-                            kind_a[k] = 1
-                            heappush(ctx[25], (c, k))
-                            used += 32
-                            ctx[19] += 1
-                    else:
-                        kind_a[k] = 2
-                        clock = ctx[6]
-                        stp[k] = clock
-                        heappush(ctx[24], (clock, k))
-                        ctx[6] = clock + 1
-                        used += vb
-                        ctx[18] += 1
-                    ctx[16] = used
-                else:                                        # miss
-                    ctx[8] += 1                              # misses
-                    kn = ctx[0]
-                    cache = ctx[1]
-                    seg = kn.segcache.get(k)
-                    if seg is not None:
-                        ptr, length = seg    # local segment: 0 RTs
-                        sync(ctx)
-                        cache.fill_after_write(k, ptr, length,
-                                               segment_cached=True)
-                        reload(ctx)
-                        if collect:
-                            out_values[p_] = heap[ptr]
-                    else:
-                        probe = None
-                        if probe_ver == pool.meta_version:
-                            probe = probe_map.get(p_)
-                        ptr, probes = (pool.index_lookup(k)
-                                       if probe is None else probe)
-                        if ptr is None:
-                            ctx[9] += probes
-                        else:
-                            rts_op = probes + 1.0   # traversal + value
-                            ctx[9] += rts_op
-                            cache.note_miss_rts(rts_op)
-                            sync(ctx)
-                            cache.fill_after_miss(k, ptr, heap_len[ptr])
-                            reload(ctx)
-                            if collect:
-                                out_values[p_] = heap[ptr]
-            else:                                            # write
-                writes += 1
-                seq += 1
-                ctx[12] += 1                                 # writes
-                kn = ctx[0]
-                pf = kn._pending_flush + 1   # amortized batched log write
-                if pf >= kn.write_batch:
-                    kn._pending_flush = 0
-                    ctx[9] += 1.0
+            if span_l is None:
+                span_l = span.tolist()
+                keys_l = skeys.tolist()
+            if c == 2:
+                if is_dac:
+                    self._vh_run(kn, cache, span_l[s:e], keys_l[s:e],
+                                 probe_map, dkeys, dbuckets, out_values)
                 else:
-                    kn._pending_flush = pf
-                nm = kn.name
-                ptr, _rot = pool.log_write(
-                    nm, k, self._value_at(p_, value, values), vbytes)
-                if pool.write_blocked(nm):
-                    ctx[13] += 1                             # write_stalls
-                    pool.merge_budget(pool.segment_capacity)
-                kn._segcache_put(k, ptr, vbytes)
-                cache = ctx[1]
-                sync(ctx)
-                cache.fill_after_write(k, ptr, vbytes, segment_cached=True)
-                reload(ctx)
-                versions[k] = versions.get(k, 0) + 1
-        self._seq += seq
-        for ctx in ctxs:
-            kn, cache = ctx[0], ctx[1]
-            sync(ctx)
-            cs = cache.stats
-            cs.value_hits += ctx[7]
-            cs.misses += ctx[8]
-            cs.shortcut_hits += ctx[20]
-            cs.promotions += ctx[21]
-            cs.demotions += ctx[22]
-            cs.evictions += ctx[23]
-            kn.stats.rts += ctx[9]
-            reads = ctx[7] + ctx[20] + ctx[8]
-            kn.stats.ops += reads + ctx[12]
-            kn.stats.reads += reads
-            kn.stats.writes += ctx[12]
-            kn.stats.write_stalls += ctx[13]
-        return writes
-
-    def _apply_value_runs(self, kn, grp, kcls, keys, probe_map,
-                          probe_ver, out_values) -> None:
-        """One KN's read-only ops, almost all predicted value hits:
-        bulk-apply the hit runs between the (few) predicted structural
-        reads, which take the exact generic path."""
-        cur = 0
-        for sl in np.nonzero(kcls != ArrayDAC.KIND_VALUE)[0].tolist():
-            if sl > cur:
-                self._bulk_value_run(kn, grp[cur:sl], keys, out_values)
-            p = int(grp[sl])
-            probe = None
-            if probe_ver == self.pool.meta_version:
-                probe = probe_map.get(p)
-            r = self.read(int(keys[p]), kn.name, _probe=probe)
-            if out_values is not None:
-                out_values[p] = r[0]
-            cur = sl + 1
-        if cur < grp.shape[0]:
-            self._bulk_value_run(kn, grp[cur:], keys, out_values)
-
-    def _bulk_value_run(self, kn, pos, keys, out_values) -> None:
-        """Apply a run of predicted value hits, re-validating against
-        the live cache (an earlier structural read may have demoted or
-        evicted a key); mispredictions take the exact scalar path in
-        order."""
-        cache = kn.cache
-        while pos.size:
-            ck = keys[pos]
-            ok = cache.kind[ck] == ArrayDAC.KIND_VALUE
-            if ok.all():
-                b = pos.size
+                    self._hit_run_static(kn, cache, span_l[s:e],
+                                         keys_l[s:e], c, probe_map,
+                                         dkeys, dbuckets, out_values)
+            elif c == 1:
+                if is_dac:
+                    self._sc_run(kn, cache, span_l[s:e], keys_l[s:e],
+                                 probe_map, dkeys, dbuckets, out_values)
+                else:
+                    self._hit_run_static(kn, cache, span_l[s:e],
+                                         keys_l[s:e], c, probe_map,
+                                         dkeys, dbuckets, out_values)
+            elif c >= 3:
+                if is_dac:
+                    self._write_run(kn, cache, span_l[s:e], keys_l[s:e],
+                                    c == 4, plan, out_values)
+                else:
+                    self._write_run_generic(kn, cache, span_l[s:e],
+                                            keys_l[s:e], c == 4, plan,
+                                            out_values)
             else:
-                b = int(np.argmax(~ok))
+                # predicted misses: exact scalar ops
+                for p_, k in zip(span_l[s:e], keys_l[s:e]):
+                    self._scalar_read_dac(kn, cache, k, p_, probe_map,
+                                          dkeys, dbuckets, out_values)
+
+    def _vh_run(self, kn, cache, run_pos, run_keys, probe_map, dkeys,
+                dbuckets, out_values) -> None:
+        """A short run of predicted value hits: hit bookkeeping applied
+        inline, with the live entry kind re-checked per op (an earlier
+        op in the window may have moved a key); mispredictions take the
+        exact scalar path in order."""
+        kindarr = cache.kind
+        heap = self.pool.heap_val
+        st = kn.stats
+        cnt = cache.count
+        stp = cache.stamp
+        ptr_l = cache.ptr
+        clock = cache._clock
+        collect = out_values is not None
+        hits = 0
+        for i in range(len(run_keys)):
+            k = run_keys[i]
+            if kindarr[k] != 2:
+                cache._clock = clock
+                self._scalar_read_dac(kn, cache, k, run_pos[i],
+                                      probe_map, dkeys, dbuckets,
+                                      out_values)
+                clock = cache._clock
+                continue
+            cnt[k] += 1
+            stp[k] = clock
+            clock += 1
+            hits += 1
+            if collect:
+                out_values[run_pos[i]] = heap[ptr_l[k]]
+        cache._clock = clock
+        cache.stats.value_hits += hits
+        st.ops += hits
+        st.reads += hits
+
+    def _vh_run_big(self, kn, cache, run_pos, run_keys, probe_map, dkeys,
+                    dbuckets, out_values) -> None:
+        """A long run of predicted value hits: bulk-apply through
+        bulk_value_hits with one vectorized validation gather per
+        sub-run; mispredictions take the exact scalar path in order."""
+        kindarr = cache.kind
+        heap = self.pool.heap_val
+        st = kn.stats
+        while run_keys.size:
+            okm = kindarr[run_keys] == 2
+            b = run_keys.size if okm.all() else int(np.argmax(~okm))
             if b:
-                cache.bulk_value_hits(ck[:b])
-                kn.stats.ops += b
-                kn.stats.reads += b
+                cache.bulk_value_hits(run_keys[:b])
+                st.ops += b
+                st.reads += b
                 if out_values is not None:
                     ptr_l = cache.ptr
-                    heap = self.pool.heap_val
-                    for p, k in zip(pos[:b].tolist(), ck[:b].tolist()):
-                        out_values[p] = heap[ptr_l[k]]
-            if b == pos.size:
+                    for p_, k in zip(run_pos[:b].tolist(),
+                                     run_keys[:b].tolist()):
+                        out_values[p_] = heap[ptr_l[k]]
+            if b == run_keys.size:
                 return
-            p = int(pos[b])
-            r = self.read(int(keys[p]), kn.name)
+            self._scalar_read_dac(kn, cache, int(run_keys[b]),
+                                  int(run_pos[b]), probe_map, dkeys,
+                                  dbuckets, out_values)
+            run_pos = run_pos[b + 1:]
+            run_keys = run_keys[b + 1:]
+
+    def _sc_run(self, kn, cache, run_pos, run_keys, probe_map, dkeys,
+                dbuckets, out_values) -> None:
+        """A run of predicted shortcut hits: the hit bookkeeping and the
+        always-promoting Eq. 1 transition (free space, or enough
+        never-hit shortcut victims -- the common case on warm caches)
+        run inline over the cache's lazy heaps with run-local state
+        mirrors; undecided promotions and mispredictions drop to the
+        exact library path with the mirrors synced around the call."""
+        heap = self.pool.heap_val
+        st = kn.stats
+        cs = cache.stats
+        heappush, heappop = heapq.heappush, heapq.heappop
+        kind_a = cache.kind
+        cnt = cache.count
+        lenl = cache.length
+        ptrl = cache.ptr
+        stp = cache.stamp
+        cap = cache.capacity
+        used = cache.used
+        zshort = cache._zero_shortcuts
+        nvals = cache._nvals
+        nshort = cache._nshort
+        clock = cache._clock
+        lru = cache._lru
+        lfu = cache._lfu
+        hist = cache._cnt_hist
+        hmax = CNT_HIST_MAX
+        nops = 0
+        rts = 0.0
+        shits = promos = demos = evics = 0
+        collect = out_values is not None
+        kl = run_keys
+        pl_ = run_pos
+        m = len(kl)
+        i = 0
+        while i < m:
+            k = kl[i]
+            if kind_a[k] != 1:
+                # misprediction (an earlier op in this window moved the
+                # key): sync mirrors, take the exact scalar path
+                cache.used = used
+                cache._zero_shortcuts = zshort
+                cache._nvals = nvals
+                cache._nshort = nshort
+                cache._clock = clock
+                self._scalar_read_dac(kn, cache, k, pl_[i], probe_map,
+                                      dkeys, dbuckets, out_values)
+                used = cache.used
+                zshort = cache._zero_shortcuts
+                nvals = cache._nvals
+                nshort = cache._nshort
+                clock = cache._clock
+                lru = cache._lru
+                lfu = cache._lfu
+                i += 1
+                continue
+            c = cnt[k] + 1
+            cnt[k] = c
+            if c == 1:
+                zshort -= 1
+            hist[c - 1 if c <= hmax else hmax] -= 1
+            hist[c if c < hmax else hmax] += 1
+            shits += 1
+            nops += 1
+            rts += 1.0          # one-sided pointer chase
+            if collect:
+                out_values[pl_[i]] = heap[ptrl[k]]
+            i += 1
+            # Eq. 1 fast decision (exact: sufficient conditions)
+            ln = lenl[k]
+            vb = ln + 40        # VALUE_OVERHEAD_BYTES
+            free = cap - used
+            if free >= vb - 32:
+                promote = True
+            elif zshort >= -((free - vb + 32) // 32):
+                promote = True  # victims all free: Eq. 1 rhs 0
+            else:
+                promote = None  # undecided: exact slow path
+            if promote is None:
+                cache.used = used
+                cache._zero_shortcuts = zshort
+                cache._nvals = nvals
+                cache._nshort = nshort
+                cache._clock = clock
+                if cache._should_promote(k, c, ln):
+                    cache._promote(k)
+                    cs.promotions += 1
+                used = cache.used
+                zshort = cache._zero_shortcuts
+                nvals = cache._nvals
+                nshort = cache._nshort
+                clock = cache._clock
+                lru = cache._lru
+                lfu = cache._lfu
+                continue
+            # ---- inline promote: shortcut -> value (Table 3) ----
+            promos += 1
+            kind_a[k] = 0
+            used -= 32
+            nshort -= 1
+            hist[c if c < hmax else hmax] -= 1
+            if used + vb > cap:
+                # make space: demote LRU values, then evict LFU
+                while used + vb > cap and nvals:
+                    if len(lru) > 4 * nvals + 64:
+                        cache._compact_lru()
+                        lru = cache._lru
+                    v = None
+                    while lru:
+                        st_, kk = heappop(lru)
+                        if kind_a[kk] != 2:
+                            continue               # stale: drop
+                        cur = stp[kk]
+                        if cur != st_:
+                            heappush(lru, (cur, kk))   # refresh
+                            continue
+                        v = kk
+                        break
+                    if v is None:
+                        break
+                    used -= lenl[v] + 40
+                    nvals -= 1
+                    kind_a[v] = 0
+                    demos += 1
+                    if used + 32 + vb <= cap:
+                        cv = cnt[v]
+                        kind_a[v] = 1
+                        heappush(lfu, (cv, v))
+                        used += 32
+                        nshort += 1
+                        if cv == 0:
+                            zshort += 1
+                        hist[cv if cv < hmax else hmax] += 1
+                while used + vb > cap and nshort:
+                    if len(lfu) > 4 * nshort + 64:
+                        cache._compact_lfu()
+                        lfu = cache._lfu
+                    v = None
+                    while lfu:
+                        ct_, kk = heappop(lfu)
+                        if kind_a[kk] != 1:
+                            continue
+                        cur = cnt[kk]
+                        if cur != ct_:
+                            heappush(lfu, (cur, kk))
+                            continue
+                        v = kk
+                        break
+                    if v is None:
+                        break
+                    cv = cnt[v]
+                    kind_a[v] = 0
+                    used -= 32
+                    nshort -= 1
+                    if cv == 0:
+                        zshort -= 1
+                    hist[cv if cv < hmax else hmax] -= 1
+                    evics += 1
+            if used + vb > cap:
+                # degenerate: cannot fit the value even after
+                # demotions/evictions -> falls back to a shortcut
+                # entry, exactly as _insert_value
+                if used + 32 <= cap:
+                    kind_a[k] = 1
+                    heappush(lfu, (c, k))
+                    used += 32
+                    nshort += 1
+                    hist[c if c < hmax else hmax] += 1
+            else:
+                kind_a[k] = 2
+                stp[k] = clock
+                # monotonic stamps exceed every record in the heap, so
+                # appending keeps the heap invariant (O(1) vs O(log n))
+                lru.append((clock, k))
+                clock += 1
+                used += vb
+                nvals += 1
+        cache.used = used
+        cache._zero_shortcuts = zshort
+        cache._nvals = nvals
+        cache._nshort = nshort
+        cache._clock = clock
+        cs.shortcut_hits += shits
+        cs.promotions += promos
+        cs.demotions += demos
+        cs.evictions += evics
+        st.ops += nops
+        st.reads += nops
+        st.rts += rts
+
+    def _scalar_read_dac(self, kn, cache, k, p, probe_map, dkeys, dbuckets,
+                         out_values) -> None:
+        """One exact non-replicated read against an ArrayDAC KN --
+        read() minus routing, with the batched probe prefetch in place
+        of the live index traversal when still provably fresh."""
+        pool = self.pool
+        st = kn.stats
+        st.ops += 1
+        st.reads += 1
+        rts = 0.0
+        value = None
+        hit = cache.lookup(k)
+        if hit is not None:
+            kind, ptr, _len = hit
+            if kind != "value":
+                rts = 1.0                          # one-sided pointer chase
+            value = pool.heap_val[ptr]
+        else:
+            seg = kn.segcache.get(k)
+            if seg is not None:
+                ptr, length = seg
+                value = pool.heap_val[ptr]         # local segment: 0 RTs
+                cache.fill_after_write(k, ptr, length, segment_cached=True)
+            else:
+                pr = probe_map.get(p)
+                if pr is None or k in dkeys or pr[2] in dbuckets:
+                    ptr, probes = pool.index_lookup(k)
+                else:
+                    ptr, probes = pr[0], pr[1]
+                if ptr is None:
+                    st.rts += probes               # index traversal only
+                    return
+                rts = probes + 1.0                 # traversal + value fetch
+                cache.note_miss_rts(rts)
+                cache.fill_after_miss(k, ptr, pool.heap_len[ptr])
+                value = pool.heap_val[ptr]
+        st.rts += rts
+        if out_values is not None:
+            out_values[p] = value
+
+    def _write_run(self, kn, cache, run_pos, run_keys, delete, plan,
+                   out_values) -> None:
+        """A run of same-KN writes: the log plane is already staged
+        (pointers, flush RTs, segment entries), leaving the segcache
+        update and the cache fill -- fill_after_write(segment_cached)
+        inlined over the run-local state mirrors (value entry when it
+        fits, else a shortcut with the full demote-LRU/evict-LFU
+        make-space loop, exactly as the library path)."""
+        st = kn.stats
+        nrun = len(run_pos)
+        st.ops += nrun
+        st.writes += nrun
+        wrank_l = plan.wrank_l
+        rts_l = plan.rts_l
+        ptrs_l = plan.ptrs_l
+        segd = kn.segcache
+        if delete:
+            rts = 0.0
+            for p_, k in zip(run_pos, run_keys):
+                rts += rts_l[wrank_l[p_]]
+                cache.invalidate(k)
+                segd.pop(k, None)
+            st.rts += rts
+            return
+        segcap = kn.segcache_cap
+        vbytes = self.value_bytes
+        vbb = vbytes + 40              # VALUE_OVERHEAD_BYTES
+        heappush, heappop = heapq.heappush, heapq.heappop
+        kind_a = cache.kind
+        cnt = cache.count
+        lenl = cache.length
+        ptrl = cache.ptr
+        stp = cache.stamp
+        cap = cache.capacity
+        used = cache.used
+        zshort = cache._zero_shortcuts
+        nvals = cache._nvals
+        nshort = cache._nshort
+        clock = cache._clock
+        lru = cache._lru
+        lfu = cache._lfu
+        hist = cache._cnt_hist
+        hmax = CNT_HIST_MAX
+        demos = evics = 0
+        rts = 0.0
+        for p_, k in zip(run_pos, run_keys):
+            ptr = ptrs_l[wrank_l[p_]]
+            rts += rts_l[wrank_l[p_]]
+            segd[k] = (ptr, vbytes)
+            segd.move_to_end(k)
+            while len(segd) > segcap:
+                segd.popitem(last=False)
+            # ---- fill_after_write(k, ptr, vbytes, segment_cached) ----
+            kd = kind_a[k]
+            if kd == 0:
+                cpri = 0
+            elif kd == 1:
+                cpri = cnt[k]
+                kind_a[k] = 0
+                used -= 32
+                nshort -= 1
+                if cpri == 0:
+                    zshort -= 1
+                hist[cpri if cpri < hmax else hmax] -= 1
+            else:
+                cpri = cnt[k]
+                kind_a[k] = 0
+                used -= lenl[k] + 40
+                nvals -= 1
+            if used + vbb <= cap:
+                # the value entry fits: insert, no space-making needed
+                kind_a[k] = 2
+                ptrl[k] = ptr
+                lenl[k] = vbytes
+                cnt[k] = cpri
+                stp[k] = clock
+                # monotonic stamp: plain append keeps the heap invariant
+                lru.append((clock, k))
+                clock += 1
+                used += vbb
+                nvals += 1
+                continue
+            # shortcut entry: _make_space(32), demote-first (Table 3)
+            while used + 32 > cap and nvals:
+                if len(lru) > 4 * nvals + 64:
+                    cache._compact_lru()
+                    lru = cache._lru
+                v = None
+                while lru:
+                    st_, kk = heappop(lru)
+                    if kind_a[kk] != 2:
+                        continue                   # stale: drop
+                    cur = stp[kk]
+                    if cur != st_:
+                        heappush(lru, (cur, kk))   # refresh
+                        continue
+                    v = kk
+                    break
+                if v is None:
+                    break
+                used -= lenl[v] + 40
+                nvals -= 1
+                kind_a[v] = 0
+                demos += 1
+                if used + 32 + 32 <= cap:
+                    cv = cnt[v]
+                    kind_a[v] = 1
+                    heappush(lfu, (cv, v))
+                    used += 32
+                    nshort += 1
+                    if cv == 0:
+                        zshort += 1
+                    hist[cv if cv < hmax else hmax] += 1
+            while used + 32 > cap and nshort:
+                if len(lfu) > 4 * nshort + 64:
+                    cache._compact_lfu()
+                    lfu = cache._lfu
+                v = None
+                while lfu:
+                    ct_, kk = heappop(lfu)
+                    if kind_a[kk] != 1:
+                        continue
+                    cur = cnt[kk]
+                    if cur != ct_:
+                        heappush(lfu, (cur, kk))
+                        continue
+                    v = kk
+                    break
+                if v is None:
+                    break
+                cv = cnt[v]
+                kind_a[v] = 0
+                used -= 32
+                nshort -= 1
+                if cv == 0:
+                    zshort -= 1
+                hist[cv if cv < hmax else hmax] -= 1
+                evics += 1
+            if used + 32 <= cap:
+                kind_a[k] = 1
+                ptrl[k] = ptr
+                lenl[k] = vbytes
+                cnt[k] = cpri
+                heappush(lfu, (cpri, k))
+                used += 32
+                nshort += 1
+                if cpri == 0:
+                    zshort += 1
+                hist[cpri if cpri < hmax else hmax] += 1
+            # else: cache smaller than one entry: degenerate, skip
+        st.rts += rts
+        cache.used = used
+        cache._zero_shortcuts = zshort
+        cache._nvals = nvals
+        cache._nshort = nshort
+        cache._clock = clock
+        cs = cache.stats
+        cs.demotions += demos
+        cs.evictions += evics
+
+    def _hit_run_static(self, kn, cache, run_pos, run_keys, kd, probe_map,
+                        dkeys, dbuckets, out_values) -> None:
+        """A run of predicted static-cache hits (value or shortcut):
+        each hit is a recency bump (+1 RT for shortcuts), re-validated
+        per op; mispredictions take the exact scalar path."""
+        kindarr = cache.kind
+        heap = self.pool.heap_val
+        st = kn.stats
+        stp = cache.stamp
+        ptr_l = cache.ptr
+        clock = cache._clock
+        collect = out_values is not None
+        hits = 0
+        for i in range(len(run_keys)):
+            k = run_keys[i]
+            if kindarr[k] != kd:
+                cache._clock = clock
+                self._scalar_read_dac(kn, cache, k, run_pos[i],
+                                      probe_map, dkeys, dbuckets,
+                                      out_values)
+                clock = cache._clock
+                continue
+            stp[k] = clock
+            clock += 1
+            hits += 1
+            if collect:
+                out_values[run_pos[i]] = heap[ptr_l[k]]
+        cache._clock = clock
+        st.ops += hits
+        st.reads += hits
+        if kd == 2:
+            cache.stats.value_hits += hits
+        else:
+            cache.stats.shortcut_hits += hits
+            st.rts += float(hits)          # one-sided pointer chase each
+
+    def _write_run_generic(self, kn, cache, run_pos, run_keys, delete,
+                           plan, out_values) -> None:
+        """A run of same-KN writes against a non-DAC cache: staged log
+        plane + segcache update + the library fill per op."""
+        st = kn.stats
+        nrun = len(run_pos)
+        st.ops += nrun
+        st.writes += nrun
+        wrank_l = plan.wrank_l
+        rts_l = plan.rts_l
+        ptrs_l = plan.ptrs_l
+        segd = kn.segcache
+        rts = 0.0
+        if delete:
+            for p_, k in zip(run_pos, run_keys):
+                rts += rts_l[wrank_l[p_]]
+                cache.invalidate(k)
+                segd.pop(k, None)
+            st.rts += rts
+            return
+        segcap = kn.segcache_cap
+        vb = self.value_bytes
+        for p_, k in zip(run_pos, run_keys):
+            r = wrank_l[p_]
+            ptr = ptrs_l[r]
+            rts += rts_l[r]
+            segd[k] = (ptr, vb)
+            segd.move_to_end(k)
+            while len(segd) > segcap:
+                segd.popitem(last=False)
+            cache.fill_after_write(k, ptr, vb, segment_cached=True)
+        st.rts += rts
+
+    def _exec_rep_op(self, p, kinds, keys, kn_ids, names, plan, dkeys,
+                     out_values) -> None:
+        """One replicated-key op at its exact global position (the
+        indirection slot is shared across owners, so these synchronize
+        globally): reads take the generic read() path; writes replay
+        write()'s indirection CAS against the staged log pointer."""
+        k = int(keys[p])
+        kn = self.kns[names[int(kn_ids[p])]]
+        if kinds[p] == 0:
+            r = self.read(k, kn.name)
             if out_values is not None:
                 out_values[p] = r[0]
-            pos = pos[b + 1:]
+            return
+        delete = kinds[p] == 2
+        st = kn.stats
+        st.ops += 1
+        st.writes += 1
+        rank = int(plan.wrank[p])
+        rts = float(plan.rts[rank])
+        ptr = int(plan.ptrs[rank])
+        length = 0 if delete else self.value_bytes
+        replicated = (self.variant.selective_replication
+                      and self.ownership.is_replicated(k) and not delete)
+        if replicated:
+            # atomically swing the indirect pointer: one-sided CAS
+            expect = self.pool.read_indirect(k)
+            self.pool.cas_indirect(k, expect, ptr)
+            rts += 1.0
+            kn.cache.update_pointer(k, ptr, length)
+            dkeys.add(k)       # index_lookup(k) now resolves differently
+        elif delete:
+            kn.cache.invalidate(k)
+            kn.segcache.pop(k, None)
+        else:
+            kn._segcache_put(k, ptr, length)
+            kn.cache.fill_after_write(k, ptr, length, segment_cached=True)
+        st.rts += rts
 
     @staticmethod
     def _kn_groups(pos: np.ndarray, kn_ids: np.ndarray):
@@ -911,6 +1525,140 @@ class DinomoCluster:
         sp = pos[order]
         bounds = np.nonzero(np.diff(ids[order]))[0] + 1
         yield from np.split(sp, bounds)
+
+    def _execute_batch_clover(self, kinds, keys, value, values,
+                              blocked_kns, out_values) -> "BatchResult":
+        """The batched Clover plane (shared-everything, version-chain
+        cache): client routing draws the rng per op exactly as the
+        scalar path, version-counter checks and shortcut fills run
+        against the ArrayCloverCache, and the per-write merge-all
+        (Clover updates metadata in place) is staged -- superseded
+        pointers invalidate eagerly at their op position through a
+        pending-index overlay, the CLHT bucket updates land once at
+        batch end via the grouped insert_batch. Requires (and leaves)
+        empty active logs; statistics are op-for-op identical to the
+        per-op path (property-tested)."""
+        pool = self.pool
+        versions = self.versions
+        heap = pool.heap_val
+        heap_len = pool.heap_len
+        heap_seg = pool.heap_seg
+        gc = pool.gc
+        kns = self.kns
+        names = [n for n, k in kns.items() if k.alive]
+        n = keys.shape[0]
+        if not names:
+            return BatchResult(0, 0, {}, keys[:0], out_values)
+        choice = self.rng.choice
+        kn_names = [choice(names) for _ in range(n)]
+        blocked = set(blocked_kns)
+        ptr0, _probes = pool.index_lookup_batch(keys)
+        ptr0_l = ptr0.tolist()
+        keys_l = keys.tolist()
+        kinds_l = kinds.tolist()
+        vb = self.value_bytes
+        cap = pool.segment_capacity
+        collect = out_values is not None
+        pend: dict[int, int] = {}      # key -> latest in-batch ptr (-1 del)
+        wrote: set[str] = set()
+        per_kn: dict[str, int] = {}
+        exec_idx: list[int] = []
+        writes = 0
+        ms = 0
+        vbump = 0                      # index.version bumps the per-op
+        v0 = pool.index.version        # sequence would have made
+        for i in range(n):
+            nm = kn_names[i]
+            if nm in blocked:
+                continue
+            k = keys_l[i]
+            kn = kns[nm]
+            exec_idx.append(i)
+            per_kn[nm] = per_kn.get(nm, 0) + 1
+            st = kn.stats
+            if not kn.available:
+                st.refused += 1
+                if kinds_l[i]:
+                    writes += 1
+                continue
+            cache = kn.cache
+            if kinds_l[i] == 0:
+                # ---- _clover_read, staged index ----
+                st.ops += 1
+                st.reads += 1
+                cur = versions.get(k, 0)
+                cached = cache.lookup(k)
+                rts = 0.0
+                if cached is None:
+                    ms += 1            # two-sided RPC to metadata server
+                    rts = 1.0
+                p_ = pend.get(k, ptr0_l[i])
+                if p_ < 0:
+                    st.rts += rts
+                    continue
+                stale = cur - cached \
+                    if cached is not None and cur > cached else 0
+                # walk the version chain from the cached cursor
+                rts += 2.0 + stale
+                cache.fill(k, cur)
+                if collect:
+                    out_values[i] = heap[p_]
+                st.rts += rts
+                continue
+            # ---- _clover_write + staged merge-all ----
+            writes += 1
+            delete = kinds_l[i] == 2
+            st.ops += 1
+            st.writes += 1
+            length = 0 if delete else vb
+            ptr = len(heap)
+            heap.append(None if delete
+                        else self._value_at(i, value, values))
+            heap_len.append(length)
+            seg = PySegment(cap, nm)
+            seg.entries.append((-k - 1 if delete else k, ptr))
+            seg.sealed.append(True)
+            seg.valid = 1
+            seg.merged_upto = 1
+            heap_seg.append(seg)
+            wrote.add(nm)
+            gc.entries_merged += 1     # Clover merges each write in place
+            old = pend.get(k)
+            if old is None:
+                old = ptr0_l[i]
+            if delete:
+                seg.valid -= 1         # tombstone consumes its own entry
+                if old >= 0:
+                    vbump += 1
+                    pool._invalidate_ptr(old)
+                pend[k] = -1
+            else:
+                vbump += 1
+                if old >= 0 and old != ptr:
+                    pool._invalidate_ptr(old)
+                pend[k] = ptr
+            versions[k] = versions.get(k, 0) + 1
+            cache.fill(k, versions[k])
+            st.rts += 2.0              # out-of-place append + link/CAS
+        # land the final index state (grouped bucket update); superseded
+        # pointers were invalidated at their op positions above
+        if pend:
+            ins = [(k, p) for k, p in pend.items() if p >= 0]
+            if ins:
+                ka = np.fromiter((k for k, _ in ins), np.int64, len(ins))
+                pa = np.fromiter((p for _, p in ins), np.int64, len(ins))
+                pool.index.insert_batch(ka, pa)
+            for k, p in pend.items():
+                if p < 0:
+                    pool.index.delete(k)
+            # align the version counter with the per-op merge cadence
+            pool.index.version = v0 + vbump
+        for nm in wrote:
+            pool.segments[nm] = [PySegment(cap, nm)]
+        self.ms_ops += ms
+        idx = np.asarray(exec_idx, dtype=np.int64)
+        return BatchResult(len(exec_idx), writes, per_kn, keys[idx],
+                           out_values)
 
     def _execute_batch_fused(self, kinds, keys, value, values, blocked_kns,
                              out_values):
@@ -933,6 +1681,9 @@ class DinomoCluster:
                 r = read(key, kn)
                 if out_values is not None:
                     out_values[i] = r[0]
+            elif kinds[i] == 2:
+                writes += 1
+                write(key, None, kn, delete=True)
             else:
                 writes += 1
                 write(key, self._value_at(i, value, values), kn)

@@ -30,6 +30,12 @@ import numpy as np
 # Entry overheads (bytes): key + pointer + length (+ access count for values)
 SHORTCUT_BYTES = 32
 VALUE_OVERHEAD_BYTES = 40
+# ArrayDAC keeps a histogram of live-shortcut access counts in
+# [0, CNT_HIST_MAX); the Eq. 1 victim sum (sum of the n cheapest
+# shortcut counts) then reads off the histogram in O(1) instead of an
+# O(n log H) LFU-heap peek per shortcut hit. Counts at or above the
+# bound fall back to the exact peek (rare: such victims are hot).
+CNT_HIST_MAX = 64
 
 
 @dataclass
@@ -334,11 +340,9 @@ class ArrayDAC:
         self._lfu: list[tuple[int, int]] = []   # lazy heap (count, key)
         self._nvals = 0
         self._nshort = 0
-        # bumped whenever membership / kinds / used change: the batch
-        # engine's promotion screen is valid while this is unchanged
-        self.mutations = 0
-        self._screen_cache: tuple[int, dict] = (-1, {})
         self._zero_shortcuts = 0   # live shortcuts with count == 0
+        # live-shortcut access-count histogram (see CNT_HIST_MAX)
+        self._cnt_hist = [0] * (CNT_HIST_MAX + 1)
 
     # ----- sizes -----------------------------------------------------------
     value_bytes = staticmethod(DAC.value_bytes)
@@ -371,6 +375,9 @@ class ArrayDAC:
             self.count[key] = c
             if c == 1:
                 self._zero_shortcuts -= 1
+            hist = self._cnt_hist
+            hist[c - 1 if c <= CNT_HIST_MAX else CNT_HIST_MAX] -= 1
+            hist[c if c < CNT_HIST_MAX else CNT_HIST_MAX] += 1
             self.stats.shortcut_hits += 1
             p, ln = self.ptr[key], self.length[key]
             if self._should_promote(key, c, ln):
@@ -412,7 +419,6 @@ class ArrayDAC:
             self.kind[key] = self.KIND_NONE
             self.used -= self.value_bytes(ln)
             self._nvals -= 1
-            self.mutations += 1
             self._insert_shortcut(key, p, ln, count=cnt)
 
     def update_pointer(self, key: int, ptr: int, length: int) -> None:
@@ -427,7 +433,6 @@ class ArrayDAC:
                 self.update_pointer(key, ptr, length)
                 return
             self.used += delta
-            self.mutations += 1
         self.ptr[key] = ptr
         self.length[key] = length
 
@@ -442,7 +447,7 @@ class ArrayDAC:
         self._nvals = 0
         self._nshort = 0
         self._zero_shortcuts = 0
-        self.mutations += 1
+        self._cnt_hist = [0] * (CNT_HIST_MAX + 1)
 
     def __contains__(self, key: int) -> bool:
         return key < self.kind.shape[0] and self.kind[key] != 0
@@ -489,19 +494,28 @@ class ArrayDAC:
             self._ensure(int(keys.max()))
         return self.kind[keys]
 
-    def _lfu_prefix(self, n: int):
-        """(sum of the n cheapest live shortcut counts, enough-victims
-        flag), cached until the next structural mutation."""
-        if self._screen_cache[0] != self.mutations:
-            self._screen_cache = (self.mutations, {})
-        d = self._screen_cache[1]
-        if n not in d:
-            if self._zero_shortcuts >= n:
-                d[n] = (0, True)       # n cheapest victims are all free
-            else:
-                victims = self._peek_lfu(n, exclude=-1)
-                d[n] = (sum(c for c, _ in victims), len(victims) >= n)
-        return d[n]
+    def _victim_sum_hist(self, n: int, exclude_cnt: int):
+        """Sum of the n smallest live-shortcut counts, excluding one
+        shortcut with count ``exclude_cnt`` (the promotion candidate).
+        None if the n-th victim spills past the histogram range -- the
+        caller then takes the exact heap peek. The sum over the n
+        cheapest counts is a multiset quantity, so tie-breaking by key
+        cannot change it: the result equals the peek's sum exactly."""
+        hist = self._cnt_hist
+        s = 0
+        got = 0
+        for c in range(CNT_HIST_MAX):
+            m = hist[c]
+            if c == exclude_cnt:
+                m -= 1
+            if m <= 0:
+                continue
+            take = m if m <= n - got else n - got
+            s += take * c
+            got += take
+            if got == n:
+                return s
+        return None
 
     # ----- internals --------------------------------------------------------
     def _remove(self, key: int):
@@ -509,7 +523,6 @@ class ArrayDAC:
         if kd == self.KIND_NONE:
             return None
         out = (self.ptr[key], self.length[key], self.count[key])
-        self.mutations += 1
         if kd == self.KIND_VALUE:
             self.used -= self.value_bytes(out[1])
             self._nvals -= 1
@@ -518,6 +531,8 @@ class ArrayDAC:
             self._nshort -= 1
             if out[2] == 0:
                 self._zero_shortcuts -= 1
+            self._cnt_hist[out[2] if out[2] < CNT_HIST_MAX
+                           else CNT_HIST_MAX] -= 1
         self.kind[key] = self.KIND_NONE
         return out
 
@@ -529,7 +544,6 @@ class ArrayDAC:
         if self.used + need > self.capacity:
             self._insert_shortcut(key, ptr, length, count)
             return
-        self.mutations += 1
         self.kind[key] = self.KIND_VALUE
         self.ptr[key] = ptr
         self.length[key] = length
@@ -546,7 +560,6 @@ class ArrayDAC:
         self._make_space(SHORTCUT_BYTES)
         if self.used + SHORTCUT_BYTES > self.capacity:
             return  # cache smaller than one entry: degenerate, skip
-        self.mutations += 1
         self.kind[key] = self.KIND_SHORTCUT
         self.ptr[key] = ptr
         self.length[key] = length
@@ -556,6 +569,8 @@ class ArrayDAC:
         self._nshort += 1
         if count == 0:
             self._zero_shortcuts += 1
+        self._cnt_hist[count if count < CNT_HIST_MAX
+                       else CNT_HIST_MAX] += 1
 
     def _compact_lru(self) -> None:
         """Rebuild the LRU heap with one live record per value entry.
@@ -599,25 +614,29 @@ class ArrayDAC:
             self.used -= self.value_bytes(ln)
             self._nvals -= 1
             self.kind[k] = self.KIND_NONE
-            self.mutations += 1
             self.stats.demotions += 1
             if self.used + SHORTCUT_BYTES + need <= self.capacity:
+                c = self.count[k]
                 self.kind[k] = self.KIND_SHORTCUT
-                heapq.heappush(self._lfu, (self.count[k], k))
+                heapq.heappush(self._lfu, (c, k))
                 self.used += SHORTCUT_BYTES
                 self._nshort += 1
-                if self.count[k] == 0:
+                if c == 0:
                     self._zero_shortcuts += 1
+                self._cnt_hist[c if c < CNT_HIST_MAX
+                               else CNT_HIST_MAX] += 1
         while self.used + need > self.capacity and self._nshort:
             k = self._pop_lfu()
             if k is None:
                 break
+            c = self.count[k]
             self.kind[k] = self.KIND_NONE
             self.used -= SHORTCUT_BYTES
             self._nshort -= 1
-            if self.count[k] == 0:
+            if c == 0:
                 self._zero_shortcuts -= 1
-            self.mutations += 1
+            self._cnt_hist[c if c < CNT_HIST_MAX
+                           else CNT_HIST_MAX] -= 1
             self.stats.evictions += 1
 
     def _pop_lfu(self) -> int | None:
@@ -670,18 +689,19 @@ class ArrayDAC:
         if self._zero_shortcuts >= n_evict:
             # enough never-hit shortcuts: eviction is free (Eq. 1 rhs 0)
             return True
-        saving = cnt * self.avg_shortcut_hit_rts
-        total, enough = self._lfu_prefix(n_evict)
-        if not enough:
-            return False
-        if saving < total * self.avg_miss_rts:
-            # the cached victim-sum only underestimates the true cost
-            return False
+        if self._nshort - 1 < n_evict:
+            return False                 # not enough shortcuts to evict
+        total = self._victim_sum_hist(n_evict, cnt)
+        if total is not None:
+            return cnt * self.avg_shortcut_hit_rts \
+                >= total * self.avg_miss_rts
+        # histogram spill (a needed victim has count >= CNT_HIST_MAX):
+        # fall back to the exact heap peek
         victims = self._peek_lfu(n_evict, exclude=key)
         if len(victims) < n_evict:
             return False
         evict_cost = sum(c for c, _ in victims) * self.avg_miss_rts
-        return saving >= evict_cost
+        return cnt * self.avg_shortcut_hit_rts >= evict_cost
 
     def _promote(self, key: int) -> None:
         p, ln, cnt = self.ptr[key], self.length[key], self.count[key]
@@ -690,9 +710,200 @@ class ArrayDAC:
         self._nshort -= 1
         if cnt == 0:
             self._zero_shortcuts -= 1
-        self.mutations += 1
+        self._cnt_hist[cnt if cnt < CNT_HIST_MAX
+                       else CNT_HIST_MAX] -= 1
         # inherits access count (paper Sec. 4)
         self._insert_value(key, p, ln, count=cnt)
+
+
+class ArrayStaticCache:
+    """Array-backed StaticCache: the batched data plane's cache for the
+    Fig. 3 static-split baselines (shortcut-only, value-only, static:f).
+
+    Same policy as ``StaticCache``, decision-for-decision (property
+    tested): entries live in dense per-key vectors -- kind (0 absent /
+    1 shortcut / 2 value), pointer, length, recency stamp -- so a batch
+    classifies with one gather and runs of hits apply in bulk. Each
+    side keeps its own lazy LRU heap: argmin (stamp, key) over a side
+    equals that side's OrderedDict order (stamps are monotone and hits
+    move-to-end)."""
+
+    KIND_NONE, KIND_SHORTCUT, KIND_VALUE = 0, 1, 2
+
+    def __init__(self, capacity_bytes: int, value_fraction: float,
+                 initial_keys: int = 1024):
+        self.value_cap = int(capacity_bytes * value_fraction)
+        self.shortcut_cap = capacity_bytes - self.value_cap
+        self.value_used = 0
+        self.shortcut_used = 0
+        self.stats = CacheStats()
+        n = max(initial_keys, 8)
+        self.kind = np.zeros(n, np.int8)
+        self.ptr = [-1] * n
+        self.length = [0] * n
+        self.stamp = [0] * n
+        self._clock = 1
+        self._vlru: list[tuple[int, int]] = []   # lazy heap (stamp, key)
+        self._slru: list[tuple[int, int]] = []
+        self._nvals = 0
+        self._nshort = 0
+
+    def _ensure(self, key: int) -> None:
+        n = self.kind.shape[0]
+        if key < n:
+            return
+        m = max(2 * n, key + 1)
+        self.kind = np.concatenate([self.kind, np.zeros(m - n, np.int8)])
+        self.ptr.extend([-1] * (m - n))
+        self.length.extend([0] * (m - n))
+        self.stamp.extend([0] * (m - n))
+
+    # ----- public per-op API (mirrors StaticCache) --------------------------
+    def lookup(self, key: int):
+        self._ensure(key)
+        kd = self.kind[key]
+        if kd == self.KIND_VALUE:
+            self.stamp[key] = self._clock
+            self._clock += 1
+            self.stats.value_hits += 1
+            return ("value", self.ptr[key], self.length[key])
+        if kd == self.KIND_SHORTCUT:
+            self.stamp[key] = self._clock
+            self._clock += 1
+            self.stats.shortcut_hits += 1
+            return ("shortcut", self.ptr[key], self.length[key])
+        self.stats.misses += 1
+        return None
+
+    def note_miss_rts(self, rts: float) -> None:  # interface parity
+        pass
+
+    def _pop_side(self, heap, kd):
+        """Pop the least-recently-used live key of one side."""
+        live = self._nvals if kd == self.KIND_VALUE else self._nshort
+        if len(heap) > 4 * live + 64:
+            self._compact(kd)
+            heap = self._vlru if kd == self.KIND_VALUE else self._slru
+        while heap:
+            st, k = heapq.heappop(heap)
+            if self.kind[k] != kd:
+                continue                          # stale record: drop
+            cur = self.stamp[k]
+            if cur != st:
+                heapq.heappush(heap, (cur, k))    # refresh
+                continue
+            return k
+        return None
+
+    def _compact(self, kd) -> None:
+        keys = np.nonzero(self.kind == kd)[0].tolist()
+        stp = self.stamp
+        heap = [(stp[k], k) for k in keys]
+        heapq.heapify(heap)
+        if kd == self.KIND_VALUE:
+            self._vlru = heap
+        else:
+            self._slru = heap
+
+    def fill_after_miss(self, key: int, ptr: int, length: int) -> None:
+        self._ensure(key)
+        vb = VALUE_OVERHEAD_BYTES + length
+        if vb <= self.value_cap:
+            while self.value_used + vb > self.value_cap and self._nvals:
+                v = self._pop_side(self._vlru, self.KIND_VALUE)
+                if v is None:
+                    break
+                self.kind[v] = self.KIND_NONE
+                self.value_used -= VALUE_OVERHEAD_BYTES + self.length[v]
+                self._nvals -= 1
+                self.stats.evictions += 1
+            if self.value_used + vb <= self.value_cap:
+                self.kind[key] = self.KIND_VALUE
+                self.ptr[key] = ptr
+                self.length[key] = length
+                self.stamp[key] = self._clock
+                heapq.heappush(self._vlru, (self._clock, key))
+                self._clock += 1
+                self.value_used += vb
+                self._nvals += 1
+                return
+        while self.shortcut_used + SHORTCUT_BYTES > self.shortcut_cap \
+                and self._nshort:
+            v = self._pop_side(self._slru, self.KIND_SHORTCUT)
+            if v is None:
+                break
+            self.kind[v] = self.KIND_NONE
+            self.shortcut_used -= SHORTCUT_BYTES
+            self._nshort -= 1
+            self.stats.evictions += 1
+        if self.shortcut_used + SHORTCUT_BYTES <= self.shortcut_cap:
+            self.kind[key] = self.KIND_SHORTCUT
+            self.ptr[key] = ptr
+            self.length[key] = length
+            self.stamp[key] = self._clock
+            heapq.heappush(self._slru, (self._clock, key))
+            self._clock += 1
+            self.shortcut_used += SHORTCUT_BYTES
+            self._nshort += 1
+
+    def fill_after_write(self, key: int, ptr: int, length: int,
+                         segment_cached: bool) -> None:
+        self.invalidate(key)
+        self.fill_after_miss(key, ptr, length)
+
+    def invalidate(self, key: int) -> None:
+        self._ensure(key)
+        kd = self.kind[key]
+        if kd == self.KIND_VALUE:
+            self.value_used -= VALUE_OVERHEAD_BYTES + self.length[key]
+            self._nvals -= 1
+        elif kd == self.KIND_SHORTCUT:
+            self.shortcut_used -= SHORTCUT_BYTES
+            self._nshort -= 1
+        self.kind[key] = self.KIND_NONE
+
+    def demote_to_shortcut(self, key: int) -> None:
+        self._ensure(key)
+        if self.kind[key] == self.KIND_VALUE:
+            p, ln = self.ptr[key], self.length[key]
+            self.kind[key] = self.KIND_NONE
+            self.value_used -= VALUE_OVERHEAD_BYTES + ln
+            self._nvals -= 1
+            self.fill_after_miss(key, p, ln)
+
+    def update_pointer(self, key: int, ptr: int, length: int) -> None:
+        self._ensure(key)
+        if self.kind[key] != self.KIND_NONE:
+            # StaticCache.update_pointer does not re-account bytes
+            self.ptr[key] = ptr
+            self.length[key] = length
+
+    def clear(self) -> None:
+        n = self.kind.shape[0]
+        self.kind[:] = 0
+        self.stamp[:] = [0] * n
+        self._vlru.clear()
+        self._slru.clear()
+        self.value_used = self.shortcut_used = 0
+        self._nvals = self._nshort = 0
+
+    def __contains__(self, key: int) -> bool:
+        return key < self.kind.shape[0] and self.kind[key] != 0
+
+    def bulk_value_hits(self, keys: np.ndarray) -> None:
+        """A run of value hits: recency = clock at the key's last
+        position in the run, exactly what per-op lookups do."""
+        n = keys.shape[0]
+        stp, c0 = self.stamp, self._clock
+        if n > 48:
+            u, ridx = np.unique(keys[::-1], return_index=True)
+            for k, r in zip(u.tolist(), ridx.tolist()):
+                stp[k] = c0 + (n - 1 - r)
+        else:
+            for i, k in enumerate(keys.tolist()):
+                stp[k] = c0 + i
+        self._clock += n
+        self.stats.value_hits += n
 
 
 class StaticCache:

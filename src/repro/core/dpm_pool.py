@@ -35,7 +35,20 @@ class GCStats:
 class DPMPool:
     def __init__(self, num_buckets: int = 1 << 18,
                  segment_capacity: int = 2048,
-                 unmerged_threshold: int = 2):
+                 unmerged_threshold: int = 2,
+                 vectorized: bool = True):
+        # ``vectorized=False`` keeps the per-entry merge path -- the
+        # oracle the batched merge plane is property-tested against
+        self.vectorized = vectorized
+        # opt-in per-epoch merge allowance: when set, merge_budget
+        # debits it so a batched flush (or a stall storm) cannot merge
+        # more per epoch than the DPM processors could; merge_all (the
+        # synchronous reconfiguration/recovery merge) bypasses it.
+        self.merge_allowance: int | None = None
+        # (keys, buckets) sets updated by merges while tracking is on:
+        # the batch engine uses them to spot prefetched index probes
+        # that went stale mid-batch (key remapped / chain grew)
+        self._dirty: tuple[set, set] | None = None
         self.index = NumpyCLHT(num_buckets)
         # value heap: ptr -> payload / length / owning segment
         self.heap_val: list = []
@@ -92,6 +105,66 @@ class DPMPool:
                 self.segments[kn] = segs = keep
         return len(segs) - 1
 
+    # ----- staged oplog (the batched write plane) ----------------------------
+    def alloc_values_batch(self, values, lengths) -> int:
+        """Bulk heap extension for a staged oplog flush: entry i of the
+        flush gets pointer ``base + i``. Owning segments are recorded
+        when the entries land via fill_segments_batch."""
+        base = len(self.heap_val)
+        self.heap_val.extend(values)
+        self.heap_len.extend(lengths)
+        self.heap_seg.extend([None] * (len(self.heap_val) - base))
+        return base
+
+    def fill_segments_batch(self, kn: str, keys, ptrs) -> list[PySegment]:
+        """Append a run of staged (key, ptr) entries to the KN's log,
+        creating (but NOT enqueuing) rotated segments: the caller must
+        replay the rotation events in global op order, because per-op
+        log_write pushes to the *shared* merge backlog at rotation time
+        and the backlog is consumed FIFO across KNs. Returns the
+        filled-up segments, in order."""
+        segs = self.segments[kn]
+        seg = segs[-1]
+        cap = self.segment_capacity
+        rotated: list[PySegment] = []
+        hs = self.heap_seg
+        i, n = 0, len(keys)
+        while i < n:
+            if len(seg.entries) >= cap:
+                # defensively rotate a full active segment (log_write
+                # never leaves one, but a caller could)
+                rotated.append(seg)
+                seg = PySegment(cap, kn)
+                segs.append(seg)
+                self.gc.segments_created += 1
+            take = min(cap - len(seg.entries), n - i)
+            ki = keys[i:i + take]
+            pi = ptrs[i:i + take]
+            seg.entries.extend(zip(ki, pi))
+            seg.sealed.extend([True] * take)
+            seg.valid += take
+            for p in pi:
+                hs[p] = seg
+            i += take
+            if len(seg.entries) >= cap:
+                rotated.append(seg)
+                seg = PySegment(cap, kn)
+                segs.append(seg)
+                self.gc.segments_created += 1
+        return rotated
+
+    def log_write_batch(self, kn: str, keys, values, lengths):
+        """Batched ``log_write``: one heap extension + one segment fill
+        for a run of same-KN entries, rotated segments enqueued for
+        async merge in order. Element-wise equivalent to per-entry
+        log_write calls. Returns (ptrs, rotations)."""
+        base = self.alloc_values_batch(values, lengths)
+        ptrs = list(range(base, base + len(keys)))
+        rotated = self.fill_segments_batch(kn, keys, ptrs)
+        for seg in rotated:
+            self.merge_backlog.append((seg, 0))
+        return ptrs, len(rotated)
+
     def log_write(self, kn: str, key: int, value, length: int,
                   sealed: bool = True) -> tuple[int, bool]:
         """Append one entry to the KN's active segment. Returns
@@ -115,26 +188,38 @@ class DPMPool:
     # ----- asynchronous merge (DPM processors) --------------------------------
     def merge_budget(self, ops: int) -> int:
         """Merge up to ``ops`` log entries from the backlog, strictly in
-        order within each segment. Returns entries merged."""
+        order within each segment. When ``merge_allowance`` is set (the
+        per-epoch DPM-processor budget), the call additionally debits
+        and respects the remaining allowance, so a batched oplog flush
+        cannot merge more in one epoch than the per-op path's budgeted
+        cadence would. Returns entries merged."""
+        if self.merge_allowance is not None:
+            ops = min(ops, self.merge_allowance)
         done = 0
         while self.merge_backlog and done < ops:
             seg, _ = self.merge_backlog.popleft()
             entries = seg.sealed_entries()
-            while seg.merged_upto < len(entries) and done < ops:
-                key, ptr = entries[seg.merged_upto]
-                self._merge_entry(key, ptr, seg)
-                seg.merged_upto += 1
-                done += 1
+            take = min(len(entries) - seg.merged_upto, ops - done)
+            if take > 0:
+                self.merge_entries_batch(
+                    entries[seg.merged_upto:seg.merged_upto + take], seg)
+                seg.merged_upto += take
+                done += take
             if seg.merged_upto < len(entries):
                 self.merge_backlog.appendleft((seg, 0))
             else:
                 self._maybe_collect(seg)
+        if self.merge_allowance is not None:
+            self.merge_allowance -= done
         return done
 
     def merge_all(self, kn: str | None = None) -> int:
         """Synchronous merge of all pending entries (reconfiguration step
         3 / failure recovery: 'merges all pending logs from the KNs
-        involved before allowing the other KNs to serve reads')."""
+        involved before allowing the other KNs to serve reads').
+        Deliberately exempt from ``merge_allowance``: the protocol's
+        synchronous merges must complete regardless of the async
+        DPM-processor budget."""
         done = 0
         # backlog first (order preserved), filtered by KN if given
         keep: deque = deque()
@@ -144,9 +229,10 @@ class DPMPool:
                 keep.append((seg, 0))
                 continue
             entries = seg.sealed_entries()
-            for key, ptr in entries[seg.merged_upto:]:
-                self._merge_entry(key, ptr, seg)
-                done += 1
+            todo = entries[seg.merged_upto:]
+            if todo:
+                self.merge_entries_batch(todo, seg)
+                done += len(todo)
             seg.merged_upto = len(entries)
             self._maybe_collect(seg)
         self.merge_backlog = keep
@@ -156,19 +242,72 @@ class DPMPool:
                 continue
             act = segs[-1]
             entries = act.sealed_entries()
-            for key, ptr in entries[act.merged_upto:]:
-                self._merge_entry(key, ptr, act)
-                done += 1
+            todo = entries[act.merged_upto:]
+            if todo:
+                self.merge_entries_batch(todo, act)
+                done += len(todo)
             act.merged_upto = len(entries)
             if entries:
                 self.segments[owner] = [PySegment(self.segment_capacity,
                                                   owner)]
         return done
 
+    def merge_entries_batch(self, entries, seg: PySegment) -> None:
+        """Merge a run of (key, ptr) entries of one segment in order --
+        element-wise equivalent to per-entry ``_merge_entry`` (property
+        tested). Non-tombstone runs go through the grouped CLHT bucket
+        update (NumpyCLHT.insert_batch); superseded pointers are
+        invalidated in one pass with per-segment GC accounting.
+        Tombstones and indirection-table keys keep scalar semantics."""
+        if not self.vectorized or len(entries) < 8:
+            for key, ptr in entries:
+                self._merge_entry(key, ptr, seg)
+            return
+        arr = np.asarray(entries, dtype=np.int64)
+        keys, ptrs = arr[:, 0], arr[:, 1]
+        tpos = np.nonzero(keys < 0)[0]
+        start, n = 0, keys.shape[0]
+        for t in (*tpos.tolist(), n):
+            if t > start:
+                self._merge_run(keys[start:t], ptrs[start:t])
+            if t < n:
+                self._merge_entry(int(keys[t]), int(ptrs[t]), seg)
+            start = t + 1
+
+    def _merge_run(self, keys: np.ndarray, ptrs: np.ndarray) -> None:
+        """One tombstone-free merge run (helper of merge_entries_batch)."""
+        self.gc.entries_merged += int(keys.shape[0])
+        if self.indirect:
+            # replicated keys already published via CAS: skip the index
+            # (one-pass indirection check instead of per-entry membership)
+            keep = ~np.isin(keys, self._indirect_keys_array())
+            if not keep.all():
+                keys, ptrs = keys[keep], ptrs[keep]
+        if not keys.shape[0]:
+            return
+        old, ok, grown = self.index.insert_batch(keys, ptrs)
+        if self._dirty is not None:
+            self._dirty[0].update(keys.tolist())
+            self._dirty[1].update(grown)
+        inv = ok & (old >= 0) & (old != ptrs)
+        if inv.any():
+            hv, hs = self.heap_val, self.heap_seg
+            touched = {}
+            for o in old[inv].tolist():
+                hv[o] = None                    # value superseded
+                s = hs[o]
+                if s is not None:
+                    s.valid -= 1
+                    touched[id(s)] = s
+            for s in touched.values():
+                self._maybe_collect(s)
+
     def _merge_entry(self, key: int, ptr: int, seg: PySegment) -> None:
         if key < 0:   # tombstone entry: key encoded as -(key+1)
             real = -key - 1
             old, found = self.index.delete(real)
+            if self._dirty is not None:
+                self._dirty[0].add(real)
             if found and old is not None:
                 self._invalidate_ptr(old)
             self.gc.entries_merged += 1
@@ -182,10 +321,25 @@ class DPMPool:
         if key in self.indirect:
             pass
         else:
+            head0 = self.index.overflow_head
             old, ok = self.index.insert(key, ptr)
+            if self._dirty is not None:
+                self._dirty[0].add(key)
+                if self.index.overflow_head != head0:
+                    self._dirty[1].add(self.index._bucket(key))
             if ok and old is not None and old != ptr:
                 self._invalidate_ptr(old)
         self.gc.entries_merged += 1
+
+    def track_merge_dirty(self) -> tuple[set, set]:
+        """Start recording (keys remapped, primary buckets grown) by
+        merges -- the batch engine's probe-staleness oracle. Returns the
+        live (keys, buckets) set pair."""
+        self._dirty = (set(), set())
+        return self._dirty
+
+    def untrack_merge_dirty(self) -> None:
+        self._dirty = None
 
     def _invalidate_ptr(self, ptr: int) -> None:
         seg = self.heap_seg[ptr]

@@ -162,7 +162,11 @@ class PySegment:
         self.valid += 1
 
     def sealed_entries(self) -> list[tuple[int, int]]:
-        """Longest sealed prefix (crash-consistent view)."""
+        """Longest sealed prefix (crash-consistent view). Fully sealed
+        segments (the overwhelmingly common case) return the entry list
+        itself -- callers only slice (copies) or take len()."""
+        if False not in self.sealed:
+            return self.entries
         out = []
         for (k, p), s in zip(self.entries, self.sealed):
             if not s:

@@ -10,7 +10,6 @@ data reorganization for DINOMO-N, membership refresh for Clover).
 
 from __future__ import annotations
 
-import heapq
 import math
 from dataclasses import dataclass, field
 
@@ -67,9 +66,39 @@ class TimedSimulation:
         self.now = 0.0
         self.outages: list[Outage] = []
         self.trace: list[TimePoint] = []
-        self._epoch_freq: dict[int, float] = {}
+        # per-epoch key-frequency accumulator, sparse: sorted key array
+        # + aligned counts, merged once per step -- top-k extraction is
+        # one argpartition over the distinct sampled keys instead of
+        # nlargest over a dict of every sampled key (which dominated
+        # the batched plane's step cost on low-skew workloads)
+        self._ef_keys = np.empty(0, np.int64)
+        self._ef_cnts = np.empty(0, np.int64)
         self._epoch_total = 0.0
         self._next_epoch = cluster.mnode.cfg.epoch_s
+
+    def _freq_add(self, u: np.ndarray, cnt: np.ndarray) -> None:
+        """Fold one step's (sorted unique keys, counts) into the epoch
+        accumulator (one sorted merge)."""
+        if self._ef_keys.size == 0:
+            self._ef_keys = u.astype(np.int64)
+            self._ef_cnts = cnt.astype(np.int64)
+            return
+        merged = np.union1d(self._ef_keys, u)
+        cnts = np.zeros(merged.size, np.int64)
+        cnts[np.searchsorted(merged, self._ef_keys)] = self._ef_cnts
+        cnts[np.searchsorted(merged, u)] += cnt
+        self._ef_keys, self._ef_cnts = merged, cnts
+
+    def _freq_top(self, k: int):
+        """The k highest-frequency (key, count) pairs this epoch."""
+        c = self._ef_cnts
+        if c.size > k:
+            idx = np.argpartition(c, c.size - k)[-k:]
+        else:
+            idx = np.arange(c.size)
+        kk = self._ef_keys
+        return [(int(kk[i]), float(c[i])) for i in idx.tolist()
+                if c[i] > 0]
 
     # ------------------------------------------------------------------
     def _alive_kns(self):
@@ -107,11 +136,19 @@ class TimedSimulation:
                                             1))
         ops = self.workload(self.now, self.rng, n_sample)
         c.reset_stats()
+        # per-step DPM-processor merge budget: write-stall merges inside
+        # the step and the async catch-up below share one allowance, so
+        # neither the per-op loop nor a batched flush can merge more per
+        # step than the processors could (merge_all -- the synchronous
+        # reconfiguration merge -- is exempt)
+        budget = int(model.merge_capacity() * self.dt)
+        c.pool.merge_allowance = budget
         if self.batched:
             n_ops, per_kn_ops, writes = self._step_batched(ops)
         else:
             n_ops, per_kn_ops, writes = self._step_scalar(ops)
-        c.advance_merge(int(model.merge_capacity() * self.dt))
+        c.advance_merge(budget)
+        c.pool.merge_allowance = None
 
         stats = c.aggregate_stats()
         rts = max(stats["rts_per_op"], 1e-3)
@@ -120,13 +157,12 @@ class TimedSimulation:
         # hottest single-owner key: its effective share is divided by
         # its replication factor (paper Sec. 3.4 / selective replication)
         top_share = 0.0
-        if self._epoch_freq and c.variant.architecture \
+        if self._epoch_total and c.variant.architecture \
                 != "shared_everything":
             tot_f = self._epoch_total
-            # top-8 without a full sort: the epoch-frequency map holds
-            # every sampled key (paper-scale with the batched plane)
-            for k, f in heapq.nlargest(8, self._epoch_freq.items(),
-                                       key=lambda kv: kv[1]):
+            # top-8 without a full sort: the epoch-frequency vectors
+            # hold every sampled key (paper-scale, batched plane)
+            for k, f in self._freq_top(8):
                 eff = (f / tot_f) / c.ownership.replication_factor(k)
                 top_share = max(top_share, eff)
         cap = model.cluster_throughput(
@@ -178,10 +214,8 @@ class TimedSimulation:
         res = c.execute_batch(kinds, keys, value=f"v@{self.now}",
                               blocked_kns=blocked)
         if res.executed:
-            ef = self._epoch_freq
             u, cnt = np.unique(res.executed_keys, return_counts=True)
-            for k, f in zip(u.tolist(), cnt.tolist()):
-                ef[k] = ef.get(k, 0.0) + f
+            self._freq_add(u, cnt)
             self._epoch_total += float(res.executed)
         return kinds.shape[0], res.per_kn, res.writes
 
@@ -194,6 +228,7 @@ class TimedSimulation:
                    for kd, k in zip(kinds, keys)]
         per_kn_ops: dict[str, int] = {}
         writes = 0
+        step_freq: dict[int, int] = {}
         for kind, key in ops:
             try:
                 kn = c.route(key)
@@ -207,8 +242,13 @@ class TimedSimulation:
             else:
                 writes += 1
                 c.write(key, f"v@{self.now}", kn)
-            self._epoch_freq[key] = self._epoch_freq.get(key, 0.0) + 1.0
+            step_freq[key] = step_freq.get(key, 0) + 1
             self._epoch_total += 1.0
+        if step_freq:
+            u = np.fromiter(sorted(step_freq), np.int64, len(step_freq))
+            cnt = np.fromiter((step_freq[k] for k in u.tolist()),
+                              np.int64, u.size)
+            self._freq_add(u, cnt)
         return len(ops), per_kn_ops, writes
 
     def _load_shares(self, per_kn_ops: dict[str, int]):
@@ -250,19 +290,18 @@ class TimedSimulation:
             kn_rate = share * offered
             occupancy[n] = min(kn_rate / max(self.model.kn_cpu_ops, 1.0),
                                1.0)
-        top = dict(heapq.nlargest(64, self._epoch_freq.items(),
-                                  key=lambda kv: kv[1]))
         epoch_s = c.mnode.cfg.epoch_s
         stats = EpochStats(
             now=self.now, avg_latency=avg_lat, p99_latency=p99,
             occupancy=occupancy,
-            key_freq={k: v / epoch_s for k, v in top.items()},
+            key_freq={k: f / epoch_s for k, f in self._freq_top(64)},
             replication={k: c.ownership.replication_factor(k)
                          for k in c.ownership.replicated},
         )
         for action in c.mnode.decide(stats):
             self._apply(action)
-        self._epoch_freq.clear()
+        self._ef_keys = np.empty(0, np.int64)
+        self._ef_cnts = np.empty(0, np.int64)
         self._epoch_total = 0.0
 
     def _apply(self, action):

@@ -1,3 +1,3 @@
 from .log_merge import log_merge
-from .ops import merge_segment_fast, unpack_table
-from .ref import log_merge_ref
+from .ops import log_append_merge, merge_segment_fast, unpack_table
+from .ref import log_append_merge_ref, log_merge_ref

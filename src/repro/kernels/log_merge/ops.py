@@ -1,15 +1,24 @@
-"""jit-compatible wrapper: merge a LogSegment into a CLHT using the
-Pallas kernel for the common case and the jnp chain-insert slow path for
-bucket-full entries (rare by construction: the table is sized so the
-primary bucket absorbs almost all keys)."""
+"""jit-compatible wrappers for the DPM write path:
+
+* merge_segment_fast -- merge a LogSegment into a CLHT using the Pallas
+  kernel for the common case and the jnp chain-insert slow path for
+  bucket-full entries (rare by construction: the table is sized so the
+  primary bucket absorbs almost all keys);
+* log_append_merge -- the fused batched KVS *write* op, analogous to
+  clht_probe.kvs_lookup on the read side: one out-of-place heap append,
+  one sealed log append, and the Pallas merge of exactly the pending
+  window, in a single jitted dispatch.
+"""
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from ...core.clht import CLHT, bucket_of, clht_insert
-from ...core.log import LogSegment
+from ...core.log import LogSegment, ValueHeap, heap_append, log_append
 from ..clht_probe.clht_probe import pack_table
 from .log_merge import LANES, log_merge
 
@@ -49,3 +58,43 @@ def merge_segment_fast(table: CLHT, seg: LogSegment, *,
     old = jnp.where(slow, old_slow, old)
     ok = (ok == 1) | (slow & ok_slow)
     return table, old, ok
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def log_append_merge(table: CLHT, seg: LogSegment, heap: ValueHeap,
+                     keys: jax.Array, values: jax.Array, *,
+                     interpret: bool = True):
+    """Fused batched write path (paper Secs. 3.2 + 3.6): append the
+    value rows to the heap out of place, append the sealed (key, ptr)
+    entries to the exclusive log segment, and merge the segment's
+    pending window into the CLHT -- the Pallas log_merge kernel for
+    primary-bucket entries, the jnp chain-insert slow path for the
+    rest. One jitted dispatch instead of three, the write-side analog
+    of ``clht_probe.kvs_lookup``.
+
+    Returns (table, seg, heap, ptrs, old_ptrs, ok):
+      ptrs      (B,) heap rows assigned to the batch (-1 if no room)
+      old_ptrs  (B,) value rows superseded per entry (-1 fresh) -- the
+                caller feeds these to the per-segment GC counters
+      ok        (B,) bool. All-False (with table/seg/heap returned
+                unchanged and ptrs -1) when the batch did not fit in
+                the segment; otherwise the appends are committed and
+                ok[i] is False only for entries whose CLHT insert
+                failed (table full even via the overflow chain)
+    Matches ``log_append_merge_ref`` exactly (property-tested)."""
+    n = keys.shape[0]
+    start = seg.count
+    heap2, ptrs = heap_append(heap, values)
+    seg2, fit = log_append(seg, keys, ptrs)
+    table2, old_full, ok_full = merge_segment_fast(table, seg2,
+                                                   interpret=interpret)
+    seg3 = LogSegment(keys=seg2.keys, ptrs=seg2.ptrs, seal=seg2.seal,
+                      count=seg2.count, merged=seg2.count)
+    old = jax.lax.dynamic_slice(old_full, (start,), (n,))
+    okb = jax.lax.dynamic_slice(ok_full.astype(jnp.int32), (start,), (n,))
+    sel = lambda a, b: jax.tree_util.tree_map(
+        lambda x, y: jnp.where(fit, x, y), a, b)
+    return (sel(table2, table), sel(seg3, seg), sel(heap2, heap),
+            jnp.where(fit, ptrs, -1),
+            jnp.where(fit, old, -1),
+            jnp.where(fit, okb, 0).astype(bool))

@@ -1,8 +1,40 @@
-"""Sequential oracle for log_merge (numpy, exact semantics)."""
+"""Sequential oracles for the log_merge kernels: numpy for the raw
+bucket-line merge, jnp (scan-based sequential chain inserts) for the
+fused log_append_merge op."""
 
 from __future__ import annotations
 
 import numpy as np
+
+
+def log_append_merge_ref(table, seg, heap, keys, values):
+    """Pure-jnp oracle for the fused log_append_merge: the un-fused
+    three-dispatch path -- heap_append, log_append, then the strictly
+    sequential clht_insert over the pending window (the same oracle
+    merge_segment uses). Returns (table, seg, heap, ptrs, old, ok)."""
+    import jax
+    import jax.numpy as jnp
+    from ...core.clht import clht_insert
+    from ...core.log import LogSegment, heap_append, log_append
+
+    n = keys.shape[0]
+    start = seg.count
+    heap2, ptrs = heap_append(heap, values)
+    seg2, fit = log_append(seg, keys, ptrs)
+    idx = jnp.arange(seg2.keys.shape[0], dtype=jnp.int32)
+    todo = (idx >= seg2.merged) & (idx < seg2.count) & (seg2.seal == 1)
+    table2, old_full, ok_full, _ = clht_insert(table, seg2.keys,
+                                               seg2.ptrs, todo)
+    seg3 = LogSegment(keys=seg2.keys, ptrs=seg2.ptrs, seal=seg2.seal,
+                      count=seg2.count, merged=seg2.count)
+    old = jax.lax.dynamic_slice(old_full, (start,), (n,))
+    okb = jax.lax.dynamic_slice(ok_full.astype(jnp.int32), (start,), (n,))
+    sel = lambda a, b: jax.tree_util.tree_map(
+        lambda x, y: jnp.where(fit, x, y), a, b)
+    return (sel(table2, table), sel(seg3, seg), sel(heap2, heap),
+            jnp.where(fit, ptrs, -1),
+            jnp.where(fit, old, -1),
+            jnp.where(fit, okb, 0).astype(bool))
 
 
 def log_merge_ref(lines, bucket_ids, keys, ptrs, *, slots: int = 3):

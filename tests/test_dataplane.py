@@ -234,7 +234,8 @@ class TestTimedSimEquivalence:
             assert pa.t == pb.t and pa.num_kns == pb.num_kns
             assert pa.throughput == pytest.approx(pb.throughput)
             assert pa.avg_latency == pytest.approx(pb.avg_latency)
-        assert a._epoch_freq == b._epoch_freq
+        assert np.array_equal(a._ef_keys, b._ef_keys)
+        assert np.array_equal(a._ef_cnts, b._ef_cnts)
 
 
 # ---------------------------------------------------------------------------

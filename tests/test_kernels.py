@@ -17,8 +17,9 @@ from repro.kernels.decode_attention import (merge_partials, normalize,
                                             paged_decode_ref)
 from repro.kernels.flash_attention import (attention, blocked_mha_jnp,
                                            flash_attention, mha_ref)
-from repro.kernels.log_merge import (log_merge, log_merge_ref,
-                                     merge_segment_fast)
+from repro.kernels.log_merge import (log_append_merge,
+                                     log_append_merge_ref, log_merge,
+                                     log_merge_ref, merge_segment_fast)
 from repro.kernels.ssd_scan import ssd, ssd_ref, ssd_scan
 
 RNG = np.random.default_rng(42)
@@ -106,6 +107,44 @@ def test_merge_segment_fast_equals_sequential_insert():
     p2, f2, _ = clht_lookup(t2, jnp.array(keys))
     np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
     np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+@pytest.mark.parametrize("nb,cap,width,batches", [
+    (64, 96, 8, 3), (128, 64, 4, 2), (32, 48, 4, 3)])
+def test_log_append_merge_fused_matches_ref(nb, cap, width, batches):
+    """Fused heap-append + log-append + Pallas merge == the un-fused
+    jnp path (sequential chain inserts), across successive batches with
+    duplicate keys and a final batch that overflows the segment."""
+    tk = tr = clht_init(nb)
+    sk = sr = segment_init(cap)
+    hk = hr = heap_init(2 * cap + 8, width)
+    for b in range(batches):
+        n = int(RNG.integers(4, cap // batches))
+        keys = jnp.array(RNG.integers(0, nb, n).astype(np.int32))
+        vals = jnp.array(RNG.integers(0, 99, (n, width)).astype(np.int32))
+        tk, sk, hk, pk, ok_, okk = log_append_merge(tk, sk, hk, keys, vals)
+        tr, sr, hr, pr, or_, okr = log_append_merge_ref(tr, sr, hr, keys,
+                                                        vals)
+        np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+        np.testing.assert_array_equal(np.asarray(ok_), np.asarray(or_))
+        np.testing.assert_array_equal(np.asarray(okk), np.asarray(okr))
+        np.testing.assert_array_equal(np.asarray(tk.keys),
+                                      np.asarray(tr.keys))
+        np.testing.assert_array_equal(np.asarray(tk.ptrs),
+                                      np.asarray(tr.ptrs))
+        np.testing.assert_array_equal(np.asarray(hk.data),
+                                      np.asarray(hr.data))
+        assert int(sk.merged) == int(sr.merged) == int(sk.count)
+    # overflowing batch: state unchanged, ok all-False on both paths
+    big = jnp.array(RNG.integers(0, nb, cap).astype(np.int32))
+    bv = jnp.zeros((cap, width), jnp.int32)
+    tk2, sk2, hk2, _, _, okk2 = log_append_merge(tk, sk, hk, big, bv)
+    tr2, _, hr2, _, _, okr2 = log_append_merge_ref(tr, sr, hr, big, bv)
+    assert not bool(np.asarray(okk2).any())
+    assert not bool(np.asarray(okr2).any())
+    np.testing.assert_array_equal(np.asarray(tk2.keys),
+                                  np.asarray(tk.keys))
+    assert int(hk2.head) == int(hk.head) == int(hr2.head)
 
 
 # ---------------------------------------------------------------------------
