@@ -14,6 +14,10 @@ from .mnode import Action, EpochStats, PolicyConfig, PolicyEngine
 from .netmodel import DEFAULT_MODEL, NetModel
 from .ownership import OwnershipMap, ReconfigEvent
 from .simulate import TimedSimulation
+from .transition import (PLAN_STATS, DacWindowPlan, StaticWindowPlan,
+                         CloverReadPlan, plan_clover_reads,
+                         plan_dac_window, plan_static_window,
+                         reset_plan_stats)
 
 __all__ = [
     "DinomoCluster", "VariantConfig", "BatchResult", "DINOMO",
@@ -24,4 +28,7 @@ __all__ = [
     "stable_hash", "Op", "check_history", "check_key_history", "Action",
     "EpochStats", "PolicyConfig", "PolicyEngine", "NetModel",
     "DEFAULT_MODEL", "OwnershipMap", "ReconfigEvent", "TimedSimulation",
+    "PLAN_STATS", "DacWindowPlan", "StaticWindowPlan", "CloverReadPlan",
+    "plan_dac_window", "plan_static_window", "plan_clover_reads",
+    "reset_plan_stats",
 ]

@@ -31,6 +31,8 @@ from .mnode import PolicyConfig, PolicyEngine
 from .netmodel import NetModel, DEFAULT_MODEL
 from .hashring import stable_hash
 from .ownership import OwnershipMap, ReconfigEvent
+from .transition import (PLAN_STATS, plan_clover_reads, plan_dac_window,
+                         plan_static_window)
 
 
 @dataclass(frozen=True)
@@ -114,8 +116,8 @@ class ArrayCloverCache:
         self.cap_entries = max(capacity_bytes // entry_bytes, 1)
         n = max(initial_keys, 8)
         self.present = np.zeros(n, bool)
-        self.ver = [0] * n
-        self.stamp = [0] * n
+        self.ver = np.zeros(n, np.int64)
+        self.stamp = np.zeros(n, np.int64)
         self._clock = 1
         self._lru: list[tuple[int, int]] = []
         self._n = 0
@@ -128,8 +130,9 @@ class ArrayCloverCache:
         m = max(2 * n, key + 1)
         self.present = np.concatenate(
             [self.present, np.zeros(m - n, bool)])
-        self.ver.extend([0] * (m - n))
-        self.stamp.extend([0] * (m - n))
+        self.ver = np.concatenate([self.ver, np.zeros(m - n, np.int64)])
+        self.stamp = np.concatenate([self.stamp,
+                                     np.zeros(m - n, np.int64)])
 
     def lookup(self, key: int):
         self._ensure(key)
@@ -152,9 +155,9 @@ class ArrayCloverCache:
         self._clock += 1
         while self._n > self.cap_entries:
             if len(self._lru) > 4 * self._n + 64:
-                stp = self.stamp
-                self._lru = [(stp[k], k) for k in
-                             np.nonzero(self.present)[0].tolist()]
+                ks = np.flatnonzero(self.present)
+                self._lru = list(zip(self.stamp[ks].tolist(),
+                                     ks.tolist()))
                 heapq.heapify(self._lru)
             st, k = heapq.heappop(self._lru)
             if not self.present[k]:
@@ -166,6 +169,22 @@ class ArrayCloverCache:
             self.present[k] = False
             self._n -= 1
             self.stats.evictions += 1
+
+    def apply_plan(self, plan) -> None:
+        """Apply one planned read-batch window in bulk (see
+        core.transition.plan_clover_reads): deduplicated fill scatters,
+        eviction-free by construction, clock-ascending LRU records."""
+        if plan.fill_keys.size:
+            self.present[plan.fill_keys] = True
+            self.ver[plan.fill_keys] = plan.fill_ver
+        if plan.stp_keys.size:
+            self.stamp[plan.stp_keys] = plan.stp_vals
+        self._clock += plan.clock_delta
+        if plan.lru_records:
+            self._lru.extend(plan.lru_records)
+        self._n = plan.n_final
+        self.stats.shortcut_hits += plan.shortcut_hits
+        self.stats.misses += plan.misses
 
     def clear(self):
         self.present[:] = False
@@ -227,7 +246,7 @@ class _WritePlan:
 
 class _KnWindow:
     """Per-KN cursor over its live non-replicated ops in a batch."""
-    __slots__ = ("kn", "cache", "pos", "idx", "is_dac")
+    __slots__ = ("kn", "cache", "pos", "idx", "is_dac", "is_static")
 
     def __init__(self, kn, cache, pos):
         self.kn = kn
@@ -235,6 +254,7 @@ class _KnWindow:
         self.pos = pos
         self.idx = 0
         self.is_dac = isinstance(cache, ArrayDAC)
+        self.is_static = isinstance(cache, ArrayStaticCache)
 
 
 class KVSNode:
@@ -889,23 +909,82 @@ class DinomoCluster:
 
     def _run_window(self, w, hi, keys, kinds, plan, probe_map, dkeys,
                     dbuckets, out_values) -> None:
-        """One KN's ops in (last window end, hi], in order: classify the
-        span with one kind-gather, split into maximal same-class runs,
-        apply vectorizable runs in bulk (re-validated against the live
-        cache at run boundaries), drop to the exact scalar op
-        otherwise. The scaffold is shared by the DAC and static planes;
-        only the per-class run handlers differ."""
+        """One KN's ops in (last window end, hi], in order.
+
+        Plan phase first: the whole window's transitions are planned as
+        arrays (core.transition) and applied in bulk through the
+        cache's apply_plan.  Windows the planner cannot prove replay
+        through the exact per-op machinery below: classify the span
+        with one kind-gather, split into maximal same-class runs, apply
+        vectorizable runs in bulk (re-validated against the live cache
+        at run boundaries), drop to the exact scalar op otherwise."""
         pos = w.pos
         i0 = w.idx
         i1 = int(np.searchsorted(pos, hi, side="right"))
         if i1 <= i0:
             return
         w.idx = i1
-        span = pos[i0:i1]
+        full = pos[i0:i1]
         kn, cache = w.kn, w.cache
         is_dac = w.is_dac
-        skeys = keys[span]
-        sops = kinds[span]
+        planner = plan_dac_window if is_dac else \
+            (plan_static_window if w.is_static else None)
+        collect = out_values is not None
+        start = 0
+        n_all = full.size
+        while start < n_all:
+            span = full[start:] if start else full
+            skeys = keys[span]
+            sops = kinds[span]
+            if planner is not None and span.size >= 48 \
+                    and not sops.any():
+                kdq = cache.kind[skeys]
+                oddballs = int((kdq != 2).sum())
+                if oddballs == 0:
+                    # pure value-hit window (the high-skew read-only
+                    # regime): one bulk scatter, no planning overhead
+                    PLAN_STATS["planned_windows"] += 1
+                    PLAN_STATS["planned_ops"] += int(span.size)
+                    self._vh_run_big(kn, cache, span, skeys, probe_map,
+                                     dkeys, dbuckets, out_values)
+                    return
+                if oddballs * 32 < span.size:
+                    # hit-dominated read window: the run machinery's
+                    # bulk value-hit path beats planning overhead
+                    PLAN_STATS["replayed_windows"] += 1
+                    PLAN_STATS["replayed_ops"] += int(span.size)
+                    self._replay_span(kn, cache, is_dac, span, skeys,
+                                      sops, plan, probe_map, dkeys,
+                                      dbuckets, out_values)
+                    return
+            # bounded planning chunks: the planner truncates itself at
+            # the first op it cannot prove (wp.ops tells how far it
+            # got), so planning work stays linear in the window
+            end = min(span.size, 512)
+            wp = planner(cache, kn, skeys[:end], sops[:end], span[:end],
+                         plan, probe_map, dkeys, dbuckets, self.pool,
+                         self.value_bytes, collect) \
+                if planner is not None else None
+            if wp is not None:
+                end = wp.ops
+                PLAN_STATS["planned_windows"] += 1
+                PLAN_STATS["planned_ops"] += end
+                self._apply_window_plan(kn, cache, wp, out_values)
+            else:
+                PLAN_STATS["replayed_windows"] += 1
+                PLAN_STATS["replayed_ops"] += end
+                self._replay_span(kn, cache, is_dac, span[:end],
+                                  skeys[:end], sops[:end], plan,
+                                  probe_map, dkeys, dbuckets,
+                                  out_values)
+            start += end
+
+    def _replay_span(self, kn, cache, is_dac, span, skeys, sops, plan,
+                     probe_map, dkeys, dbuckets, out_values) -> None:
+        """Exact per-op replay of one span: classify with one
+        kind-gather, split into maximal same-class runs, apply
+        vectorizable runs in bulk (re-validated against the live cache
+        at run boundaries), drop to the exact scalar op otherwise."""
         cls = np.where(sops == 0, cache.kind[skeys],
                        np.where(sops == 1, np.int8(3), np.int8(4)))
         m = span.size
@@ -953,6 +1032,47 @@ class DinomoCluster:
                 for p_, k in zip(span_l[s:e], keys_l[s:e]):
                     self._scalar_read_dac(kn, cache, k, p_, probe_map,
                                           dkeys, dbuckets, out_values)
+
+    def _apply_window_plan(self, kn, cache, wp, out_values) -> None:
+        """Apply a planned window: bulk cache mutation via apply_plan,
+        then the kn-side effects (stats, miss-RT EMA in op order,
+        segcache puts/pops, collected read values)."""
+        cache.apply_plan(wp)
+        st = kn.stats
+        st.ops += wp.ops
+        st.reads += wp.reads
+        st.writes += wp.writes
+        st.rts += wp.rts
+        if wp.ema_rts:
+            ema = cache._ema
+            a = cache.avg_miss_rts
+            for r in wp.ema_rts:
+                a += ema * (r - a)
+            cache.avg_miss_rts = a
+        segd = kn.segcache
+        cap = kn.segcache_cap
+        if wp.seg_replay is not None:
+            vb = self.value_bytes
+            for k, p in wp.seg_replay:
+                if p is None:
+                    segd.pop(k, None)
+                else:
+                    segd[k] = (p, vb)
+                    segd.move_to_end(k)
+                    while len(segd) > cap:
+                        segd.popitem(last=False)
+        elif wp.seg_puts is not None:
+            ks, ps = wp.seg_puts
+            vb = self.value_bytes
+            segd.update(zip(ks, ((p, vb) for p in ps)))
+            # C-level move_to_end sweep keeps last-put order; trimming
+            # afterwards equals per-put trimming (LRU invariant)
+            any(map(segd.move_to_end, ks))
+            while len(segd) > cap:
+                segd.popitem(last=False)
+        if out_values is not None and wp.out_vals:
+            for p, v in wp.out_vals:
+                out_values[p] = v
 
     def _vh_run(self, kn, cache, run_pos, run_keys, probe_map, dkeys,
                 dbuckets, out_values) -> None:
@@ -1553,6 +1673,11 @@ class DinomoCluster:
         kn_names = [choice(names) for _ in range(n)]
         blocked = set(blocked_kns)
         ptr0, _probes = pool.index_lookup_batch(keys)
+        if not kinds.any():
+            res = self._clover_read_batch(keys, kn_names, names, blocked,
+                                          ptr0, out_values)
+            if res is not None:
+                return res
         ptr0_l = ptr0.tolist()
         keys_l = keys.tolist()
         kinds_l = kinds.tolist()
@@ -1658,6 +1783,69 @@ class DinomoCluster:
         self.ms_ops += ms
         idx = np.asarray(exec_idx, dtype=np.int64)
         return BatchResult(len(exec_idx), writes, per_kn, keys[idx],
+                           out_values)
+
+    def _clover_read_batch(self, keys, kn_names, names, blocked, ptr0,
+                           out_values) -> "BatchResult | None":
+        """Planned read-only Clover batch: each KN's slice of the batch
+        is planned as one bulk cache transition (plan_clover_reads) and
+        applied through ArrayCloverCache.apply_plan.  Returns None when
+        any KN's plan could evict (the per-op loop then runs instead);
+        nothing is mutated until every plan is in hand."""
+        kns = self.kns
+        versions = self.versions
+        n = keys.shape[0]
+        keys_l = keys.tolist()
+        vget = versions.get
+        vers = np.fromiter((vget(k, 0) for k in keys_l), np.int64, n)
+        found = ptr0 >= 0
+        idx = {nm: j for j, nm in enumerate(names)}
+        kn_ids = np.fromiter(map(idx.__getitem__, kn_names), np.int64, n)
+        bl = np.zeros(len(names), bool)
+        un = np.zeros(len(names), bool)
+        for j, nm in enumerate(names):
+            bl[j] = nm in blocked
+            un[j] = not kns[nm].available
+        execm = ~bl[kn_ids]
+        live = execm & ~un[kn_ids]
+        plans = []
+        for j, nm in enumerate(names):
+            grp = np.flatnonzero(live & (kn_ids == j))
+            if not grp.size:
+                plans.append((nm, grp, None))
+                continue
+            wp = plan_clover_reads(kns[nm].cache, keys[grp], vers[grp],
+                                   found[grp])
+            if wp is None:
+                return None
+            plans.append((nm, grp, wp))
+        ms = 0
+        per_kn: dict[str, int] = {}
+        for j, nm in enumerate(names):
+            cnt = int(execm[kn_ids == j].sum())
+            if cnt:
+                per_kn[nm] = cnt
+        for nm, grp, wp in plans:
+            kn = kns[nm]
+            st = kn.stats
+            refused = int((execm & un[kn_ids] & (kn_ids == idx[nm]))
+                          .sum())
+            st.refused += refused
+            if wp is None:
+                continue
+            kn.cache.apply_plan(wp)
+            st.ops += int(grp.size)
+            st.reads += int(grp.size)
+            st.rts += wp.rts
+            ms += wp.misses
+            if out_values is not None:
+                heap = self.pool.heap_val
+                for p_, pt in zip(grp.tolist(), ptr0[grp].tolist()):
+                    if pt >= 0:
+                        out_values[p_] = heap[pt]
+        self.ms_ops += ms
+        eidx = np.flatnonzero(execm)
+        return BatchResult(int(eidx.size), 0, per_kn, keys[eidx],
                            out_values)
 
     def _execute_batch_fused(self, kinds, keys, value, values, blocked_kns,

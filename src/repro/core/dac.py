@@ -325,16 +325,19 @@ class ArrayDAC:
         self._ema = ema
         self.stats = CacheStats()
         n = max(initial_keys, 8)
-        # ``kind`` is numpy so a whole batch classifies with one gather;
-        # the other per-key vectors are python lists: the structural
-        # paths touch them one key at a time, and list indexing is ~4x
-        # cheaper than numpy scalar indexing (measured; it dominates
-        # the scalar op cost otherwise). ``counts_array`` / # ``stamps_array`` expose numpy views on demand.
+        # Every per-key vector is numpy: the planned-transition engine
+        # (core.transition) gathers and scatters whole windows of
+        # kind/ptr/len/count/stamp in single fancy-index operations
+        # (~20x cheaper per element than list indexing), which is where
+        # the batched plane now spends its per-key traffic.  The per-op
+        # replay paths pay ~2x per scalar access versus the old list
+        # layout, but they only run for windows the planner cannot
+        # prove (small or degenerate ones).
         self.kind = np.zeros(n, np.int8)
-        self.ptr = [-1] * n
-        self.length = [0] * n
-        self.count = [0] * n
-        self.stamp = [0] * n
+        self.ptr = np.full(n, -1, np.int64)
+        self.length = np.zeros(n, np.int64)
+        self.count = np.zeros(n, np.int64)
+        self.stamp = np.zeros(n, np.int64)
         self._clock = 1
         self._lru: list[tuple[int, int]] = []   # lazy heap (stamp, key)
         self._lfu: list[tuple[int, int]] = []   # lazy heap (count, key)
@@ -354,10 +357,13 @@ class ArrayDAC:
         m = max(2 * n, key + 1)
         self.kind = np.concatenate(
             [self.kind, np.zeros(m - n, np.int8)])
-        self.ptr.extend([-1] * (m - n))
-        self.length.extend([0] * (m - n))
-        self.count.extend([0] * (m - n))
-        self.stamp.extend([0] * (m - n))
+        self.ptr = np.concatenate([self.ptr, np.full(m - n, -1, np.int64)])
+        self.length = np.concatenate([self.length,
+                                      np.zeros(m - n, np.int64)])
+        self.count = np.concatenate([self.count,
+                                     np.zeros(m - n, np.int64)])
+        self.stamp = np.concatenate([self.stamp,
+                                     np.zeros(m - n, np.int64)])
 
     # ----- public per-op API (mirrors DAC) ---------------------------------
     def lookup(self, key: int):
@@ -437,10 +443,9 @@ class ArrayDAC:
         self.length[key] = length
 
     def clear(self) -> None:
-        n = self.kind.shape[0]
         self.kind[:] = 0
-        self.count[:] = [0] * n
-        self.stamp[:] = [0] * n
+        self.count[:] = 0
+        self.stamp[:] = 0
         self._lru.clear()
         self._lfu.clear()
         self.used = 0
@@ -465,27 +470,72 @@ class ArrayDAC:
         entry: frequency += multiplicity, recency = clock at the key's
         last position in the run -- exactly what per-op lookups do."""
         n = keys.shape[0]
-        cnt, stp, c0 = self.count, self.stamp, self._clock
-        if n > 48:
+        c0 = self._clock
+        if n > 24:
             u, ridx, mult = np.unique(keys[::-1], return_index=True,
                                       return_counts=True)
-            for k, r, m in zip(u.tolist(), ridx.tolist(), mult.tolist()):
-                cnt[k] += m
-                stp[k] = c0 + (n - 1 - r)
+            self.count[u] += mult                 # u is unique: safe +=
+            self.stamp[u] = c0 + (n - 1 - ridx)
         else:
+            cnt, stp = self.count, self.stamp
             for i, k in enumerate(keys.tolist()):
                 cnt[k] += 1
                 stp[k] = c0 + i
         self._clock += n
         self.stats.value_hits += n
 
+    def apply_plan(self, plan) -> None:
+        """Apply one planned window's cache transitions in bulk (see
+        core.transition.plan_dac_window).  The plan's scatters are
+        already deduplicated (last op per key wins), victim keys are
+        disjoint from the window's op keys, and LRU records arrive
+        clock-ascending so they extend the lazy heap in place."""
+        kind = self.kind
+        if plan.victims:
+            vk = np.asarray(plan.victims, np.int64)
+            ri = np.asarray(plan.victim_reinsert, bool)
+            kind[vk] = np.where(ri, np.int8(self.KIND_SHORTCUT),
+                                np.int8(self.KIND_NONE))
+        kind[plan.kk_keys] = plan.kk_kind
+        self.count[plan.kk_keys] = plan.kk_cnt
+        if plan.fill_keys.size:
+            self.ptr[plan.fill_keys] = plan.fill_ptr
+            self.length[plan.fill_keys] = plan.fill_len
+        if plan.stp_keys.size:
+            self.stamp[plan.stp_keys] = plan.stp_vals
+        self._clock += plan.clock_delta
+        if plan.lru_records:
+            # every record exceeds everything in the heap: extend is a
+            # valid heap push sequence
+            self._lru.extend(plan.lru_records)
+        if plan.lfu_push:
+            push = heapq.heappush
+            lfu = self._lfu
+            for rec in plan.lfu_push:
+                push(lfu, rec)
+        if plan.hist_inc.size or plan.hist_dec.size:
+            h = np.asarray(self._cnt_hist, np.int64)
+            np.add.at(h, plan.hist_inc, 1)
+            np.subtract.at(h, plan.hist_dec, 1)
+            self._cnt_hist = h.tolist()
+        self.used = plan.used_final
+        self._nvals = plan.nvals_final
+        self._nshort = plan.nshort_final
+        self._zero_shortcuts = plan.zero_final
+        s = self.stats
+        s.value_hits += plan.value_hits
+        s.shortcut_hits += plan.shortcut_hits
+        s.misses += plan.misses
+        s.promotions += plan.promotions
+        s.demotions += plan.demotions
+
     def counts_array(self) -> np.ndarray:
         """Frequency vector as numpy (copy; for analysis/tests)."""
-        return np.asarray(self.count, dtype=np.int64)
+        return self.count.copy()
 
     def stamps_array(self) -> np.ndarray:
         """Recency vector as numpy (copy; for analysis/tests)."""
-        return np.asarray(self.stamp, dtype=np.int64)
+        return self.stamp.copy()
 
     # ----- batched API ------------------------------------------------------
     def classify_batch(self, keys: np.ndarray) -> np.ndarray:
@@ -577,16 +627,13 @@ class ArrayDAC:
         Pure optimization: lazy pops return argmin (stamp, key) of the
         live entries regardless of stale records, but workloads that
         refresh every hot stamp per batch otherwise bloat the heap."""
-        stp = self.stamp
-        self._lru = [(stp[k], k) for k in
-                     np.nonzero(self.kind == self.KIND_VALUE)[0].tolist()]
+        ks = np.flatnonzero(self.kind == self.KIND_VALUE)
+        self._lru = list(zip(self.stamp[ks].tolist(), ks.tolist()))
         heapq.heapify(self._lru)
 
     def _compact_lfu(self) -> None:
-        cnt = self.count
-        self._lfu = [(cnt[k], k) for k in
-                     np.nonzero(self.kind == self.KIND_SHORTCUT)[0]
-                     .tolist()]
+        ks = np.flatnonzero(self.kind == self.KIND_SHORTCUT)
+        self._lfu = list(zip(self.count[ks].tolist(), ks.tolist()))
         heapq.heapify(self._lfu)
 
     def _pop_lru(self) -> int | None:
@@ -739,9 +786,9 @@ class ArrayStaticCache:
         self.stats = CacheStats()
         n = max(initial_keys, 8)
         self.kind = np.zeros(n, np.int8)
-        self.ptr = [-1] * n
-        self.length = [0] * n
-        self.stamp = [0] * n
+        self.ptr = np.full(n, -1, np.int64)
+        self.length = np.zeros(n, np.int64)
+        self.stamp = np.zeros(n, np.int64)
         self._clock = 1
         self._vlru: list[tuple[int, int]] = []   # lazy heap (stamp, key)
         self._slru: list[tuple[int, int]] = []
@@ -754,9 +801,11 @@ class ArrayStaticCache:
             return
         m = max(2 * n, key + 1)
         self.kind = np.concatenate([self.kind, np.zeros(m - n, np.int8)])
-        self.ptr.extend([-1] * (m - n))
-        self.length.extend([0] * (m - n))
-        self.stamp.extend([0] * (m - n))
+        self.ptr = np.concatenate([self.ptr, np.full(m - n, -1, np.int64)])
+        self.length = np.concatenate([self.length,
+                                      np.zeros(m - n, np.int64)])
+        self.stamp = np.concatenate([self.stamp,
+                                     np.zeros(m - n, np.int64)])
 
     # ----- public per-op API (mirrors StaticCache) --------------------------
     def lookup(self, key: int):
@@ -796,9 +845,8 @@ class ArrayStaticCache:
         return None
 
     def _compact(self, kd) -> None:
-        keys = np.nonzero(self.kind == kd)[0].tolist()
-        stp = self.stamp
-        heap = [(stp[k], k) for k in keys]
+        ks = np.flatnonzero(self.kind == kd)
+        heap = list(zip(self.stamp[ks].tolist(), ks.tolist()))
         heapq.heapify(heap)
         if kd == self.KIND_VALUE:
             self._vlru = heap
@@ -879,9 +927,8 @@ class ArrayStaticCache:
             self.length[key] = length
 
     def clear(self) -> None:
-        n = self.kind.shape[0]
         self.kind[:] = 0
-        self.stamp[:] = [0] * n
+        self.stamp[:] = 0
         self._vlru.clear()
         self._slru.clear()
         self.value_used = self.shortcut_used = 0
@@ -894,16 +941,47 @@ class ArrayStaticCache:
         """A run of value hits: recency = clock at the key's last
         position in the run, exactly what per-op lookups do."""
         n = keys.shape[0]
-        stp, c0 = self.stamp, self._clock
-        if n > 48:
+        c0 = self._clock
+        if n > 24:
             u, ridx = np.unique(keys[::-1], return_index=True)
-            for k, r in zip(u.tolist(), ridx.tolist()):
-                stp[k] = c0 + (n - 1 - r)
+            self.stamp[u] = c0 + (n - 1 - ridx)
         else:
+            stp = self.stamp
             for i, k in enumerate(keys.tolist()):
                 stp[k] = c0 + i
         self._clock += n
         self.stats.value_hits += n
+
+    def apply_plan(self, plan) -> None:
+        """Apply one planned window in bulk (see
+        core.transition.plan_static_window): deduplicated last-wins
+        scatters, per-side eviction victims disjoint from the window's
+        keys, clock-ascending per-side LRU records."""
+        kind = self.kind
+        if plan.vvic:
+            kind[np.asarray(plan.vvic, np.int64)] = self.KIND_NONE
+        if plan.svic:
+            kind[np.asarray(plan.svic, np.int64)] = self.KIND_NONE
+        kind[plan.kk_keys] = plan.kk_kind
+        if plan.fill_keys.size:
+            self.ptr[plan.fill_keys] = plan.fill_ptr
+            self.length[plan.fill_keys] = plan.fill_len
+        if plan.stp_keys.size:
+            self.stamp[plan.stp_keys] = plan.stp_vals
+        self._clock += plan.clock_delta
+        if plan.vlru_records:
+            self._vlru.extend(plan.vlru_records)
+        if plan.slru_records:
+            self._slru.extend(plan.slru_records)
+        self.value_used = plan.vused_final
+        self.shortcut_used = plan.sused_final
+        self._nvals = plan.nvals_final
+        self._nshort = plan.nshort_final
+        s = self.stats
+        s.value_hits += plan.value_hits
+        s.shortcut_hits += plan.shortcut_hits
+        s.misses += plan.misses
+        s.evictions += plan.evictions
 
 
 class StaticCache:

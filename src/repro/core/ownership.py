@@ -96,21 +96,36 @@ class OwnershipMap:
         return ReconfigEvent("fail" if failed else "remove", name,
                              participants, self.version - 1, self.version)
 
-    def _changed_owners(self, old: HashRing, samples: int = 2048) -> set[str]:
-        """KNs (in the *new* ring) whose owned ranges changed."""
-        changed: set[str] = set()
-        if not old._points or not self.ring._points:
-            return set(self.ring.members)
-        keys = np.arange(samples, dtype=np.uint64)
-        a_ids, a_names = old.owner_ids(keys)
-        b_ids, b_names = self.ring.owner_ids(keys)
-        a_arr = np.asarray(a_names, dtype=object)[a_ids]
-        b_arr = np.asarray(b_names, dtype=object)[b_ids]
+    def _changed_owners(self, old: HashRing) -> set[str]:
+        """KNs (in the *new* ring) whose owned ranges changed.
+
+        Exact ring-interval diff: the union of both rings' vnode points
+        cuts the hash circle into arcs on which each ring's owner is
+        constant, so comparing the two owners once per arc finds every
+        moved range -- including arcs far smaller than any fixed key
+        sample could hit (the old ``np.arange(2048)`` sample missed
+        whole participants at low vnode counts, silently skipping their
+        reconfiguration handoff)."""
+        new = self.ring
+        if not old._points or not new._points:
+            return set(new.members)
+        pa = np.asarray(old._points, dtype=np.uint64)
+        pb = np.asarray(new._points, dtype=np.uint64)
+        merged = np.union1d(pa, pb)
+        # owner(pos) == owners[bisect_right(points, pos) mod n], so each
+        # merged point starts an arc [q, next_q) with constant owners in
+        # both rings; q itself is the arc's representative position.
+        ia = np.searchsorted(pa, merged, side="right")
+        ia[ia == pa.shape[0]] = 0
+        ib = np.searchsorted(pb, merged, side="right")
+        ib[ib == pb.shape[0]] = 0
+        a_arr = np.asarray(old._owners, dtype=object)[ia]
+        b_arr = np.asarray(new._owners, dtype=object)[ib]
         moved = a_arr != b_arr
+        changed: set[str] = set(b_arr[moved])
         for a in set(a_arr[moved]):
-            if a in self.ring:
+            if a in new:
                 changed.add(a)
-        changed.update(set(b_arr[moved]))
         return changed
 
     def _repair_replicas(self, gone: str | None = None) -> None:

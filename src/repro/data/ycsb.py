@@ -6,6 +6,13 @@ YCSB default -- and 2.0 high skew). np.random.zipf needs a > 1, so we
 sample from the exact bounded distribution p(k) ~ 1/rank^s via inverse
 CDF, with a splitmix scramble so popular ranks are spread over the
 keyspace (YCSB's 'scrambled zipfian').
+
+``distribution="latest"`` selects YCSB's latest distribution instead:
+popularity is zipfian over *recency of insertion* -- rank 0 is the most
+recently inserted key -- so read-mostly insert mixes behave like
+YCSB-D (reads chase the insert frontier).  The recency window tracks
+``_next_insert`` as inserts grow the keyspace; no scramble is applied
+(recent keys are the hot set by construction).
 """
 
 from __future__ import annotations
@@ -33,14 +40,18 @@ class Workload:
     value_bytes: int = 1024
     scramble: bool = True
     seed: int = 0
+    distribution: str = "zipfian"        # "zipfian" | "latest"
 
     def __post_init__(self):
+        if self.distribution not in ("zipfian", "latest"):
+            raise ValueError(f"unknown distribution "
+                             f"{self.distribution!r}")
         ranks = np.arange(1, self.num_keys + 1, dtype=np.float64)
         w = ranks ** (-self.zipf)
         self._cdf = np.cumsum(w) / w.sum()
         self._rng = np.random.default_rng(self.seed)
         self._next_insert = self.num_keys
-        if self.scramble:
+        if self.scramble and self.distribution == "zipfian":
             perm = np.array([mix64(i) % (1 << 62)
                              for i in range(self.num_keys)], dtype=np.int64)
             self._scramble = np.argsort(perm)
@@ -50,6 +61,9 @@ class Workload:
     def _sample_keys(self, n: int) -> np.ndarray:
         u = self._rng.random(n)
         ranks = np.searchsorted(self._cdf, u)
+        if self.distribution == "latest":
+            # zipf over recency: rank 0 == newest inserted key
+            return np.maximum(self._next_insert - 1 - ranks, 0)
         if self._scramble is not None:
             ranks = self._scramble[ranks]
         return ranks
@@ -89,6 +103,9 @@ class Workload:
     def hot_keys(self, top: int = 8) -> list[int]:
         """The `top` most popular keys under this zipf."""
         ranks = np.arange(top)
+        if self.distribution == "latest":
+            return [max(int(self._next_insert - 1 - r), 0)
+                    for r in ranks]
         if self._scramble is not None:
             ranks = self._scramble[ranks]
         return [int(k) for k in ranks]

@@ -2,7 +2,12 @@
 # pure-jnp oracle (ref.py) and a jit'd public wrapper (ops.py):
 #   clht_probe       DINOMO index lookup (scalar-prefetched bucket DMA)
 #   log_merge        DPM-processor log merge into the CLHT (in-place)
+#   cache_transition planned DAC cache transitions (the write plane's
+#                    plan/apply space machine: fill classes, Eq. 1
+#                    fast-path promotes, LRU demotion scheduling)
 #   flash_attention  serving prefill (online-softmax tiling, GQA, causal)
 #   decode_attention paged decode over owned KV pages (flash-decoding
 #                    partials -> ownership-partition merge)
 #   ssd_scan         Mamba2 SSD chunked scan (MXU matmuls + carried state)
+# interpret.py controls the interpret-mode default for all of them
+# (REPRO_PALLAS_INTERPRET=0 -> compiled on capable backends).

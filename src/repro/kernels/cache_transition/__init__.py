@@ -1,0 +1,3 @@
+from .cache_transition import OP_LANES, cache_transition
+from .ops import encode_window, plan_window_transitions
+from .ref import cache_transition_np, cache_transition_ref

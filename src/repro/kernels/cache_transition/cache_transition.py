@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: the planned cache-transition space machine.
+
+``core.transition.plan_dac_window`` plans a whole per-KN window of DAC
+cache transitions by scanning the ops' byte flows over the cache's
+occupancy: each fill decides value-vs-shortcut against the running
+``used``, each promote decides Eq. 1 through the free-space /
+zero-shortcut fast paths, and make-space consumes a frozen queue of
+LRU demotion victims (only the final victim of a make-space may
+re-insert as a 32-byte shortcut).  This kernel expresses that same
+plan computation on the JAX plane, the transition-engine analog of
+``clht_probe.kvs_lookup`` (read) and ``log_merge.log_append_merge``
+(write).
+
+TPU design: the scan is inherently sequential in the occupancy
+scalars, so the grid walks blocks of ops with the carried state --
+running occupancy ``u``, zero-shortcut count ``z`` and the victim
+cursor ``vi`` -- in an SMEM scratch that persists across sequential
+grid steps (the same trick log_merge uses for its bucket scratch
+line).  Per op the work is a handful of scalar compares; the victim
+queue sits in VMEM and is consumed monotonically.
+
+Op encoding (one row of 8 int32 lanes per op):
+    lane 0  code   0 neutral / 1 promote / 2 fill / 3 delete
+    lane 1  rm     bytes the op's prior-entry removal frees
+    lane 2  vb     bytes a value entry for this op would occupy
+    lane 3  zhit   1 iff a promote's hit decrements the zero count
+    lane 4  zfill  1 iff a shortcut landing adds a zero-count entry
+    lanes 5-7      reserved (zero)
+
+Per-op outputs:
+    dec    promote: 1 iff Eq. 1 fast paths promote; fill: 1 iff the
+           entry lands as a value; else 0
+    nvic   victims consumed through this op
+    used   occupancy after the op
+
+Matches ``cache_transition_ref`` exactly (property-tested).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.dac import SHORTCUT_BYTES as SB
+from ..interpret import resolve_interpret
+
+OP_LANES = 8
+
+
+def _transition_kernel(ops_ref, vic_ref, state_ref, dec_ref, nvic_ref,
+                       used_ref, scratch, *, block: int, cap: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        scratch[0] = state_ref[0]          # used0
+        scratch[1] = state_ref[1]          # z0
+        scratch[2] = 0                     # victim cursor
+
+    nv = vic_ref.shape[0]
+
+    def body(j, _):
+        code = ops_ref[j, 0]
+        rm = ops_ref[j, 1]
+        vb = ops_ref[j, 2]
+        zhit = ops_ref[j, 3]
+        zfill = ops_ref[j, 4]
+        u = scratch[0]
+        z = scratch[1]
+        vi = scratch[2]
+
+        is_pro = code == 1
+        is_fill = code == 2
+        # deletes and neutral ops only move bytes
+        u_pass = u - jnp.where((code == 3) | is_fill, rm, 0)
+        z = z - jnp.where(is_pro, zhit, 0)
+
+        # Eq. 1 fast paths (promote): free space, else zero-count pool
+        free = cap - u
+        need = vb - SB
+        n_evict = -((free - need) // SB)
+        pro_ok = is_pro & ((free >= need) | (z >= n_evict))
+
+        # fill class: a value lands iff it fits after the removal
+        fits = is_fill & (u_pass + vb <= cap)
+        dec = jnp.where(pro_ok | fits, 1, 0)
+
+        # bytes this op inserts (0 when nothing lands)
+        ins = jnp.where(pro_ok | fits, vb,
+                        jnp.where(is_fill, SB, 0))
+        u1 = jnp.where(pro_ok, u_pass - SB, u_pass)
+        z = z + jnp.where(is_fill & (fits == 0), zfill, 0)
+
+        # make-space: consume frozen victims until the insert fits;
+        # only the final victim may re-insert as a shortcut
+        def cond(st):
+            uu, ii = st
+            return (uu + ins > cap) & (ii < nv)
+
+        def step(st):
+            uu, ii = st
+            g = vic_ref[ii]
+            uu = uu - g
+            uu = uu + jnp.where(uu + SB + ins <= cap, SB, 0)
+            return uu, ii + 1
+
+        u2, vi2 = jax.lax.while_loop(cond, step, (u1, vi))
+        u3 = u2 + ins
+
+        scratch[0] = u3
+        scratch[1] = z
+        scratch[2] = vi2
+        dec_ref[j] = dec
+        nvic_ref[j] = vi2
+        used_ref[j] = u3
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "cap", "interpret"))
+def cache_transition(ops: jax.Array, victims: jax.Array,
+                     used0, z0, *, cap: int, block: int = 256,
+                     interpret: bool | None = None):
+    """Run the transition space machine over a window of encoded ops.
+
+    ops:     (N, 8) int32 op rows (see module docstring); N must be a
+             multiple of ``block``
+    victims: (V,) int32 frozen LRU victim queue (gross bytes each)
+    used0, z0: starting occupancy / zero-shortcut count
+    cap:     cache capacity (static)
+
+    Returns (dec, nvic, used): (N,) int32 decision per op, victims
+    consumed through each op, occupancy after each op.
+    """
+    interpret = resolve_interpret(interpret)
+    n = ops.shape[0]
+    assert n % block == 0, "pad ops to a multiple of the block"
+    state = jnp.stack([jnp.asarray(used0, jnp.int32),
+                       jnp.asarray(z0, jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, OP_LANES), lambda i: (i, 0)),
+            pl.BlockSpec(victims.shape, lambda i: (0,)),
+            pl.BlockSpec(state.shape, lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        scratch_shapes=[pltpu.SMEM((3,), jnp.int32)],
+    )
+    dec, nvic, used = pl.pallas_call(
+        functools.partial(_transition_kernel, block=block, cap=cap),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(ops.astype(jnp.int32), victims.astype(jnp.int32), state)
+    return dec, nvic, used

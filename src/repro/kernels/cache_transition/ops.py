@@ -1,0 +1,61 @@
+"""Window encoding + jit wrapper for the cache_transition kernel.
+
+``encode_window`` lowers a window of KVS ops (op kind + each key's
+prior entry state, exactly the vectors ``core.transition`` gathers
+from ``ArrayDAC``) into the kernel's 8-lane op rows under the steady
+regime -- promotes for shortcut reads, class-adaptive fills for
+writes, byte-frees for deletes -- so the Pallas space machine and the
+numpy planner compute the same decisions from the same inputs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ...core.dac import SHORTCUT_BYTES as SB
+from ...core.dac import VALUE_OVERHEAD_BYTES
+from .cache_transition import OP_LANES, cache_transition
+
+
+def encode_window(opk: np.ndarray, kd: np.ndarray, pc: np.ndarray,
+                  plen: np.ndarray, *, value_bytes: int,
+                  block: int = 256) -> np.ndarray:
+    """(N,) op kinds (0 read / 1 write / 2 delete) + per-key prior
+    state -> (N_padded, 8) int32 kernel op rows (padding rows are
+    neutral)."""
+    n = opk.shape[0]
+    pad = (-n) % block
+    rows = np.zeros((n + pad, OP_LANES), np.int32)
+    pvb = plen + VALUE_OVERHEAD_BYTES
+    is_rd = opk == 0
+    is_wr = opk == 1
+    is_dl = opk == 2
+    promo = is_rd & (kd == 1)
+    rows[:n, 0] = np.where(promo, 1,
+                           np.where(is_wr, 2, np.where(is_dl, 3, 0)))
+    rm = np.where(kd == 2, pvb, np.where(kd == 1, SB, 0))
+    rows[:n, 1] = np.where(is_wr | is_dl, rm, 0)
+    rows[:n, 2] = np.where(promo, pvb,
+                           np.where(is_wr, value_bytes
+                                    + VALUE_OVERHEAD_BYTES, 0))
+    rows[:n, 3] = (promo & (pc == 0)).astype(np.int32)
+    rows[:n, 4] = (is_wr & (kd == 0)).astype(np.int32)
+    return rows
+
+
+def plan_window_transitions(opk, kd, pc, plen, victims, used0, z0, *,
+                            cap: int, value_bytes: int,
+                            block: int = 256,
+                            interpret: bool | None = None):
+    """Encode a window and run the Pallas space machine over it.
+
+    Returns (dec, nvic, used) truncated back to the window length (see
+    cache_transition for the output semantics)."""
+    rows = encode_window(opk, kd, pc, plen, value_bytes=value_bytes,
+                         block=block)
+    dec, nvic, used = cache_transition(rows, np.asarray(victims,
+                                                        np.int32),
+                                       used0, z0, cap=cap, block=block,
+                                       interpret=interpret)
+    n = opk.shape[0]
+    return dec[:n], nvic[:n], used[:n]

@@ -1,0 +1,97 @@
+"""Oracles for the cache_transition kernel: a pure-jnp scan and a
+plain-python reference (the numpy planner's structural-loop semantics
+restricted to the kernel's op encoding)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.dac import SHORTCUT_BYTES as SB
+
+
+def cache_transition_ref(ops: jax.Array, victims: jax.Array, used0, z0,
+                         *, cap: int):
+    """Pure-jnp oracle: lax.scan over ops with the same carried
+    (used, z, victim-cursor) state and the same make-space rule."""
+    nv = victims.shape[0]
+    vic = jnp.asarray(victims, jnp.int32)
+
+    def step(carry, op):
+        u, z, vi = carry
+        code, rm, vb, zhit, zfill = op[0], op[1], op[2], op[3], op[4]
+        is_pro = code == 1
+        is_fill = code == 2
+        u_pass = u - jnp.where((code == 3) | is_fill, rm, 0)
+        z = z - jnp.where(is_pro, zhit, 0)
+        free = cap - u
+        need = vb - SB
+        n_evict = -((free - need) // SB)
+        pro_ok = is_pro & ((free >= need) | (z >= n_evict))
+        fits = is_fill & (u_pass + vb <= cap)
+        dec = jnp.where(pro_ok | fits, 1, 0)
+        ins = jnp.where(pro_ok | fits, vb, jnp.where(is_fill, SB, 0))
+        u1 = jnp.where(pro_ok, u_pass - SB, u_pass)
+        z = z + jnp.where(is_fill & (fits == 0), zfill, 0)
+
+        def cond(st):
+            uu, ii = st
+            return (uu + ins > cap) & (ii < nv)
+
+        def body(st):
+            uu, ii = st
+            g = vic[ii]
+            uu = uu - g
+            uu = uu + jnp.where(uu + SB + ins <= cap, SB, 0)
+            return uu, ii + 1
+
+        u2, vi2 = jax.lax.while_loop(cond, body, (u1, vi))
+        u3 = u2 + ins
+        return (u3, z, vi2), (dec, vi2, u3)
+
+    init = (jnp.asarray(used0, jnp.int32), jnp.asarray(z0, jnp.int32),
+            jnp.asarray(0, jnp.int32))
+    _, (dec, nvic, used) = jax.lax.scan(step, init,
+                                        ops.astype(jnp.int32))
+    return dec, nvic, used
+
+
+def cache_transition_np(ops: np.ndarray, victims: np.ndarray, used0: int,
+                        z0: int, *, cap: int):
+    """Plain-python reference (the planner's loop semantics)."""
+    u, z, vi = int(used0), int(z0), 0
+    nv = victims.shape[0]
+    dec_out = np.zeros(ops.shape[0], np.int32)
+    nvic_out = np.zeros(ops.shape[0], np.int32)
+    used_out = np.zeros(ops.shape[0], np.int32)
+    for j in range(ops.shape[0]):
+        code, rm, vb, zhit, zfill = (int(x) for x in ops[j, :5])
+        ins = 0
+        if code == 1:                           # promote
+            z -= zhit
+            free = cap - u
+            need = vb - SB
+            if free >= need or z >= -((free - need) // SB):
+                dec_out[j] = 1
+                u -= SB
+                ins = vb
+        elif code == 2:                         # fill
+            u -= rm
+            if u + vb <= cap:
+                dec_out[j] = 1
+                ins = vb
+            else:
+                z += zfill
+                ins = SB
+        elif code == 3:                         # delete
+            u -= rm
+        while u + ins > cap and vi < nv:
+            u -= int(victims[vi])
+            vi += 1
+            if u + SB + ins <= cap:
+                u += SB
+        u += ins
+        nvic_out[j] = vi
+        used_out[j] = u
+    return dec_out, nvic_out, used_out

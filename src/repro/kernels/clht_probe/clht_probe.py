@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..interpret import resolve_interpret
+
 LANES = 128
 
 
@@ -95,7 +97,7 @@ def _kvs_lookup_kernel(bucket_ids_ref, keys_ref, lines_ref, heap_ref,
 def kvs_lookup_fused(lines: jax.Array, heap: jax.Array,
                      bucket_ids: jax.Array, keys: jax.Array, *,
                      slots: int = 3, block: int = 128,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """Fused KVS lookup: probe each key's primary bucket AND gather its
     value row from the heap in one kernel.
 
@@ -108,6 +110,7 @@ def kvs_lookup_fused(lines: jax.Array, heap: jax.Array,
     absent), (B,) int32 pointers (-1 if absent from the primary
     bucket), (B,) int32 {0,1} hit flags.
     """
+    interpret = resolve_interpret(interpret)
     b = keys.shape[0]
     assert b % block == 0, "pad keys to a multiple of the key block"
     d = heap.shape[1]
@@ -138,7 +141,7 @@ def kvs_lookup_fused(lines: jax.Array, heap: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("slots", "interpret"))
 def clht_probe(lines: jax.Array, bucket_ids: jax.Array, keys: jax.Array,
-               *, slots: int = 3, interpret: bool = True):
+               *, slots: int = 3, interpret: bool | None = None):
     """Probe the primary bucket of each key.
 
     lines:      (TB, 128) packed bucket lines
@@ -147,6 +150,7 @@ def clht_probe(lines: jax.Array, bucket_ids: jax.Array, keys: jax.Array,
     returns (ptrs, found): (B,) int32 pointer (-1 if absent from the
     primary bucket) and (B,) int32 {0,1} hit flag.
     """
+    interpret = resolve_interpret(interpret)
     b = keys.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

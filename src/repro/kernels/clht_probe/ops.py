@@ -12,16 +12,19 @@ import jax.numpy as jnp
 
 from ...core.clht import CLHT, bucket_of, clht_lookup
 from ...core.log import ValueHeap
+from ..interpret import resolve_interpret
 from .clht_probe import clht_probe, kvs_lookup_fused, pack_table
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def lookup(table: CLHT, keys: jax.Array, *, interpret: bool = True):
+def lookup(table: CLHT, keys: jax.Array, *,
+           interpret: bool | None = None):
     """Batched CLHT lookup accelerated by the Pallas probe kernel.
 
     Returns (ptrs, found) like core.clht.clht_lookup (minus the probe
     counter). Keys that miss the primary bucket take the jnp chain walk.
     """
+    interpret = resolve_interpret(interpret)
     lines = pack_table(table.keys, table.ptrs, table.nxt)
     bucket_ids = bucket_of(keys, table.num_buckets)
     ptr_fast, found_fast = clht_probe(lines, bucket_ids, keys,
@@ -40,7 +43,7 @@ def lookup(table: CLHT, keys: jax.Array, *, interpret: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def kvs_lookup(table: CLHT, heap: ValueHeap, keys: jax.Array, *,
-               block: int = 128, interpret: bool = True):
+               block: int = 128, interpret: bool | None = None):
     """Batched KVS lookup: fused Pallas probe+gather fast path (one
     grid step per ``block`` keys amortizes the scalar-prefetched DMA;
     the value row is gathered from the heap in the same kernel), with
@@ -52,6 +55,7 @@ def kvs_lookup(table: CLHT, heap: ValueHeap, keys: jax.Array, *,
     absent), (B,) int32 heap pointers (-1 absent), (B,) bool flags.
     Matches ``kvs_lookup_ref`` exactly (property-tested).
     """
+    interpret = resolve_interpret(interpret)
     b = keys.shape[0]
     pad = (-b) % block
     pkeys = jnp.concatenate(

@@ -1,0 +1,58 @@
+"""Pallas interpret-mode default, overridable via one env var.
+
+Every Pallas op in this repo (``clht_probe``, ``log_merge``,
+``cache_transition``) defaults to ``interpret=True`` so the kernels run
+anywhere (CPU CI included).  On a real accelerator the default can be
+flipped without touching call sites:
+
+    REPRO_PALLAS_INTERPRET=0  ->  compiled kernels (Mosaic)
+    unset / any other value   ->  interpret mode
+
+Backends without compiled-Pallas support (CPU) fall back to interpret
+mode with a one-time warning, so the same env setting is safe across a
+heterogeneous fleet -- the CI matrix runs the kernel oracle tests with
+both settings on CPU to keep that plumbing honest.
+
+The variable is consulted when an op is *traced* (the first call per
+static signature); set it before importing/calling the kernels.  Ops
+still accept an explicit ``interpret=`` argument, which wins.
+"""
+
+from __future__ import annotations
+
+import os
+import warnings
+
+_warned = False
+
+
+def env_interpret_default() -> bool:
+    """True unless REPRO_PALLAS_INTERPRET=0."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _backend_supports_compiled() -> bool:
+    try:
+        import jax
+        return jax.default_backend() not in ("cpu",)
+    except Exception:          # pragma: no cover - jax always importable
+        return False
+
+
+def resolve_interpret(interpret) -> bool:
+    """None -> the REPRO_PALLAS_INTERPRET default (with a CPU fallback
+    to interpret mode); an explicit bool passes through."""
+    global _warned
+    if interpret is not None:
+        return bool(interpret)
+    if env_interpret_default():
+        return True
+    if _backend_supports_compiled():
+        return False
+    if not _warned:
+        _warned = True
+        warnings.warn("REPRO_PALLAS_INTERPRET=0 requested compiled "
+                      "Pallas kernels, but this backend only supports "
+                      "interpret mode; falling back to interpret=True",
+                      RuntimeWarning, stacklevel=2)
+    return True

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..interpret import resolve_interpret
+
 LANES = 128
 
 
@@ -72,7 +74,7 @@ def _merge_kernel(bucket_ids_ref, first_ref, keys_ref, ptrs_ref,
 def log_merge_sorted(lines: jax.Array, bucket_ids: jax.Array,
                      first_flags: jax.Array, keys: jax.Array,
                      ptrs: jax.Array, *, slots: int = 3,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """Kernel entry point over *bucket-sorted* entries.
 
     lines:       (TB, 128) packed bucket lines
@@ -80,6 +82,7 @@ def log_merge_sorted(lines: jax.Array, bucket_ids: jax.Array,
     first_flags: (E,) 1 iff entry i starts a new bucket group
     returns (rows, old_ptrs, ok) where rows[i] is the bucket line state
     after entry i (the wrapper writes back each group's last row)."""
+    interpret = resolve_interpret(interpret)
     e = keys.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -110,12 +113,14 @@ def log_merge_sorted(lines: jax.Array, bucket_ids: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("slots", "interpret"))
 def log_merge(lines: jax.Array, bucket_ids: jax.Array, keys: jax.Array,
-              ptrs: jax.Array, *, slots: int = 3, interpret: bool = True):
+              ptrs: jax.Array, *, slots: int = 3,
+              interpret: bool | None = None):
     """Merge entries (given in log order) into packed bucket lines.
 
     Sorts by bucket (stable -- preserves per-bucket log order), runs the
     kernel, scatters each bucket group's final row back, and un-permutes
     the per-entry results. Returns (lines, old_ptrs, ok)."""
+    interpret = resolve_interpret(interpret)
     e = keys.shape[0]
     order = jnp.argsort(bucket_ids, stable=True)
     bids_s = bucket_ids[order]

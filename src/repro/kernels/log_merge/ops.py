@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from ...core.clht import CLHT, bucket_of, clht_insert
 from ...core.log import LogSegment, ValueHeap, heap_append, log_append
 from ..clht_probe.clht_probe import pack_table
+from ..interpret import resolve_interpret
 from .log_merge import LANES, log_merge
 
 
@@ -31,13 +32,14 @@ def unpack_table(lines: jax.Array, table: CLHT) -> CLHT:
 
 
 def merge_segment_fast(table: CLHT, seg: LogSegment, *,
-                       interpret: bool = True):
+                       interpret: bool | None = None):
     """Merge the sealed, un-merged prefix of ``seg`` into ``table``.
 
     Fast path: one Pallas grid step per entry (primary bucket, in-place).
     Slow path: entries whose bucket was full go through clht_insert,
     preserving order (a failed key's later duplicates also fail fast,
     so relative order is intact). Returns (table, old_ptrs, ok)."""
+    interpret = resolve_interpret(interpret)
     slots = table.keys.shape[1]
     idx = jnp.arange(seg.keys.shape[0], dtype=jnp.int32)
     todo = (idx >= seg.merged) & (idx < seg.count) & (seg.seal == 1)
@@ -63,7 +65,7 @@ def merge_segment_fast(table: CLHT, seg: LogSegment, *,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def log_append_merge(table: CLHT, seg: LogSegment, heap: ValueHeap,
                      keys: jax.Array, values: jax.Array, *,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """Fused batched write path (paper Secs. 3.2 + 3.6): append the
     value rows to the heap out of place, append the sealed (key, ptr)
     entries to the exclusive log segment, and merge the segment's
@@ -82,6 +84,7 @@ def log_append_merge(table: CLHT, seg: LogSegment, heap: ValueHeap,
                 ok[i] is False only for entries whose CLHT insert
                 failed (table full even via the overflow chain)
     Matches ``log_append_merge_ref`` exactly (property-tested)."""
+    interpret = resolve_interpret(interpret)
     n = keys.shape[0]
     start = seg.count
     heap2, ptrs = heap_append(heap, values)

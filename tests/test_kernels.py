@@ -286,3 +286,90 @@ def test_ssd_decode_matches_scan():
         np.testing.assert_allclose(np.asarray(y_t),
                                    np.asarray(y_full[:, t]), atol=2e-4,
                                    rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# cache_transition: the planned-transition space machine on the JAX plane
+# ---------------------------------------------------------------------------
+from repro.kernels.cache_transition import (cache_transition,
+                                            cache_transition_np,
+                                            cache_transition_ref,
+                                            encode_window)
+from repro.kernels.interpret import env_interpret_default, resolve_interpret
+
+
+@pytest.mark.parametrize("n,block,cap_base,seed", [
+    (256, 256, 4096, 0), (512, 128, 8192, 1), (256, 64, 2048, 2)])
+def test_cache_transition_matches_oracles(n, block, cap_base, seed):
+    """Pallas space machine == jnp scan oracle == plain-python
+    reference: fill class decisions, Eq. 1 fast-path promotes, victim
+    consumption (with the final-victim re-insert rule) and the
+    occupancy trajectory."""
+    rng = np.random.default_rng(seed)
+    cap = cap_base + int(rng.integers(0, 2048))
+    opk = rng.choice([0, 0, 0, 1, 1, 2], n).astype(np.int64)
+    kd = rng.choice([0, 1, 2], n).astype(np.int64)
+    pc = rng.choice([0, 0, 1, 5], n).astype(np.int64)
+    plen = rng.choice([64, 128, 256], n).astype(np.int64)
+    vic = rng.choice([104, 168, 296], 200).astype(np.int64)
+    used0 = int(rng.integers(0, cap))
+    z0 = int(rng.integers(0, 50))
+    rows = encode_window(opk, kd, pc, plen, value_bytes=128, block=block)
+    d1, t1, u1 = cache_transition(rows, vic, used0, z0, cap=cap,
+                                  block=block)
+    d2, t2, u2 = cache_transition_ref(rows, vic, used0, z0, cap=cap)
+    d3, t3, u3 = cache_transition_np(np.asarray(rows), vic, used0, z0,
+                                     cap=cap)
+    for got, want in ((d1, d2), (t1, t2), (u1, u2)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    for got, want in ((d1, d3), (t1, t3), (u1, u3)):
+        np.testing.assert_array_equal(np.asarray(got), want)
+    # coverage: the drive must actually consume victims
+    assert int(np.asarray(t1)[-1]) >= 0
+
+
+def test_cache_transition_victim_pressure():
+    """A full cache under promote pressure consumes the frozen victim
+    queue in order and re-inserts only final victims that fit."""
+    n = 256
+    opk = np.zeros(n, np.int64)          # all reads
+    kd = np.ones(n, np.int64)            # all shortcut hits -> promote
+    pc = np.ones(n, np.int64)
+    plen = np.full(n, 1024, np.int64)
+    cap = 1 << 16
+    vic = np.full(300, 1064, np.int64)   # frozen LRU values
+    rows = encode_window(opk, kd, pc, plen, value_bytes=1024)
+    d, t, u = cache_transition(rows, vic, cap - 100, 500, cap=cap)
+    d, t, u = (np.asarray(x) for x in (d, t, u))
+    assert d.all()                       # zero pool huge: all promote
+    assert t[-1] > 0                     # victims consumed
+    assert (u <= cap).all()
+    np.testing.assert_array_equal(
+        (d, t, u),
+        cache_transition_np(np.asarray(rows), vic, cap - 100, 500,
+                            cap=cap))
+
+
+def test_env_interpret_default_resolution():
+    """REPRO_PALLAS_INTERPRET drives the resolved default; kernels run
+    under whichever mode it selects on this backend (CPU falls back to
+    interpret mode with a warning -- the CI matrix exercises both
+    settings)."""
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    resolved = resolve_interpret(None)
+    assert isinstance(resolved, bool)
+    if env_interpret_default():
+        assert resolved is True
+    # an env-resolved default run must agree with the oracle
+    rng = np.random.default_rng(3)
+    rows = encode_window(rng.choice([0, 1, 2], 256).astype(np.int64),
+                         rng.choice([0, 1, 2], 256).astype(np.int64),
+                         rng.choice([0, 2], 256).astype(np.int64),
+                         np.full(256, 128, np.int64), value_bytes=128)
+    vic = np.full(64, 168, np.int64)
+    d1, t1, u1 = cache_transition(rows, vic, 1000, 10, cap=4096,
+                                  interpret=None)
+    d2, t2, u2 = cache_transition_ref(rows, vic, 1000, 10, cap=4096)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))

@@ -1,0 +1,137 @@
+"""Regression tests for reconfiguration participant identification.
+
+``OwnershipMap._changed_owners`` used to sample ``np.arange(2048)``
+keys -- 2048 fixed hash positions -- to find the KNs whose owned ranges
+changed. With few vnodes (fig6 runs vnodes=8) a moved arc between two
+vnode points is easily narrower than the sample spacing, so a KN whose
+range changed could be missed and silently skip the seven-step
+reconfiguration handoff (no synchronous merge, stale soft state). The
+fix computes an exact ring-interval diff of the two snapshots; these
+tests fail on the sampling implementation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import DinomoCluster, VARIANTS
+from repro.core.ownership import OwnershipMap
+
+
+def brute_force_moved(new_ring, old_ring, nkeys=400_000, seed=0):
+    """Owners that a dense random key sample observes changing."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 1 << 62, nkeys, dtype=np.int64)
+    a_ids, a_names = old_ring.owner_ids(keys)
+    b_ids, b_names = new_ring.owner_ids(keys)
+    a_arr = np.asarray(a_names, dtype=object)[a_ids]
+    b_arr = np.asarray(b_names, dtype=object)[b_ids]
+    moved = a_arr != b_arr
+    out = set(b_arr[moved])
+    for a in set(a_arr[moved]):
+        if a in new_ring:
+            out.add(a)
+    return out
+
+
+def exact_moved(new_ring, old_ring):
+    """Independent exact oracle, deliberately NOT the production
+    algorithm: probe each merged arc at its *midpoint* through the
+    rings' scalar bisect lookup (production diffs owner arrays at arc
+    starts), so a shared flaw in the interval-diff would not be
+    reproduced here."""
+    import bisect
+    pa = list(old_ring._points)
+    pb = list(new_ring._points)
+    merged = sorted(set(pa) | set(pb))
+    span = 1 << 64
+
+    def owner_at(ring, pos):
+        i = bisect.bisect_right(ring._points, pos)
+        if i == len(ring._points):
+            i = 0
+        return ring._owners[i]
+
+    out = set()
+    for j, q in enumerate(merged):
+        nxt = merged[(j + 1) % len(merged)]
+        width = (nxt - q) % span or span
+        mid = (q + width // 2) % span
+        a = owner_at(old_ring, mid)
+        b = owner_at(new_ring, mid)
+        if a != b:
+            out.add(b)
+            if a in new_ring:
+                out.add(a)
+    return out
+
+
+# Cases where the old np.arange(2048) sample provably misses a moved
+# KN (found by exhaustive search at low vnode counts): (vnodes,
+# initial members, node added, a KN the sample misses).
+MISSED_BY_SAMPLING = [
+    (4, ["kn1", "kn2", "kn3"], "kn122", "kn3"),
+    (8, ["kn1", "kn2", "kn3", "kn4", "kn5"], "kn120", "kn2"),
+]
+
+
+@pytest.mark.parametrize("vnodes,members,added,missed", MISSED_BY_SAMPLING)
+def test_add_includes_sampling_blindspot(vnodes, members, added, missed):
+    m = OwnershipMap(vnodes=vnodes)
+    for n in members:
+        m.ring.add(n)
+    old = m.ring.snapshot()
+    ev = m.add_kn(added)
+    # the KN the 2048-key sample missed has a moved arc...
+    assert missed in exact_moved(m.ring, old)
+    # ...and MUST be a reconfiguration participant
+    assert missed in ev.participants
+    assert exact_moved(m.ring, old) <= ev.participants
+
+
+@pytest.mark.parametrize("vnodes", [2, 4, 8])
+@pytest.mark.parametrize("kind", ["add", "remove", "fail"])
+def test_every_moved_arc_owner_participates(vnodes, kind):
+    """Add/remove/fail with vnodes<=8: every KN whose arc moved (per
+    the dense-sample oracle AND the exact-interval oracle) must be in
+    the event's participant set."""
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        m = OwnershipMap(vnodes=vnodes)
+        names = [f"kn{seed}_{i}" for i in range(2 + int(rng.integers(5)))]
+        for n in names:
+            m.ring.add(n)
+        old = m.ring.snapshot()
+        if kind == "add":
+            ev = m.add_kn(f"kn{seed}_new")
+        else:
+            victim = names[int(rng.integers(len(names)))]
+            ev = m.remove_kn(victim, failed=(kind == "fail"))
+        want = exact_moved(m.ring, old)
+        assert want <= ev.participants
+        assert brute_force_moved(m.ring, old, seed=seed) <= ev.participants
+
+
+def test_cluster_reconfig_low_vnodes_merges_every_participant():
+    """End to end at fig6's vnode count: when a KN joins, every KN
+    whose range moved participates (merged + soft state cleared), so no
+    stale cache entries survive a handoff the sampler would have
+    skipped."""
+    c = DinomoCluster(VARIANTS["dinomo"], num_kns=5, cache_bytes=1 << 18,
+                      value_bytes=256, num_buckets=1 << 10, vnodes=8,
+                      seed=3)
+    c.load(((k, f"v{k}") for k in range(800)), warm=True)
+    old = c.ownership.ring.snapshot()
+    # warm caches hold entries for owned keys
+    held = {n: (kn.cache.num_values + kn.cache.num_shortcuts)
+            for n, kn in c.kns.items()}
+    assert any(held.values())
+    name, ev = c.add_kn()
+    moved = exact_moved(c.ownership.ring, old)
+    assert moved <= ev.participants
+    for p in ev.participants:
+        if p == name or p not in c.kns:
+            continue
+        kn = c.kns[p]
+        # participants dropped their soft state during the handoff
+        assert kn.cache.num_values + kn.cache.num_shortcuts == 0
+        assert len(kn.segcache) == 0

@@ -399,3 +399,159 @@ class TestWritePlaneEquivalence:
                         blocked_kns=[blocked])
         assert cluster_snapshot(a) == cluster_snapshot(b)
         assert b.kns[victim].stats.refused > 0
+
+
+# ---------------------------------------------------------------------------
+# PR 3: the planned-transition engine (core.transition)
+# ---------------------------------------------------------------------------
+from repro.core.dac import CNT_HIST_MAX, ArrayDAC, DAC
+from repro.core.transition import PLAN_STATS, reset_plan_stats
+
+
+class TestPlannedEngine:
+    """The plan/apply split must stay decision-for-decision identical
+    to the per-op reference path -- and must actually engage (plan, not
+    replay) on steady-state windows, otherwise it is dead code."""
+
+    @given(st.integers(0, 10**6), st.sampled_from(VARIANT_NAMES),
+           st.sampled_from(MIX_NAMES))
+    @settings(max_examples=10, deadline=None)
+    def test_planned_windows_identical(self, seed, variant, mix):
+        """Bench-shaped batches (one large execute_batch, warm caches):
+        the planner covers most ops and the outcome matches the scalar
+        oracle exactly."""
+        a, b = build_pair(variant, seed % 3, 1 << 19, num_keys=6000,
+                          segment_capacity=256)
+        kinds, keys = mixed_ops(seed, 6000, 4000, mix, delete_frac=0.05)
+        reset_plan_stats()
+        apply_scalar(a, kinds, keys)
+        b.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+        if variant != "clover":
+            total = PLAN_STATS["planned_ops"] + PLAN_STATS["replayed_ops"]
+            assert total > 0
+            assert PLAN_STATS["planned_ops"] > 0
+            if mix.startswith("write_heavy"):
+                # steady-state write windows must plan, not replay
+                # (read-mostly windows may route to the bulk-hit path,
+                # which is counted as replay)
+                assert PLAN_STATS["planned_ops"] > total // 2
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=6, deadline=None)
+    def test_latest_distribution_mixed(self, seed):
+        """YCSB-D-like latest-distribution streams (reads chasing the
+        insert frontier) through the planned engine."""
+        a, b = build_pair("dinomo", seed % 3, 1 << 19, num_keys=5000)
+        w1 = Workload(num_keys=5000, zipf=0.99, mix="read_mostly_insert",
+                      seed=seed % 97, distribution="latest")
+        w2 = Workload(num_keys=5000, zipf=0.99, mix="read_mostly_insert",
+                      seed=seed % 97, distribution="latest")
+        for i, (kind, key) in enumerate(w1.ops(3000)):
+            if kind == "read":
+                a.read(key)
+            else:
+                a.write(key, f"w{i}")
+        kinds, keys = w2.ops_arrays(3000)
+        b.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+
+    def test_clover_read_batch_planned(self):
+        """Read-only Clover batches take the bulk apply_plan path and
+        stay op-for-op identical (stats, ms load, values)."""
+        a, b = build_pair("clover", 1, 1 << 19, num_keys=3000)
+        w1 = Workload(num_keys=3000, zipf=1.1, mix="read_only", seed=5)
+        w2 = Workload(num_keys=3000, zipf=1.1, mix="read_only", seed=5)
+        for kind, key in w1.ops(2000):
+            a.read(key)
+        kinds, keys = w2.ops_arrays(2000)
+        res = b.execute_batch(kinds, keys, collect_values=True)
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+        assert a.ms_ops == b.ms_ops
+        # collected values match fresh reads
+        for i in range(0, 2000, 97):
+            assert res.values[i] == a.pool.heap_val[
+                a.pool.index_lookup(int(keys[i]))[0]]
+
+
+# ---------------------------------------------------------------------------
+# ArrayDAC histogram spill: victim counts >= CNT_HIST_MAX force the
+# exact-peek fallback in the Eq. 1 victim sum (satellite audit)
+# ---------------------------------------------------------------------------
+class TestHistogramSpill:
+    @staticmethod
+    def _spill_pair(cap, n_keys, miss_rts):
+        a = DAC(cap, avg_miss_rts_init=miss_rts)
+        b = ArrayDAC(cap, avg_miss_rts_init=miss_rts)
+        for k in range(n_keys):
+            for c in (a, b):
+                c.fill_after_miss(k, 1000 + k, 1024)
+        return a, b
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=10, deadline=None)
+    def test_spilled_promotions_match_reference(self, seed):
+        """Drive every live shortcut's count past CNT_HIST_MAX (the
+        histogram clamp), then exercise Eq. 1 decisions with both
+        outcomes: the spill fallback (exact heap peek) must agree with
+        the reference DAC decision for decision."""
+        rng = np.random.default_rng(seed)
+        cap = 4096
+        a, b = self._spill_pair(cap, 40, miss_rts=1e5)
+        spills = [0]
+        orig = b._victim_sum_hist
+
+        def counting(n, exclude_cnt):
+            r = orig(n, exclude_cnt)
+            if r is None:
+                spills[0] += 1
+            return r
+
+        b._victim_sum_hist = counting
+        keys = [k for k in range(40) if k in b]
+        # phase 1: hammer counts far past the histogram bound; the huge
+        # avg_miss_rts denies every promotion through the exact path
+        for _ in range(CNT_HIST_MAX + 20):
+            for k in keys:
+                ra, rb = a.lookup(k), b.lookup(k)
+                assert ra == rb
+        assert max(int(b.count[k]) for k in keys) >= CNT_HIST_MAX
+        # phase 2: cheap misses flip the exact decision to promote
+        a.avg_miss_rts = b.avg_miss_rts = 1e-4
+        order = rng.permutation(keys)
+        for k in order:
+            ra, rb = a.lookup(int(k)), b.lookup(int(k))
+            assert ra == rb
+        sa, sb = a.stats, b.stats
+        assert (sa.value_hits, sa.shortcut_hits, sa.misses,
+                sa.promotions, sa.demotions, sa.evictions) == \
+               (sb.value_hits, sb.shortcut_hits, sb.misses,
+                sb.promotions, sb.demotions, sb.evictions)
+        assert a.used == b.used
+        assert spills[0] > 0, "spill fallback never engaged"
+        assert sb.promotions > 0, "no promotion decided via the peek"
+        for k in range(40):
+            assert (k in a.values) == (b.kind[k] == 2)
+            assert (k in a.shortcuts) == (b.kind[k] == 1)
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=5, deadline=None)
+    def test_spill_through_batched_engine(self, seed):
+        """High-skew mixed batches on tiny caches drive hot shortcut
+        counts past the histogram bound inside execute_batch; the
+        planned engine (which replays exact-Eq. 1 windows) must stay
+        identical to the scalar oracle."""
+        a, b = build_pair("dinomo", seed % 3, 1 << 14, num_keys=2000,
+                          num_kns=2)
+        w1 = Workload(num_keys=2000, zipf=2.0, mix="write_heavy_update",
+                      seed=seed % 11)
+        w2 = Workload(num_keys=2000, zipf=2.0, mix="write_heavy_update",
+                      seed=seed % 11)
+        for i, (kind, key) in enumerate(w1.ops(2500)):
+            if kind == "read":
+                a.read(key)
+            else:
+                a.write(key, f"w{i}")
+        kinds, keys = w2.ops_arrays(2500)
+        b.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+        assert cluster_snapshot(a) == cluster_snapshot(b)
