@@ -19,6 +19,10 @@ Planes measured
     batched write plane (oplog staging, vectorized merges, bulk fills).
   * cluster plane: raw execute_batch vs per-op read()/write() on the
     same preloaded cluster, no simulation bookkeeping.
+  * merge plane (PR 4): the planned merge path (MergeWindowPlan ->
+    apply_merge_plan) vs the per-entry oracle on an identical staged
+    log, plus per-row merge wall-time share and plan coverage inside
+    the sim rows.
   * JAX plane: fused kvs_lookup (read) and log_append_merge (write)
     kernels vs their jnp references. NOTE: Pallas runs in interpret
     mode on CPU hosts, so kernel wall-clock is not meaningful there;
@@ -67,6 +71,10 @@ PR1_BATCHED_WRITE_HEAVY = 31_299.0
 # planned-transition engine is measured against (range 63-94k across
 # runs on this shared host).
 PR2_BATCHED_WRITE_HEAVY = 83_000.0
+# PR 3's recorded write-heavy row + same-run speedup over scalar: the
+# baselines the PR 4 planned merge plane is measured against.
+PR3_BATCHED_WRITE_HEAVY = 66_000.0
+PR3_WRITE_HEAVY_SPEEDUP = 3.4
 
 
 def _cluster(reference: bool, num_kns: int = 4,
@@ -98,6 +106,8 @@ def bench_sim(mix: str, zipf: float, steps: int, num_keys: int,
             sim = TimedSimulation(c, w.timed_batched if batched else w.timed,
                                   dt=1.0, batched=batched, **kw)
             sim.run(2.0, lambda t: 1e8)                 # warm-up
+            c.pool.merge_wall_s = 0.0
+            _merge_plan_coverage()                      # reset counters
             walls = []
             for _ in range(repeats):
                 gc.collect()
@@ -111,6 +121,11 @@ def bench_sim(mix: str, zipf: float, steps: int, num_keys: int,
                     steps * sim.sample_ops * len(walls) / sum(walls),
                 "sample_ops": sim.sample_ops,
                 "wall_s": best,
+                # PR 4 tracking: share of the measured wall spent in the
+                # staged merge plane (merge_budget + merge_all), and the
+                # fraction of merged entries the MergeWindowPlan covered
+                "merge_wall_share": c.pool.merge_wall_s / sum(walls),
+                "merge_plan_coverage": _merge_plan_coverage(),
             }
     finally:
         if gc_was_enabled:
@@ -129,6 +144,53 @@ def _plan_coverage() -> float:
     cov = PLAN_STATS["planned_ops"] / total if total else 0.0
     reset_plan_stats()
     return cov
+
+
+def _merge_plan_coverage() -> float:
+    """Fraction of merged entries the planned merge plane covered (vs
+    scalar replay) since the last reset -- PR 4 tracking."""
+    from repro.core.transition import (MERGE_PLAN_STATS,
+                                       reset_merge_plan_stats)
+    total = (MERGE_PLAN_STATS["planned_entries"]
+             + MERGE_PLAN_STATS["replayed_entries"])
+    cov = MERGE_PLAN_STATS["planned_entries"] / total if total else 0.0
+    reset_merge_plan_stats()
+    return cov
+
+
+def bench_merge_plane(n_entries: int = 40_000, reps: int = 3) -> dict:
+    """Merge-plane micro-bench: the planned path (MergeWindowPlan ->
+    apply_merge_plan) vs the per-entry oracle (vectorized=False), same
+    entries, same pre-state -- the same-run scalar baseline for the
+    staged merge plane itself. Times merge_all over a fully staged
+    write-heavy log (zipf-duplicated keys: in-place updates, fresh
+    claims and within-window supersession)."""
+    from repro.core.dpm_pool import DPMPool
+    out = {}
+    for label, vec in (("scalar_per_entry", False), ("planned", True)):
+        walls = []
+        cov = 0.0
+        for _ in range(reps):
+            rng = np.random.default_rng(1)
+            pool = DPMPool(num_buckets=1 << 17, segment_capacity=512,
+                           vectorized=vec)
+            pool.register_kn("kn1")
+            keys = (rng.zipf(1.5, n_entries) % 100_000).tolist()
+            pool.log_write_batch("kn1", keys,
+                                 [f"v{i}" for i in range(n_entries)],
+                                 [64] * n_entries)
+            _merge_plan_coverage()
+            t0 = time.perf_counter()
+            pool.merge_all()
+            walls.append(time.perf_counter() - t0)
+            cov = _merge_plan_coverage()
+        out[label] = {"entries_per_s": n_entries / min(walls),
+                      "wall_s": min(walls),
+                      "plan_coverage": cov}
+    out["speedup"] = (out["planned"]["entries_per_s"]
+                      / out["scalar_per_entry"]["entries_per_s"])
+    out["n_entries"] = n_entries
+    return out
 
 
 def bench_cluster(mix: str, zipf: float, n_ops: int,
@@ -261,11 +323,20 @@ def main(fast: bool = False, quick: bool = False) -> dict:
     print(f"  scalar {clu['scalar_ops_per_s']:.0f}  batched "
           f"{clu['batched_ops_per_s']:.0f}  {clu['speedup']:.1f}x",
           flush=True)
+    print("# merge plane (planned vs per-entry oracle)", flush=True)
+    mp = bench_merge_plane(n_entries=4000 if quick
+                           else (10_000 if fast else 40_000),
+                           reps=1 if quick else (2 if fast else 3))
+    print(f"  scalar {mp['scalar_per_entry']['entries_per_s']:.0f} "
+          f"entries/s  planned {mp['planned']['entries_per_s']:.0f} "
+          f"entries/s  {mp['speedup']:.1f}x  coverage "
+          f"{mp['planned']['plan_coverage']:.2f}", flush=True)
     print("# JAX plane (interpret mode)", flush=True)
     kern = bench_kernel(batch=256 if quick else (512 if fast else 2048),
                         reps=1 if quick else (2 if fast else 5))
     best = max(s["speedup"] for s in sims.values())
-    wh = sims["write_heavy_update_z0.5"]["batched"]["sampled_ops_per_s"]
+    wh_row = sims["write_heavy_update_z0.5"]
+    wh = wh_row["batched"]["sampled_ops_per_s"]
     record = {
         "config": {"num_keys": num_keys, "value_bytes": VALUE_BYTES,
                    "cache_frac": CACHE_FRAC, "num_kns": 4,
@@ -281,22 +352,39 @@ def main(fast: bool = False, quick: bool = False) -> dict:
             "row": "write_heavy_update_z0.5",
             "pr1_batched_ops_per_s": PR1_BATCHED_WRITE_HEAVY,
             "pr2_batched_ops_per_s": PR2_BATCHED_WRITE_HEAVY,
+            "pr3_batched_ops_per_s": PR3_BATCHED_WRITE_HEAVY,
             "batched_ops_per_s": wh,
             "improvement_over_pr1_batched": wh / PR1_BATCHED_WRITE_HEAVY,
             "improvement_over_pr2_batched": wh / PR2_BATCHED_WRITE_HEAVY,
+            "improvement_over_pr3_batched": wh / PR3_BATCHED_WRITE_HEAVY,
             # ISSUE 2 acceptance: >= 5x over the PR 1 batched baseline
             "target_improvement_over_pr1_batched": 5.0,
             "meets_write_target": wh / PR1_BATCHED_WRITE_HEAVY >= 5.0,
-            "speedup_over_scalar_same_run":
-                sims["write_heavy_update_z0.5"]["speedup"],
-            "plan_coverage":
-                sims["write_heavy_update_z0.5"]["plan_coverage"],
+            "speedup_over_scalar_same_run": wh_row["speedup"],
+            # ISSUE 4 acceptance: the same-run speedup over scalar must
+            # improve on the PR 3 recording (3.4x)
+            "pr3_speedup_over_scalar_same_run": PR3_WRITE_HEAVY_SPEEDUP,
+            "speedup_improves_on_pr3":
+                wh_row["speedup"] > PR3_WRITE_HEAVY_SPEEDUP,
+            "plan_coverage": wh_row["plan_coverage"],
             "ycsb_a_like_ops_per_s":
                 sims["write_heavy_update_z0.99"]["batched"]
                     ["sampled_ops_per_s"],
             "ycsb_d_like_latest_ops_per_s":
                 sims["read_mostly_insert_z0.99_latest"]["batched"]
                     ["sampled_ops_per_s"],
+        },
+        "merge_plane": {
+            "micro": mp,
+            "write_heavy_merge_wall_share": {
+                "scalar": wh_row["scalar"]["merge_wall_share"],
+                "batched": wh_row["batched"]["merge_wall_share"],
+            },
+            "write_heavy_merge_plan_coverage":
+                wh_row["batched"]["merge_plan_coverage"],
+            "target_plan_coverage": 0.95,
+            "meets_plan_coverage":
+                wh_row["batched"]["merge_plan_coverage"] >= 0.95,
         },
     }
     # quick/fast smoke runs must not clobber the tracked full-run record

@@ -31,9 +31,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .transition import (MERGE_PLAN_STATS, MERGE_MAX_CHAIN,
+                         _merge_bucket_batch, plan_merge_window)
+
 EMPTY = jnp.int32(-1)
 SLOTS = 3          # one cache line, as in P-CLHT
 MAX_CHAIN = 8      # bounded chain walk (jit-friendly)
+assert MERGE_MAX_CHAIN == MAX_CHAIN  # planner mirrors the scalar walk
 
 
 def _mix32(x):
@@ -277,14 +281,9 @@ class NumpyCLHT:
         return None, probes
 
     def _bucket_batch(self, keys: np.ndarray) -> np.ndarray:
-        """Vectorized ``_bucket``: identical mixing per element."""
-        m = np.uint32(0xFFFFFFFF)
-        x = (np.asarray(keys, dtype=np.int64)
-             & np.int64(0xFFFFFFFF)).astype(np.uint32)
-        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
-        x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
-        x = (x ^ (x >> np.uint32(16))) & m
-        return (x & np.uint32(self.num_buckets - 1)).astype(np.int64)
+        """Vectorized ``_bucket``: identical mixing per element (the
+        single shared implementation lives with the merge planner)."""
+        return _merge_bucket_batch(keys, self.num_buckets)
 
     def lookup_batch(self, keys: np.ndarray):
         """Vectorized chain walk over a batch of keys.
@@ -316,46 +315,32 @@ class NumpyCLHT:
             cur = np.where(active, nxt, cur)
         return ptrs, probes
 
-    def _locate_batch(self, keys: np.ndarray):
-        """Vectorized chain walk locating each key's slot.
-
-        -> (rows, slots, found): (row, slot) holds key i where found;
-        undefined (zeros) where not found."""
-        keys = np.asarray(keys, dtype=np.int64)
-        n = keys.shape[0]
-        cur = self._bucket_batch(keys)
-        rows = np.zeros(n, np.int64)
-        slots = np.zeros(n, np.int64)
-        found = np.zeros(n, bool)
-        active = np.ones(n, bool)
-        for _ in range(MAX_CHAIN):
-            if not active.any():
-                break
-            rk = self.keys[cur]
-            hit = (rk == keys[:, None]) & active[:, None]
-            hit_any = hit.any(axis=1)
-            if hit_any.any():
-                s = np.argmax(hit, axis=1)
-                rows[hit_any] = cur[hit_any]
-                slots[hit_any] = s[hit_any]
-                found |= hit_any
-            nxt = self.nxt[cur]
-            active = active & ~hit_any & (nxt != -1)
-            cur = np.where(active, nxt, cur)
-        return rows, slots, found
+    def apply_merge_plan(self, plan) -> None:
+        """Apply one :class:`~repro.core.transition.MergeWindowPlan` in
+        bulk: in-place final-pointer scatters for present keys, slot
+        claims for absent keys (primary-row or chain empties resolved by
+        the planner, claim order proven exact), one version bump per
+        live entry -- exactly the scalar insert sequence's evolution."""
+        if plan.upd_rows.size:
+            self.ptrs[plan.upd_rows, plan.upd_slots] = plan.upd_ptrs
+        if plan.n_new:
+            self.keys[plan.new_rows, plan.new_slots] = plan.new_keys
+            self.ptrs[plan.new_rows, plan.new_slots] = plan.new_ptrs
+            self.size += plan.n_new
+        self.version += plan.n_index
 
     def insert_batch(self, keys: np.ndarray, ptrs: np.ndarray):
-        """Vectorized sequential insert: element-wise identical to
-        calling ``insert`` per (key, ptr) in order -- same superseded
-        pointers (including within-batch duplicate chains), same slot
-        placement, same overflow allocation order.
+        """Planned sequential insert: element-wise identical to calling
+        ``insert`` per (key, ptr) in order -- same superseded pointers
+        (including within-batch duplicate chains), same slot placement,
+        same overflow allocation order.
 
-        Fast paths (one gather + one scatter each): in-place pointer
-        updates for present keys; first-empty-primary-slot claims for
-        absent keys whose bucket is not contested within the batch.
-        Contested or overflowing buckets fall back to the scalar insert
-        in first-occurrence order (the order the scalar sequence would
-        have claimed slots in).
+        The batch runs through the planned merge plane
+        (transition.plan_merge_window -> apply_merge_plan): one
+        vectorized sweep resolves grouped bucket targets, per-bucket
+        slot assignment and old-pointer supersession; entries past a
+        plan's self-truncation point (a bucket whose chain must grow)
+        replay through the scalar insert in order before re-planning.
 
         -> (old_ptrs, ok, grown_buckets): old_ptrs[i] is the pointer
         entry i superseded (-1 for a fresh insert), ok[i] mirrors the
@@ -368,73 +353,27 @@ class NumpyCLHT:
         old = np.full(n, -1, np.int64)
         ok = np.ones(n, bool)
         grown: list[int] = []
-        if n == 0:
-            return old, ok, grown
-        v0 = self.version
-        order = np.argsort(keys, kind="stable")
-        sk = keys[order]
-        sp = ptrs[order]
-        newgrp = np.empty(n, bool)
-        newgrp[0] = True
-        np.not_equal(sk[1:], sk[:-1], out=newgrp[1:])
-        last = np.empty(n, bool)
-        last[-1] = True
-        np.not_equal(sk[1:], sk[:-1], out=last[:-1])
-        uk = sk[newgrp]                   # unique keys (sorted)
-        ufinal = sp[last]                 # final ptr per unique key
-        ufirst = order[newgrp]            # first-occurrence position
-        # one chain walk resolves both the pre-batch mapping (the old
-        # ptrs) and the in-place update targets for present keys
-        rows, slots, found = self._locate_batch(uk)
-        ucur = np.where(found, self.ptrs[rows, slots], -1)
-        # per-entry superseded ptr: pre-batch mapping for the first
-        # occurrence of each key, the previous occurrence's ptr after
-        prev = np.empty(n, np.int64)
-        prev[newgrp] = ucur
-        if n > 1:
-            dup = ~newgrp
-            prev[dup] = sp[:-1][dup[1:]]
-        old[order] = prev
-        if found.any():
-            self.ptrs[rows[found], slots[found]] = ufinal[found]
-        failed: list[int] = []
-        ab = ~found
-        if ab.any():
-            ak = uk[ab]
-            ap = ufinal[ab]
-            apos = ufirst[ab]
-            b = self._bucket_batch(ak)
-            has_empty = (self.keys[b] == -1).any(axis=1)
-            ub, cnts = np.unique(b, return_counts=True)
-            shared = np.isin(b, ub[cnts > 1])
-            # a primary row with an empty slot takes the first empty
-            # slot regardless of any chain (the scalar walk records the
-            # first empty along the chain, and primary comes first)
-            fast = has_empty & ~shared
-            if fast.any():
-                fb = b[fast]
-                slot = np.argmax(self.keys[fb] == -1, axis=1)
-                self.keys[fb, slot] = ak[fast]
-                self.ptrs[fb, slot] = ap[fast]
-                self.size += int(fast.sum())
-            slow = np.nonzero(~fast)[0]
-            if slow.size:
-                so = slow[np.argsort(apos[slow], kind="stable")]
-                for j in so.tolist():
-                    head0 = self.overflow_head
-                    _, okk = self.insert(int(ak[j]), int(ap[j]))
-                    if self.overflow_head != head0:
-                        grown.append(int(self._bucket(int(ak[j]))))
-                    if not okk:
-                        failed.append(int(ak[j]))
-        nsucc = n
-        if failed:
-            bad = np.isin(keys, np.asarray(failed, np.int64))
-            ok[bad] = False
-            old[bad] = -1
-            nsucc -= int(bad.sum())
-        # one version bump per successful entry, as the scalar sequence
-        self.version = v0 + nsucc
+        i = 0
+        while i < n:
+            plan = plan_merge_window(self, keys[i:], ptrs[i:],
+                                     tombstones=False)
+            if plan is None:
+                head0 = self.overflow_head
+                o, okk = self.insert(int(keys[i]), int(ptrs[i]))
+                if self.overflow_head != head0:
+                    grown.append(int(self._bucket(int(keys[i]))))
+                if o is not None:
+                    old[i] = o
+                ok[i] = okk
+                MERGE_PLAN_STATS["replayed_windows"] += 1
+                MERGE_PLAN_STATS["replayed_entries"] += 1
+                i += 1
+                continue
+            self.apply_merge_plan(plan)
+            old[i:i + plan.ops] = plan.old
+            MERGE_PLAN_STATS["planned_windows"] += 1
+            MERGE_PLAN_STATS["planned_entries"] += plan.ops
+            i += plan.ops
         return old, ok, grown
 
     def insert(self, key: int, ptr: int):

@@ -572,7 +572,8 @@ class DinomoCluster:
     # extension, bulk per-KN segment fills, precomputed amortized-flush
     # RTs), then coordinates the batch as per-KN windows between global
     # events -- segment rotations, stall-triggered merges (which run
-    # through the pool's grouped-bucket merge_entries_batch), and
+    # through the pool's planned merge plane: merge_entries_batch plans
+    # each window as a MergeWindowPlan and applies it in bulk), and
     # replicated-key ops. Inside a window, per-KN streams are provably
     # independent, so ops are applied as vectorized runs (bulk value
     # hits, bulk write fills) with exact scalar fallbacks at every
@@ -1655,7 +1656,9 @@ class DinomoCluster:
         (Clover updates metadata in place) is staged -- superseded
         pointers invalidate eagerly at their op position through a
         pending-index overlay, the CLHT bucket updates land once at
-        batch end via the grouped insert_batch. Requires (and leaves)
+        batch end via the planned insert_batch (plan_merge_window ->
+        apply_merge_plan, scalar replay past a plan's self-truncation
+        point). Requires (and leaves)
         empty active logs; statistics are op-for-op identical to the
         per-op path (property-tested)."""
         pool = self.pool

@@ -16,6 +16,7 @@ timing/asynchrony is orchestrated by cluster.py against netmodel.py.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -23,6 +24,8 @@ import numpy as np
 
 from .clht import NumpyCLHT
 from .log import PySegment
+from .transition import (MERGE_PLAN_STATS, MIN_MERGE_PLAN_OPS,
+                         plan_merge_window)
 
 
 @dataclass
@@ -59,6 +62,9 @@ class DPMPool:
         self.segment_capacity = segment_capacity
         self.unmerged_threshold = unmerged_threshold
         self.merge_backlog: deque[tuple[PySegment, int]] = deque()
+        # wall-clock spent inside merge_budget/merge_all: the bench's
+        # per-row merge wall-time share (PR 4 tracking)
+        self.merge_wall_s = 0.0
         # indirection table for replicated keys: key -> ptr  (CAS target)
         self.indirect: dict[int, int] = {}
         self._indirect_version = 0
@@ -189,28 +195,32 @@ class DPMPool:
     def merge_budget(self, ops: int) -> int:
         """Merge up to ``ops`` log entries from the backlog, strictly in
         order within each segment. When ``merge_allowance`` is set (the
-        per-epoch DPM-processor budget), the call additionally debits
-        and respects the remaining allowance, so a batched oplog flush
-        cannot merge more in one epoch than the per-op path's budgeted
-        cadence would. Returns entries merged."""
+        per-epoch DPM-processor budget), the budget clamps the merge
+        window itself (plan_merge_window's ``max_ops``), and the
+        allowance is debited exactly once, here, by the entry count
+        merge_entries_batch reports -- a truncated plan plus its scalar
+        replay can never double-charge the epoch budget. Returns
+        entries merged."""
         if self.merge_allowance is not None:
             ops = min(ops, self.merge_allowance)
         done = 0
+        t0 = time.perf_counter()
         while self.merge_backlog and done < ops:
             seg, _ = self.merge_backlog.popleft()
             entries = seg.sealed_entries()
-            take = min(len(entries) - seg.merged_upto, ops - done)
-            if take > 0:
-                self.merge_entries_batch(
-                    entries[seg.merged_upto:seg.merged_upto + take], seg)
-                seg.merged_upto += take
-                done += take
+            if seg.merged_upto < len(entries):
+                merged = self.merge_entries_batch(
+                    entries[seg.merged_upto:], seg,
+                    max_ops=ops - done)
+                seg.merged_upto += merged
+                done += merged
             if seg.merged_upto < len(entries):
                 self.merge_backlog.appendleft((seg, 0))
             else:
                 self._maybe_collect(seg)
         if self.merge_allowance is not None:
             self.merge_allowance -= done
+        self.merge_wall_s += time.perf_counter() - t0
         return done
 
     def merge_all(self, kn: str | None = None) -> int:
@@ -221,6 +231,7 @@ class DPMPool:
         synchronous merges must complete regardless of the async
         DPM-processor budget."""
         done = 0
+        t0 = time.perf_counter()
         # backlog first (order preserved), filtered by KN if given
         keep: deque = deque()
         while self.merge_backlog:
@@ -250,50 +261,70 @@ class DPMPool:
             if entries:
                 self.segments[owner] = [PySegment(self.segment_capacity,
                                                   owner)]
+        self.merge_wall_s += time.perf_counter() - t0
         return done
 
-    def merge_entries_batch(self, entries, seg: PySegment) -> None:
+    def merge_entries_batch(self, entries, seg: PySegment,
+                            max_ops: int | None = None) -> int:
         """Merge a run of (key, ptr) entries of one segment in order --
         element-wise equivalent to per-entry ``_merge_entry`` (property
-        tested). Non-tombstone runs go through the grouped CLHT bucket
-        update (NumpyCLHT.insert_batch); superseded pointers are
-        invalidated in one pass with per-segment GC accounting.
-        Tombstones and indirection-table keys keep scalar semantics."""
-        if not self.vectorized or len(entries) < 8:
+        tested). The run goes through the planned merge plane: each
+        window plans as one vectorized sweep (transition.
+        plan_merge_window -- grouped bucket targets, per-bucket slot
+        assignment, old-pointer supersession, indirect filtering) and
+        applies in bulk (apply_merge_plan); the entry at a plan's
+        self-truncation point (a tombstone, or a bucket whose chain
+        must grow) replays through the exact scalar ``_merge_entry``
+        before re-planning. ``max_ops`` (the remaining per-epoch merge
+        allowance) clamps the plan itself. Returns entries merged --
+        the caller's single accounting point, so a truncated plan plus
+        its replay is never double-charged."""
+        n = len(entries)
+        if max_ops is not None and max_ops < n:
+            n = max_ops
+            entries = entries[:n]
+        if not self.vectorized or n < MIN_MERGE_PLAN_OPS:
             for key, ptr in entries:
                 self._merge_entry(key, ptr, seg)
-            return
+            if self.vectorized:       # the oracle plane never counts
+                MERGE_PLAN_STATS["replayed_windows"] += 1
+                MERGE_PLAN_STATS["replayed_entries"] += n
+            return n
         arr = np.asarray(entries, dtype=np.int64)
         keys, ptrs = arr[:, 0], arr[:, 1]
-        tpos = np.nonzero(keys < 0)[0]
-        start, n = 0, keys.shape[0]
-        for t in (*tpos.tolist(), n):
-            if t > start:
-                self._merge_run(keys[start:t], ptrs[start:t])
-            if t < n:
-                self._merge_entry(int(keys[t]), int(ptrs[t]), seg)
-            start = t + 1
+        ind = self._indirect_keys_array() if self.indirect else None
+        i = 0
+        while i < n:
+            plan = plan_merge_window(self.index, keys[i:], ptrs[i:],
+                                     indirect_keys=ind)
+            if plan is None:
+                self._merge_entry(int(keys[i]), int(ptrs[i]), seg)
+                MERGE_PLAN_STATS["replayed_windows"] += 1
+                MERGE_PLAN_STATS["replayed_entries"] += 1
+                i += 1
+                continue
+            self.apply_merge_plan(plan)
+            MERGE_PLAN_STATS["planned_windows"] += 1
+            MERGE_PLAN_STATS["planned_entries"] += plan.ops
+            i += plan.ops
+        return n
 
-    def _merge_run(self, keys: np.ndarray, ptrs: np.ndarray) -> None:
-        """One tombstone-free merge run (helper of merge_entries_batch)."""
-        self.gc.entries_merged += int(keys.shape[0])
-        if self.indirect:
-            # replicated keys already published via CAS: skip the index
-            # (one-pass indirection check instead of per-entry membership)
-            keep = ~np.isin(keys, self._indirect_keys_array())
-            if not keep.all():
-                keys, ptrs = keys[keep], ptrs[keep]
-        if not keys.shape[0]:
-            return
-        old, ok, grown = self.index.insert_batch(keys, ptrs)
+    def apply_merge_plan(self, plan) -> None:
+        """Apply one planned merge window against the pool: bulk index
+        scatters (NumpyCLHT.apply_merge_plan), one-pass supersession
+        invalidation with per-segment GC accounting, and dirty-key
+        tracking for the batch engine's prefetched probes. Planned
+        windows never grow bucket chains (overflow truncates the plan),
+        so there are no bucket-growth hazards to record."""
+        self.gc.entries_merged += plan.ops
+        self.index.apply_merge_plan(plan)
         if self._dirty is not None:
-            self._dirty[0].update(keys.tolist())
-            self._dirty[1].update(grown)
-        inv = ok & (old >= 0) & (old != ptrs)
-        if inv.any():
+            self._dirty[0].update(plan.live_keys.tolist())
+        inv = plan.inv_ptrs
+        if inv.size:
             hv, hs = self.heap_val, self.heap_seg
             touched = {}
-            for o in old[inv].tolist():
+            for o in inv.tolist():
                 hv[o] = None                    # value superseded
                 s = hs[o]
                 if s is not None:

@@ -1,3 +1,4 @@
 from .log_merge import log_merge
-from .ops import log_append_merge, merge_segment_fast, unpack_table
-from .ref import log_append_merge_ref, log_merge_ref
+from .ops import (apply_merge_plan_tables, log_append_merge,
+                  merge_segment_fast, merge_segment_planned, unpack_table)
+from .ref import log_append_merge_ref, log_merge_ref, merge_window_plan_ref

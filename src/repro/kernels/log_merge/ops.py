@@ -16,9 +16,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...core.clht import CLHT, bucket_of, clht_insert
 from ...core.log import LogSegment, ValueHeap, heap_append, log_append
+from ...core.transition import plan_merge_window
 from ..clht_probe.clht_probe import pack_table
 from ..interpret import resolve_interpret
 from .log_merge import LANES, log_merge
@@ -60,6 +62,95 @@ def merge_segment_fast(table: CLHT, seg: LogSegment, *,
     old = jnp.where(slow, old_slow, old)
     ok = (ok == 1) | (slow & ok_slow)
     return table, old, ok
+
+
+class _HostTableView:
+    """Host-side numpy view of a CLHT for the merge planner (the same
+    planner the simulator's NumpyCLHT plane uses)."""
+
+    __slots__ = ("keys", "ptrs", "nxt", "num_buckets")
+
+    def __init__(self, table: CLHT):
+        self.keys = np.asarray(table.keys).astype(np.int64)
+        self.ptrs = np.asarray(table.ptrs).astype(np.int64)
+        self.nxt = np.asarray(table.nxt).astype(np.int64)
+        self.num_buckets = table.num_buckets
+
+    def apply(self, plan) -> None:
+        if plan.upd_rows.size:
+            self.ptrs[plan.upd_rows, plan.upd_slots] = plan.upd_ptrs
+        if plan.n_new:
+            self.keys[plan.new_rows, plan.new_slots] = plan.new_keys
+            self.ptrs[plan.new_rows, plan.new_slots] = plan.new_ptrs
+
+
+def apply_merge_plan_tables(table: CLHT, plan) -> CLHT:
+    """Apply one MergeWindowPlan to the JAX-plane table: the planned
+    layout lands as two bulk device scatters (in-place final-pointer
+    updates + slot claims) instead of one grid step per entry."""
+    keys = table.keys
+    ptrs = table.ptrs
+    if plan.upd_rows.size:
+        ptrs = ptrs.at[jnp.asarray(plan.upd_rows),
+                       jnp.asarray(plan.upd_slots)].set(
+            jnp.asarray(plan.upd_ptrs, dtype=ptrs.dtype))
+    if plan.n_new:
+        r = jnp.asarray(plan.new_rows)
+        s = jnp.asarray(plan.new_slots)
+        keys = keys.at[r, s].set(jnp.asarray(plan.new_keys, keys.dtype))
+        ptrs = ptrs.at[r, s].set(jnp.asarray(plan.new_ptrs, ptrs.dtype))
+    return CLHT(keys=keys, ptrs=ptrs, nxt=table.nxt,
+                overflow_head=table.overflow_head,
+                num_buckets=table.num_buckets)
+
+
+def merge_segment_planned(table: CLHT, seg: LogSegment, *,
+                          interpret: bool | None = None):
+    """Planned-layout merge of ``seg``'s pending sealed window: the
+    host-side planner (core.transition.plan_merge_window -- the exact
+    engine behind the simulator's staged merge plane) resolves grouped
+    bucket targets, per-bucket slot claims and per-entry superseded
+    pointers in one vectorized sweep per window, and the device applies
+    each plan as bulk scatters.  Entries past a plan's self-truncation
+    point (a bucket whose chain must grow, or a sub-plan-sized tail)
+    fall back to the sequential ``clht_insert`` scan, preserving log
+    order.  Returns (table, old, ok) with merge_segment_fast's shapes
+    and semantics (property-tested equal)."""
+    del interpret                     # no Pallas dispatch on this path
+    cap = int(seg.keys.shape[0])
+    count = int(seg.count)
+    merged = int(seg.merged)
+    seal = np.asarray(seg.seal)
+    idx = np.arange(cap)
+    todo = (idx >= merged) & (idx < count) & (seal == 1)
+    tpos = np.flatnonzero(todo)
+    old = np.full(cap, -1, np.int64)
+    ok = np.zeros(cap, bool)
+    view = _HostTableView(table)
+    wkeys = np.asarray(seg.keys).astype(np.int64)[tpos]
+    wptrs = np.asarray(seg.ptrs).astype(np.int64)[tpos]
+    done = 0
+    while done < tpos.size:
+        plan = plan_merge_window(view, wkeys[done:], wptrs[done:],
+                                 tombstones=False)
+        if plan is None:
+            break
+        table = apply_merge_plan_tables(table, plan)
+        view.apply(plan)              # keep the host view current
+        sl = tpos[done:done + plan.ops]
+        old[sl] = plan.old
+        ok[sl] = True
+        done += plan.ops
+    if done < tpos.size:
+        mask = np.zeros(cap, bool)
+        mask[tpos[done:]] = True
+        table, old_s, ok_s, _ = clht_insert(table, seg.keys, seg.ptrs,
+                                            jnp.asarray(mask))
+        old_np = np.asarray(old_s)
+        ok_np = np.asarray(ok_s)
+        old[mask] = old_np[mask]
+        ok[mask] = ok_np[mask]
+    return table, jnp.asarray(old, jnp.int32), jnp.asarray(ok)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

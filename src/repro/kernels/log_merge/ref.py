@@ -37,6 +37,80 @@ def log_append_merge_ref(table, seg, heap, keys, values):
             jnp.where(fit, okb, 0).astype(bool))
 
 
+def merge_window_plan_ref(lines, bucket_ids, keys, ptrs, *,
+                          slots: int = 3):
+    """Planned-layout oracle at the packed-bucket-line level: resolves
+    the whole window's outcome as grouped last-wins updates and ranked
+    slot claims -- the same layout the simulator's MergeWindowPlan
+    computes -- instead of ``log_merge_ref``'s entry-at-a-time replay.
+    Decision-for-decision identical to ``log_merge_ref`` (the line
+    model has no chains, so a full bucket simply fails its claims, as
+    the sequential walk would)."""
+    lines = np.array(lines, dtype=np.int32, copy=True)
+    keys = np.asarray(keys, dtype=np.int64)
+    ptrs = np.asarray(ptrs, dtype=np.int64)
+    bucket_ids = np.asarray(bucket_ids, dtype=np.int64)
+    e = keys.shape[0]
+    old = np.full((e,), -1, np.int32)
+    ok = np.zeros((e,), np.int32)
+    if not e:
+        return lines, old, ok
+    # group entries by (bucket, key): last ptr wins, per-entry old
+    # follows the within-window duplicate chain
+    comp = bucket_ids * (np.int64(1) << 32) + keys
+    order = np.argsort(comp, kind="stable")
+    sc = comp[order]
+    sp = ptrs[order]
+    first = np.ones(e, bool)
+    first[1:] = sc[1:] != sc[:-1]
+    last = np.ones(e, bool)
+    last[:-1] = first[1:]
+    uk = keys[order][first]
+    ub = bucket_ids[order][first]
+    ufinal = sp[last]
+    ufirst = order[first]
+    # match against the pre-window lines
+    rows = lines[ub]
+    hit = rows[:, :slots] == uk[:, None]
+    found = hit.any(axis=1)
+    mslot = np.argmax(hit, axis=1)
+    ucur = np.where(found, rows[np.arange(uk.size), slots + mslot], -1)
+    # ranked empty-slot claims per bucket, first-occurrence order
+    ab = ~found
+    claim_slot = np.full(uk.size, -1, np.int64)
+    if ab.any():
+        emp = rows[:, :slots] == -1
+        ord_ab = np.lexsort((ufirst, ub))
+        ord_ab = ord_ab[ab[ord_ab]]
+        gb = ub[ord_ab]
+        gfirst = np.ones(ord_ab.size, bool)
+        gfirst[1:] = gb[1:] != gb[:-1]
+        gstart = np.flatnonzero(gfirst)
+        rank = (np.arange(ord_ab.size, dtype=np.int64)
+                - gstart[np.cumsum(gfirst) - 1])
+        # the rank-th empty slot of the row, -1 when it runs out
+        for gi, r in zip(ord_ab.tolist(), rank.tolist()):
+            sl = np.flatnonzero(emp[gi])
+            if r < sl.size:
+                claim_slot[gi] = sl[r]
+    # per-entry old/ok: failed claims fail every occurrence of the key
+    usucc = found | (claim_slot >= 0)
+    gid = np.cumsum(first) - 1
+    prev = np.empty(e, np.int64)
+    prev[first] = ucur
+    if e > 1:
+        dup = ~first
+        prev[dup] = sp[:-1][dup[1:]]
+    old[order] = np.where(usucc[gid], prev, -1).astype(np.int32)
+    ok[order] = usucc[gid].astype(np.int32)
+    # land the final layout: one scatter per side
+    tgt = np.where(found, mslot, claim_slot)
+    sel = usucc
+    lines[ub[sel], tgt[sel]] = uk[sel].astype(np.int32)
+    lines[ub[sel], slots + tgt[sel]] = ufinal[sel].astype(np.int32)
+    return lines, old, ok
+
+
 def log_merge_ref(lines, bucket_ids, keys, ptrs, *, slots: int = 3):
     lines = np.array(lines, dtype=np.int32, copy=True)
     e = len(keys)

@@ -27,6 +27,28 @@ except ImportError:                                    # pragma: no cover
 _SUBPROC_PREAMBLE = "import repro.distributed.jax_compat\n"
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run the heavy nightly-profile sweeps (marked slow)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy hypothesis sweeps (nightly profile; needs --runslow)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="nightly-profile sweep: "
+                                        "pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
 def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
     """Run python code in a subprocess with a forced multi-device host
     platform (tests in-process must keep the default single device)."""

@@ -19,7 +19,9 @@ from repro.kernels.flash_attention import (attention, blocked_mha_jnp,
                                            flash_attention, mha_ref)
 from repro.kernels.log_merge import (log_append_merge,
                                      log_append_merge_ref, log_merge,
-                                     log_merge_ref, merge_segment_fast)
+                                     log_merge_ref, merge_segment_fast,
+                                     merge_segment_planned,
+                                     merge_window_plan_ref)
 from repro.kernels.ssd_scan import ssd, ssd_ref, ssd_scan
 
 RNG = np.random.default_rng(42)
@@ -93,6 +95,52 @@ def test_log_merge_sweep(nb, entries):
     np.testing.assert_array_equal(np.asarray(l_k), l_r)
     np.testing.assert_array_equal(np.asarray(o_k), o_r)
     np.testing.assert_array_equal(np.asarray(ok_k), ok_r)
+
+
+@pytest.mark.parametrize("nb,entries,space", [
+    (64, 200, 6), (128, 500, 3), (32, 64, 2), (16, 300, 4)])
+def test_merge_window_plan_ref_matches_sequential(nb, entries, space):
+    """The planned-layout oracle (grouped last-wins updates + ranked
+    slot claims -- the MergeWindowPlan layout) is decision-for-decision
+    identical to the entry-at-a-time log_merge_ref, including duplicate
+    chains and full-bucket claim failures."""
+    keys = RNG.integers(0, nb * space, entries).astype(np.int32)
+    ptrs = RNG.integers(0, 10**6, entries).astype(np.int32)
+    t = clht_init(nb)
+    lines = np.asarray(pack_table(t.keys, t.ptrs, t.nxt))
+    pk = RNG.integers(0, nb * space, 40).astype(np.int32)
+    pb = np.asarray(bucket_of(jnp.array(pk), nb))
+    lines, _, _ = log_merge_ref(lines, pb, pk, pk + 7000)
+    bids = np.asarray(bucket_of(jnp.array(keys), nb))
+    l_a, o_a, ok_a = log_merge_ref(lines, bids, keys, ptrs)
+    l_b, o_b, ok_b = merge_window_plan_ref(lines, bids, keys, ptrs)
+    np.testing.assert_array_equal(l_a, l_b)
+    np.testing.assert_array_equal(o_a, o_b)
+    np.testing.assert_array_equal(ok_a, ok_b)
+
+
+@pytest.mark.parametrize("nb,n,space", [(128, 200, 30), (32, 220, 3),
+                                        (512, 400, 6)])
+def test_merge_segment_planned_matches_fast(nb, n, space):
+    """The planned-layout merge (host MergeWindowPlan + bulk device
+    scatters, chain-overflow tail falling back to sequential inserts)
+    matches merge_segment_fast table-for-table and entry-for-entry."""
+    seg = segment_init(max(n + 8, 16))
+    keys = RNG.integers(0, nb * space, n).astype(np.int32)
+    seg, _ = log_append(seg, jnp.array(keys),
+                        jnp.arange(n, dtype=jnp.int32) + 5000)
+    t0 = clht_init(nb)
+    pre = RNG.integers(0, nb * space, nb).astype(np.int32)
+    t0, *_ = clht_insert(t0, jnp.array(pre),
+                         jnp.array(pre) + 9000)
+    ta, oa, ka = merge_segment_planned(t0, seg)
+    tb, ob, kb = merge_segment_fast(t0, seg)
+    np.testing.assert_array_equal(np.asarray(ta.keys),
+                                  np.asarray(tb.keys))
+    np.testing.assert_array_equal(np.asarray(ta.ptrs),
+                                  np.asarray(tb.ptrs))
+    np.testing.assert_array_equal(np.asarray(oa), np.asarray(ob))
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
 
 
 def test_merge_segment_fast_equals_sequential_insert():

@@ -19,7 +19,13 @@ per-op reference path:
     put/get/update/delete batches for the Dinomo (ArrayDAC), static
     (ArrayStaticCache) and Clover (ArrayCloverCache) planes, including
     mid-batch segment-seal boundaries (rotations + write stalls inside
-    one batch) and replicated keys.
+    one batch) and replicated keys -- swept across the PR 4 merge-plane
+    knobs (per-epoch merge allowance in {tiny, inf}, contested-bucket
+    density) with a linearizability check over a batched run with
+    interleaved stall merges.
+
+The planned merge plane itself (MergeWindowPlan) has its dedicated
+adversarial harness in tests/test_mergeplane.py.
 """
 
 import numpy as np
@@ -243,15 +249,17 @@ class TestArrayStaticCacheEquivalence:
 # batched cluster write plane vs the per-op reference path
 # ---------------------------------------------------------------------------
 def build_pair(variant, seed, cache_bytes, num_keys=4000, num_kns=4,
-               segment_capacity=64):
+               segment_capacity=64, num_buckets=1 << 12,
+               merge_allowance=None):
     out = []
     for reference in (True, False):
         c = DinomoCluster(VARIANTS[variant], num_kns=num_kns,
                           cache_bytes=cache_bytes, value_bytes=1024,
-                          num_buckets=1 << 12,
+                          num_buckets=num_buckets,
                           segment_capacity=segment_capacity,
                           seed=seed, reference_cache=reference)
         c.load(((k, f"v{k}") for k in range(num_keys)), warm=True)
+        c.pool.merge_allowance = merge_allowance
         out.append(c)
     return out
 
@@ -296,12 +304,24 @@ def apply_scalar(c, kinds, keys):
 
 class TestWritePlaneEquivalence:
     @given(st.integers(0, 10**6), st.sampled_from(VARIANT_NAMES),
-           st.sampled_from(MIX_NAMES), st.integers(15, 20))
+           st.sampled_from(MIX_NAMES), st.integers(15, 20),
+           st.sampled_from([None, 24]),          # merge allowance: inf/tiny
+           st.sampled_from([1 << 12, 1 << 7]))   # contested-bucket density
     @settings(max_examples=18, deadline=None)
-    def test_mixed_batches_identical(self, seed, variant, mix, cache_pow):
-        """Mixed put/get/update/delete batches: per-KN and per-cache
-        statistics identical across all three cache planes."""
-        a, b = build_pair(variant, seed % 5, 1 << cache_pow)
+    def test_mixed_batches_identical(self, seed, variant, mix, cache_pow,
+                                     allowance, num_buckets):
+        """Mixed put/get/update/delete batches across the merge-plane
+        knob grid (per-epoch allowance in {tiny, inf}, contested-bucket
+        density via the index size): per-KN and per-cache statistics
+        identical across all three cache planes.  The clover plane pins
+        the uncontested density: its staged per-write merge overlay
+        assumes index inserts succeed, so a saturated index (overflow
+        region exhausted) is outside its documented contract."""
+        if variant == "clover":
+            num_buckets = 1 << 12
+        a, b = build_pair(variant, seed % 5, 1 << cache_pow,
+                          num_buckets=num_buckets,
+                          merge_allowance=allowance)
         kinds, keys = mixed_ops(seed, 4000, 3000, mix)
         apply_scalar(a, kinds, keys)
         b.execute_batch(kinds, keys, values=lambda i: f"w{i}")
@@ -375,6 +395,38 @@ class TestWritePlaneEquivalence:
         assert a.pool.indirect == b.pool.indirect
         # coverage: the batch actually exercised replicated ops
         assert np.isin(keys, np.array(hot)).any()
+
+    def test_linearizable_batched_with_stall_merges(self):
+        """Linearizability over a batched put/get/update run with
+        interleaved stall merges (tiny segments force rotations + stall
+        merges inside the batch, all routed through the planned merge
+        plane): collected read results must admit a legal sequential
+        order per key.  Deletes are excluded: tombstone visibility is
+        merge-deferred by design (the KN drops its soft state but the
+        index keeps the key until the DPM processor merges the
+        tombstone), identically on both planes."""
+        from repro.core.linearizability import Op, check_history
+        c = DinomoCluster(VARIANTS["dinomo"], num_kns=4,
+                          cache_bytes=1 << 19, value_bytes=1024,
+                          num_buckets=1 << 12, segment_capacity=24,
+                          seed=3)
+        c.load(((k, f"v{k}") for k in range(2000)), warm=True)
+        kinds, keys = mixed_ops(11, 2000, 1500, "write_heavy_update",
+                                delete_frac=0.0)
+        res = c.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                              collect_values=True)
+        assert sum(kn.stats.write_stalls
+                   for kn in c.kns.values()) > 0    # merges interleaved
+        ops = []
+        for i, (kd, k) in enumerate(zip(kinds.tolist(), keys.tolist())):
+            t = float(i)
+            if kd == 0:
+                ops.append(Op("read", k, res.values[i], t, t + 0.5))
+            else:
+                ops.append(Op("write", k, f"w{i}", t, t + 0.5))
+        verdicts = check_history(
+            ops, initial=lambda k: f"v{k}" if k < 2000 else None)
+        assert verdicts and all(verdicts.values())
 
     @given(st.integers(0, 10**6))
     @settings(max_examples=5, deadline=None)
