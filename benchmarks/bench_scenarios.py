@@ -1,0 +1,103 @@
+"""Production-traffic scenario bench: churn, storms, crashes, composed.
+
+Runs ``repro.core.scenarios.run_suite`` (the ISSUE 6 harness) over the
+paper's headline variants and emits ``BENCH_scenarios.json`` next to
+this file: one SLO row per (scenario, variant) with the recovery
+window, the minimum delivery-ratio fraction during recovery,
+zero-throughput epochs, membership/replication churn, injected network
+faults, and the integrity-violation list (empty for a healthy variant).
+
+The rows double as acceptance gates (asserted here and in CI):
+  * every row reports zero violations (ring intact, cluster alive,
+    pool integrity clean -- including after a mid-batch crash plus
+    ``DPMPool.recover_kn``);
+  * DINOMO's crash rows show sub-second recovery windows and no
+    zero-throughput epochs, while shared-nothing (dinomo-n) pays a
+    reorganization outage orders of magnitude wider -- the Fig. 8
+    contrast, now measured under composed production traffic.
+
+Usage:  PYTHONPATH=src python -m benchmarks.bench_scenarios [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+from repro.core.scenarios import (BENCH_VARIANTS, SCENARIOS,
+                                  ScenarioConfig, run_suite)
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "BENCH_scenarios.json")
+
+
+def check_slos(results) -> list[str]:
+    """The acceptance gates; returns human-readable failures."""
+    bad = []
+    for r in results:
+        if r.violations:
+            bad.append(f"{r.scenario}/{r.variant}: {r.violations}")
+        if r.scenario in ("crash", "composed") and r.variant == "dinomo":
+            if r.recovery_window_s is None or r.recovery_window_s >= 1.0:
+                bad.append(f"{r.scenario}/dinomo: recovery window "
+                           f"{r.recovery_window_s} not sub-second")
+            if r.zero_tput_epochs != 0:
+                bad.append(f"{r.scenario}/dinomo: {r.zero_tput_epochs} "
+                           f"zero-throughput epochs")
+    crash = {r.variant: r for r in results if r.scenario == "crash"}
+    if "dinomo" in crash and "dinomo-n" in crash:
+        d, n = crash["dinomo"], crash["dinomo-n"]
+        if not (n.recovery_window_s or 0) > 5 * (d.recovery_window_s or 1):
+            bad.append("crash: dinomo-n window not >5x dinomo's")
+    return bad
+
+
+def main(smoke: bool = False, seed: int = 0):
+    cfg = ScenarioConfig.smoke() if smoke else ScenarioConfig()
+    t0 = time.time()
+    results = run_suite(seed=seed, smoke=smoke)
+    wall = time.time() - t0
+    failures = check_slos(results)
+
+    payload = {
+        "profile": "smoke" if smoke else "full",
+        "seed": seed,
+        "config": dataclasses.asdict(cfg),
+        "wall_s": round(wall, 2),
+        "rows": [r.row() for r in results],
+        "slo_failures": failures,
+    }
+    with open(OUT, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    for r in results:
+        w = "-" if r.recovery_window_s is None \
+            else f"{r.recovery_window_s * 1e3:.0f}ms"
+        f_ = "-" if r.min_tput_during_frac is None \
+            else f"{r.min_tput_during_frac:.2f}"
+        print(f"{r.scenario:9s} {r.variant:9s} window={w:>8s} "
+              f"minfrac={f_:>5s} zero={r.zero_tput_epochs:<3d} "
+              f"members={r.membership_changes:<2d} "
+              f"repl={r.replication_actions:<2d} "
+              f"drops={r.flush_rts_dropped:<3d} viol={len(r.violations)}")
+    print(f"wrote {OUT} ({len(results)} rows, {wall:.1f}s)")
+    if failures:
+        raise SystemExit("SLO failures:\n  " + "\n  ".join(failures))
+
+    n_crash = sum(1 for r in results if r.scenario in ("crash", "composed"))
+    us = wall / max(len(results), 1) * 1e6
+    derived = (f"rows={len(results)} crash_rows={n_crash} "
+               f"violations=0 profile={payload['profile']}")
+    return us, derived
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI profile: small keyspace, 40s horizon")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(smoke=args.smoke, seed=args.seed)

@@ -62,6 +62,11 @@ def bench_roofline(fast):
     return main()
 
 
+def bench_scenarios(fast):
+    from .bench_scenarios import main
+    return main(smoke=fast)
+
+
 BENCHES = [
     ("fig3_cache_policies", bench_fig3),
     ("tab5_rts_per_op", bench_tab5),
@@ -71,6 +76,7 @@ BENCHES = [
     ("fig6_elasticity", bench_fig6),
     ("fig7_load_balancing", bench_fig7),
     ("fig8_fault_tolerance", bench_fig8),
+    ("scenarios", bench_scenarios),
     ("roofline", bench_roofline),
 ]
 

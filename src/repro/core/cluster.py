@@ -26,6 +26,7 @@ import numpy as np
 from .dac import (ArrayDAC, ArrayStaticCache, DAC, StaticCache,
                   CacheStats, CNT_HIST_MAX)
 from .dpm_pool import DPMPool
+from .faults import KNCrash
 from .log import PySegment
 from .mnode import PolicyConfig, PolicyEngine
 from .netmodel import NetModel, DEFAULT_MODEL
@@ -286,10 +287,15 @@ class KVSNode:
             self.segcache.popitem(last=False)
 
     def flush_rts(self) -> float:
-        """Amortized one-sided log-write cost: one RT per batch."""
+        """Amortized one-sided log-write cost: one RT per batch.  A
+        dropped flush ack (FaultPlane network fault) costs one retry
+        RT on top."""
         self._pending_flush += 1
         if self._pending_flush >= self.write_batch:
             self._pending_flush = 0
+            fp = self.pool.faults
+            if fp is not None and fp.drop_flush_rt():
+                return 2.0
             return 1.0
         return 0.0
 
@@ -377,8 +383,15 @@ class DinomoCluster:
         for p in participants:
             self.kns[p].available = False                 # step 2
         merged = 0
+        recovery = None
         if failed is not None:
-            merged += self.pool.merge_all(failed)         # peer merges
+            # crash-consistent recovery by a peer (paper Sec. 3.6): the
+            # failed KN's segments are recovered -- torn tails
+            # discarded, sealed-but-unmerged entries replayed, dangling
+            # indirection repaired -- not just merged; a crash can leave
+            # state merge_all would mis-account (see DPMPool.recover_kn)
+            recovery = self.pool.recover_kn(failed)
+            merged += recovery["replayed"]
             self.pool.drop_kn(failed)
         for p in participants:
             merged += self.pool.merge_all(p)              # step 3
@@ -397,6 +410,8 @@ class DinomoCluster:
                "merged_entries": merged,
                "moved_fraction": moved_fraction,
                "version": ev.new_version}
+        if recovery is not None:
+            rec["recovery"] = recovery
         self.reconfig_log.append(rec)
         return rec
 
@@ -813,7 +828,18 @@ class DinomoCluster:
             sel = np.nonzero(wkn == j)[0]
             m = sel.size
             seq = np.arange(1, m + 1)
-            rts[sel] = ((kn._pending_flush + seq) % kn.write_batch == 0)
+            flags = (kn._pending_flush + seq) % kn.write_batch == 0
+            r = flags.astype(np.float64)
+            fp = pool.faults
+            if fp is not None and fp.drop_flush_rt_rate > 0.0:
+                # dropped flush acks: one retry RT per dropped flush
+                # (draw order is per-KN here vs per-op in the scalar
+                # loop, so fault runs are not bit-equivalent -- rate 0
+                # consumes no randomness and stays exact)
+                nf = int(flags.sum())
+                if nf:
+                    r[flags] += fp.drop_flush_mask(nf)
+            rts[sel] = r
             kn._pending_flush = (kn._pending_flush + m) % kn.write_batch
             logical = np.where(wdel[sel], -wkeys[sel] - 1, wkeys[sel])
             pl = ptrs[sel].tolist()
@@ -879,12 +905,29 @@ class DinomoCluster:
         if segq is None or k >= len(segq):
             return
         seg, lo, hi = segq[k]
+        fp = pool.faults
+        if fp is not None and fp.armed and hi > lo:
+            j = fp.take_crash("log.pre_seal", nm, hi - lo)
+            if j is not None:
+                # j staged entries of this fill sealed; the (j+1)-th
+                # landed torn (its seal byte never made it to DPM)
+                lk, pl = plan.staged[nm]
+                seg.entries.extend(zip(lk[lo:lo + j + 1],
+                                       pl[lo:lo + j + 1]))
+                seg.sealed.extend([True] * j + [False])
+                seg.valid += j + 1
+                raise KNCrash(nm, "log.pre_seal")
         if not final:
             lk, pl = plan.staged[nm]
             seg.entries.extend(zip(lk[lo:hi], pl[lo:hi]))
             seg.sealed.extend([True] * (hi - lo))
             seg.valid += hi - lo
             plan.rot_done[nm] = k + 1
+            if fp is not None and fp.armed and \
+                    fp.take_crash("log.rotation", nm, 1) is not None:
+                # the filled segment sealed but was never published to
+                # the shared merge backlog; recovery must rediscover it
+                raise KNCrash(nm, "log.rotation")
             pool.merge_backlog.append((seg, 0))
             nxt = segq[k + 1][0] if k + 1 < len(segq) \
                 else PySegment(pool.segment_capacity, nm)

@@ -23,6 +23,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .clht import NumpyCLHT
+from .faults import KNCrash
 from .log import PySegment
 from .transition import (MERGE_PLAN_STATS, MIN_MERGE_PLAN_OPS,
                          plan_merge_window)
@@ -72,6 +73,10 @@ class DPMPool:
         # durable policy metadata (ownership map snapshots, Sec. 3.5)
         self.policy_metadata: dict = {}
         self.gc = GCStats()
+        # optional fault-injection plane (faults.FaultPlane); when armed,
+        # the write/merge paths below raise KNCrash at named crash
+        # points, leaving exactly the torn state a fail-stop would
+        self.faults = None
 
     # ----- value heap --------------------------------------------------------
     def alloc_value(self, value, length: int,
@@ -134,16 +139,33 @@ class DPMPool:
         cap = self.segment_capacity
         rotated: list[PySegment] = []
         hs = self.heap_seg
+        fp = self.faults
         i, n = 0, len(keys)
         while i < n:
             if len(seg.entries) >= cap:
                 # defensively rotate a full active segment (log_write
                 # never leaves one, but a caller could)
+                if fp is not None and \
+                        fp.take_crash("log.rotation", kn, 1) is not None:
+                    raise KNCrash(kn, "log.rotation")
                 rotated.append(seg)
                 seg = PySegment(cap, kn)
                 segs.append(seg)
                 self.gc.segments_created += 1
             take = min(cap - len(seg.entries), n - i)
+            if fp is not None:
+                j = fp.take_crash("log.pre_seal", kn, take)
+                if j is not None:
+                    # j entries of this run sealed; the (j+1)-th landed
+                    # torn (value bytes written, seal byte lost)
+                    ki = keys[i:i + j + 1]
+                    pi = ptrs[i:i + j + 1]
+                    seg.entries.extend(zip(ki, pi))
+                    seg.sealed.extend([True] * j + [False])
+                    seg.valid += j + 1
+                    for p in pi:
+                        hs[p] = seg
+                    raise KNCrash(kn, "log.pre_seal")
             ki = keys[i:i + take]
             pi = ptrs[i:i + take]
             seg.entries.extend(zip(ki, pi))
@@ -153,6 +175,14 @@ class DPMPool:
                 hs[p] = seg
             i += take
             if len(seg.entries) >= cap:
+                # crash at the rotation boundary: the segment is full
+                # and fully sealed but was never published to the shared
+                # merge backlog (the caller enqueues rotations after
+                # this returns) -- recovery must rediscover it by
+                # scanning the KN's segments
+                if fp is not None and \
+                        fp.take_crash("log.rotation", kn, 1) is not None:
+                    raise KNCrash(kn, "log.rotation")
                 rotated.append(seg)
                 seg = PySegment(cap, kn)
                 segs.append(seg)
@@ -178,10 +208,19 @@ class DPMPool:
         and was queued for async merge -- the KN must block if its
         un-merged backlog now exceeds the threshold (paper Sec. 4)."""
         seg = self.active_segment(kn)
+        fp = self.faults
+        if fp is not None and sealed and \
+                fp.take_crash("log.pre_seal", kn, 1) is not None:
+            ptr = self.alloc_value(value, length, seg)
+            seg.append(key, ptr, sealed=False)     # seal byte never landed
+            raise KNCrash(kn, "log.pre_seal")
         ptr = self.alloc_value(value, length, seg)
         seg.append(key, ptr, sealed=sealed)
         rotated = False
         if seg.full():
+            if fp is not None and \
+                    fp.take_crash("log.rotation", kn, 1) is not None:
+                raise KNCrash(kn, "log.rotation")  # never published
             self.merge_backlog.append((seg, 0))
             self.segments[kn].append(PySegment(self.segment_capacity, kn))
             self.gc.segments_created += 1
@@ -283,6 +322,22 @@ class DPMPool:
         if max_ops is not None and max_ops < n:
             n = max_ops
             entries = entries[:n]
+        fp = self.faults
+        if fp is not None and fp.armed and n:
+            kn = seg.kn
+            j = fp.take_crash("merge.mid_apply", kn, n)
+            if j is not None:
+                # a prefix of the window reached the index; the merge
+                # cursor (the caller's merged_upto advance) never did
+                for key, ptr in entries[:j]:
+                    self._merge_entry(key, ptr, seg)
+                raise KNCrash(kn, "merge.mid_apply")
+            if fp.take_crash("merge.post_apply", kn, 1) is not None:
+                # the whole window applied; cursor/allowance accounting
+                # never ran, so recovery will replay these entries
+                for key, ptr in entries:
+                    self._merge_entry(key, ptr, seg)
+                raise KNCrash(kn, "merge.post_apply")
         if not self.vectorized or n < MIN_MERGE_PLAN_OPS:
             for key, ptr in entries:
                 self._merge_entry(key, ptr, seg)
@@ -386,6 +441,204 @@ class DPMPool:
             self.gc.segments_collected += 1
             seg.entries.clear()
             seg.sealed.clear()
+
+    # ----- crash recovery (paper Sec. 3.6) ------------------------------------
+    def recover_kn(self, kn: str) -> dict:
+        """Crash-consistent recovery of one KN's DPM state.  The KN
+        fail-stopped at an arbitrary point; its segments survive in PM
+        but nothing else can be trusted:
+
+          1. discard unsealed segment tails -- a torn entry invalidates
+             itself and everything after it, because merge order must
+             match request order (``PySegment.recover_torn``, the same
+             semantics as the JAX plane's ``log.recover_segment``);
+          2. replay every sealed-but-unmerged entry, oldest first,
+             through the planned merge path.  Replay is idempotent on
+             the index: re-inserting a (key, ptr) it already holds
+             supersedes nothing, re-deleting a tombstoned key finds
+             nothing.  This also rediscovers full segments a crash at
+             the rotation boundary never published to the backlog;
+          3. purge the KN's segments from the shared merge backlog (the
+             replay just consumed them; a later merge_budget must not
+             touch a dead KN's log);
+          4. repair indirection slots left dangling by a CAS that raced
+             a torn entry: rewind to the key's latest live sealed log
+             entry -- heap pointers are allocated in global write order,
+             so 'latest' is the maximum live pointer;
+          5. recompute per-segment GC accounting from ground truth.
+             Replay may double-count tombstones (the crash may have
+             applied them once already without advancing the cursor), so
+             the counters are recomputed, never trusted; dead segments
+             then collect.
+
+        The recovered pool is property-tested equal to a reference pool
+        that replayed only acknowledged (sealed-before-crash) ops.
+        Returns a recovery record with per-phase entry counts."""
+        # recovery runs on a surviving peer: armed crash points for the
+        # dead KN must not fire inside the recovery replay itself
+        fp, self.faults = self.faults, None
+        try:
+            segs = list(self.segments.get(kn, ()))
+            discarded = 0
+            for seg in segs:
+                for _key, ptr in seg.recover_torn():
+                    # the torn entries' value bytes are garbage rows now
+                    self.heap_val[ptr] = None
+                    self.heap_seg[ptr] = None
+                    discarded += 1
+            replayed = 0
+            for seg in segs:
+                todo = self._replay_screen(seg)
+                if todo:
+                    self.merge_entries_batch(todo, seg)
+                    replayed += len(todo)
+                seg.merged_upto = len(seg.entries)
+            if any(seg.kn == kn for seg, _ in self.merge_backlog):
+                self.merge_backlog = deque(
+                    item for item in self.merge_backlog
+                    if item[0].kn != kn)
+            repaired = self._repair_indirect()
+            for seg in segs:
+                seg.valid = self._recount_valid(seg)
+                self._maybe_collect(seg)
+            return {"kn": kn, "discarded": discarded, "replayed": replayed,
+                    "repaired_indirect": repaired}
+        finally:
+            self.faults = fp
+
+    def _replay_screen(self, seg: PySegment) -> list[tuple[int, int]]:
+        """The recovery replay's idempotence screen.  A crashed merge
+        window may have applied a prefix without advancing the cursor,
+        so blind replay could *rewind* the index: re-inserting a key's
+        older pointer after its newer one already merged would supersede
+        the newer value.  Heap pointers are allocated in global write
+        order, so the screen is monotone: replay an entry only if the
+        index does not already hold its key with an equal-or-newer
+        pointer.  (A key absent because its applied entry was followed
+        by an applied tombstone replays both -- the pair converges to
+        absent again.)  Replicated keys pass through: merging them is a
+        no-op by construction (the indirection slot is authoritative)."""
+        todo = []
+        for key, ptr in seg.entries[seg.merged_upto:]:
+            real = -key - 1 if key < 0 else key
+            if real in self.indirect:
+                todo.append((key, ptr))
+                continue
+            cur, _ = self.index.lookup(real)
+            if cur is not None and cur >= ptr:
+                continue        # this write (or a newer one) already merged
+            todo.append((key, ptr))
+        return todo
+
+    def _recount_valid(self, seg: PySegment) -> int:
+        """Ground-truth valid count: a normal entry is live while its
+        heap value is, a tombstone is live until merged (its only job is
+        to reach the index)."""
+        hv = self.heap_val
+        valid = 0
+        for i, (key, ptr) in enumerate(seg.entries):
+            if key < 0:
+                valid += i >= seg.merged_upto
+            else:
+                valid += hv[ptr] is not None
+        return valid
+
+    def _repair_indirect(self) -> int:
+        """Rewind indirection slots whose target heap row is dead (a CAS
+        that raced a torn entry): scan the surviving segments for the
+        key's latest live sealed entry (max pointer == newest write).  A
+        key with no live entry anywhere lost every acked value's trail
+        -- impossible for a single crash, but recovery trusts nothing:
+        the slot and index entry drop so reads observe absence rather
+        than garbage."""
+        nheap = len(self.heap_val)
+        broken = [key for key, ptr in self.indirect.items()
+                  if not 0 <= ptr < nheap or self.heap_val[ptr] is None]
+        for key in broken:
+            best = -1
+            for segs in self.segments.values():
+                for seg in segs:
+                    for (k, p), s in zip(seg.entries, seg.sealed):
+                        if s and k == key and p > best and \
+                                self.heap_val[p] is not None:
+                            best = p
+            if best >= 0:
+                self.indirect[key] = best
+            else:
+                del self.indirect[key]
+                self.index.delete(key)
+            self._indirect_version += 1
+        return len(broken)
+
+    def verify_integrity(self) -> list[str]:
+        """Crash-consistency invariant checker (the recovery property
+        tests' acceptance gate and the scenario harness's post-crash
+        SLO).  Returns human-readable violations, [] when healthy:
+
+          * seal patterns are prefixes (a torn entry taints its tail),
+          * merge cursors stay within the sealed prefix,
+          * live index entries point at live heap rows (replicated keys
+            resolve through the indirection table instead -- their
+            direct index pointers dangle by design after the first CAS),
+          * indirection slots point at live heap rows,
+          * per-segment GC accounting matches a ground-truth recount.
+        """
+        problems: list[str] = []
+        nheap = len(self.heap_val)
+        heap_live = np.fromiter((v is not None for v in self.heap_val),
+                                dtype=bool, count=nheap)
+        for kn, segs in self.segments.items():
+            for si, seg in enumerate(segs):
+                if not seg.entries:
+                    continue        # fresh or collected (entries cleared)
+                try:
+                    cut = seg.sealed.index(False)
+                except ValueError:
+                    cut = len(seg.sealed)
+                if any(seg.sealed[cut:]):
+                    problems.append(f"{kn}/seg{si}: sealed entry after "
+                                    f"a torn one (non-prefix seal)")
+                if seg.merged_upto > cut:
+                    problems.append(f"{kn}/seg{si}: merge cursor "
+                                    f"{seg.merged_upto} past sealed "
+                                    f"prefix {cut}")
+                want = self._recount_valid(seg)
+                if seg.valid != want:
+                    problems.append(f"{kn}/seg{si}: valid counter "
+                                    f"{seg.valid} != recount {want}")
+        keys = self.index.keys.ravel()
+        ptrs = self.index.ptrs.ravel()
+        live = keys >= 0
+        keys, ptrs = keys[live], ptrs[live]
+        if keys.size:
+            if self.indirect:
+                direct = ~np.isin(keys, self._indirect_keys_array())
+            else:
+                direct = np.ones(keys.shape, dtype=bool)
+            bad_range = direct & ((ptrs < 0) | (ptrs >= nheap))
+            for k in keys[bad_range][:8].tolist():
+                problems.append(f"index key {k}: pointer out of range")
+            ok = direct & ~bad_range
+            dead = np.zeros(keys.shape, dtype=bool)
+            dead[ok] = ~heap_live[ptrs[ok]]
+            for k, p in zip(keys[dead][:8].tolist(),
+                            ptrs[dead][:8].tolist()):
+                problems.append(f"index key {k}: dead value row {p}")
+        torn_ptrs = set()
+        for segs in self.segments.values():
+            for seg in segs:
+                if False in seg.sealed:
+                    cut = seg.sealed.index(False)
+                    torn_ptrs.update(p for _k, p in seg.entries[cut:])
+        for key, ptr in self.indirect.items():
+            if not 0 <= ptr < nheap or self.heap_val[ptr] is None:
+                problems.append(f"indirect key {key}: dead target {ptr}")
+            elif ptr in torn_ptrs:
+                # a CAS raced a torn entry: readers would observe
+                # unsealed bytes through the slot
+                problems.append(f"indirect key {key}: unsealed target "
+                                f"{ptr}")
+        return problems
 
     # ----- index reads (one-sided) --------------------------------------------
     def index_lookup(self, key: int):

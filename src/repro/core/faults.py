@@ -1,0 +1,218 @@
+"""Fault-injection plane: KN crashes at named crash points + network faults.
+
+The paper's fault model (Sec. 3.6) is fail-stop KNs over a durable DPM
+pool: a crash loses the KN's DRAM soft state while its log segments
+survive in PM -- but only entries whose seal byte landed are
+crash-atomic.  A torn entry invalidates itself and everything after it,
+because merge order must match request order.  The atomic
+crash-consistent DPM store and CIDER's contested-key synchronization
+(PAPERS.md) name the failure modes worth forcing; this module forces
+them *deterministically* so every run is replayable from a seed.
+
+Crash points (threaded through the staged write plane in dpm_pool.py and
+cluster.py; units say what an armed countdown counts):
+
+  log.pre_seal      [entries]  value bytes written, seal byte not yet:
+                    the current entry lands torn, nothing after it lands
+  log.rotation      [events]   a segment filled and sealed, crash before
+                    it is published to the shared merge backlog --
+                    recovery must rediscover it by scanning the KN's
+                    segments, not the backlog
+  merge.mid_apply   [entries]  crash partway through a merge window: a
+                    prefix reached the index, the merge cursor
+                    (merged_upto) never advanced
+  merge.post_apply  [events]   the whole window applied, crash before
+                    the merge cursor / allowance accounting advanced --
+                    recovery replays the window, so tombstone GC
+                    accounting must be recomputed, never trusted
+  rep.post_cas      (forced only)  a replicated write's CAS swung the
+                    indirection slot to a not-yet-sealed log entry and
+                    the KN died before the seal and the superseded-
+                    pointer GC landed (the one-sided CAS and the seal
+                    write are separate verbs -- nothing orders them)
+
+Network faults (consumed by the scenario harness):
+
+  dropped flush RTs   a one-sided log-flush ack is lost; the KN retries,
+                      costing one extra RT per drop
+  delayed heartbeats  failure detection takes longer than the calibrated
+                      ``NetModel.detect_s``
+
+Two injection mechanisms share these definitions: *armed* crashes
+(``arm_crash`` + the ``take_crash`` hooks inside the write/merge paths
+raise :class:`KNCrash` mid-operation -- the property tests' exact
+mechanism) and *forced* crashes (``force_crash`` corrupts a pool's state
+the way the named crash point would -- the scenario harness's mechanism
+when an armed point does not fire inside the observed step).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+CRASH_POINTS = ("log.pre_seal", "log.rotation", "merge.mid_apply",
+                "merge.post_apply", "rep.post_cas")
+# points the take_crash hooks can fire mid-operation (rep.post_cas is
+# only ever forced: the CAS race needs state the hooks don't see)
+ARMABLE_POINTS = CRASH_POINTS[:4]
+
+
+class KNCrash(Exception):
+    """A KN (or the DPM processor working its segment) fail-stopped at a
+    named crash point.  State behind the crash point is durable; state
+    past it never happened."""
+
+    def __init__(self, kn: str, point: str):
+        super().__init__(f"KN {kn!r} crashed at {point}")
+        self.kn = kn
+        self.point = point
+
+
+@dataclass
+class CrashSpec:
+    point: str
+    kn: str | None          # None matches any KN
+    after: int              # units to let pass before the crash fires
+
+
+class FaultPlane:
+    """Deterministic fault injector.
+
+    Attach to a pool (``pool.faults = plane``) to arm crash points, and
+    to a :class:`~repro.core.simulate.TimedSimulation` to perturb
+    failure detection.  All randomness comes from the seeded generator,
+    so a (seed, workload) pair replays the same faults."""
+
+    def __init__(self, seed: int = 0, drop_flush_rt_rate: float = 0.0,
+                 heartbeat_delay_s: float = 0.0,
+                 heartbeat_jitter_s: float = 0.0):
+        self.rng = np.random.default_rng(seed)
+        self.drop_flush_rt_rate = drop_flush_rt_rate
+        self.heartbeat_delay_s = heartbeat_delay_s
+        self.heartbeat_jitter_s = heartbeat_jitter_s
+        self._armed: list[CrashSpec] = []
+        self.crash_log: list[dict] = []
+        self.flush_rts_dropped = 0
+
+    # ----- armed crashes (raise KNCrash inside the guarded paths) ---------
+    def arm_crash(self, point: str, kn: str | None = None,
+                  after: int = 0) -> CrashSpec:
+        if point not in ARMABLE_POINTS:
+            raise ValueError(f"cannot arm {point!r}; armable points: "
+                             f"{ARMABLE_POINTS}")
+        spec = CrashSpec(point, kn, max(int(after), 0))
+        self._armed.append(spec)
+        return spec
+
+    def disarm(self) -> None:
+        self._armed.clear()
+
+    @property
+    def armed(self) -> bool:
+        return bool(self._armed)
+
+    def take_crash(self, point: str, kn: str | None, n: int) -> int | None:
+        """Called by a guarded path about to process ``n`` units of
+        ``point``-flavored work for ``kn``.  Returns None (no crash in
+        this run) or the offset ``j < n`` at which the crash fires; the
+        caller performs j units, leaves the crash point's torn state,
+        and raises :class:`KNCrash`.  The fired spec disarms itself."""
+        for spec in self._armed:
+            if spec.point != point:
+                continue
+            if spec.kn is not None and kn is not None and spec.kn != kn:
+                continue
+            if spec.after >= n:
+                spec.after -= n
+                return None
+            j = spec.after
+            self._armed.remove(spec)
+            self.crash_log.append({"point": point, "kn": kn,
+                                   "offset": j, "forced": False})
+            return j
+        return None
+
+    # ----- forced crashes (corrupt pool state directly) --------------------
+    def force_crash(self, pool, kn: str, point: str,
+                    torn: int = 2) -> dict:
+        """Impose the state a crash of ``kn`` at ``point`` would leave on
+        ``pool`` (a :class:`~repro.core.dpm_pool.DPMPool`).  Used by the
+        scenario harness when the armed crash point did not fire inside
+        the observed step (e.g. the victim never rotated a segment), and
+        by targeted tests.  Returns a record of the corruption actually
+        applied -- some points degrade to "nothing to corrupt" when the
+        KN has no matching state (a KN with an empty log has nothing to
+        tear)."""
+        if point not in CRASH_POINTS:
+            raise ValueError(f"unknown crash point {point!r}")
+        segs = pool.segments.get(kn, [])
+        rec = {"point": point, "kn": kn, "forced": True, "effect": "none"}
+        if point == "log.pre_seal":
+            for seg in reversed(segs):
+                cut = max(len(seg.entries) - torn, seg.merged_upto)
+                if cut < len(seg.entries):
+                    for i in range(cut, len(seg.entries)):
+                        seg.sealed[i] = False
+                    rec["effect"] = f"tore {len(seg.entries) - cut} entries"
+                    break
+        elif point == "log.rotation":
+            # un-publish one of the KN's sealed backlog segments
+            for i, (seg, d) in enumerate(pool.merge_backlog):
+                if seg.kn == kn and seg.merged_upto < len(seg.entries):
+                    del pool.merge_backlog[i]
+                    rec["effect"] = (f"unpublished segment with "
+                                     f"{len(seg.entries)} entries")
+                    break
+        elif point in ("merge.mid_apply", "merge.post_apply"):
+            for seg in segs:
+                entries = seg.sealed_entries()
+                todo = entries[seg.merged_upto:]
+                if not todo:
+                    continue
+                j = len(todo) if point == "merge.post_apply" \
+                    else max(len(todo) // 2, 1)
+                for key, ptr in todo[:j]:
+                    pool._merge_entry(key, ptr, seg)
+                # the crash: merged_upto / accounting never advanced
+                rec["effect"] = f"applied {j}/{len(todo)} without cursor"
+                break
+        elif point == "rep.post_cas":
+            key = next(iter(pool.indirect), None)
+            if key is not None and segs and not segs[-1].full():
+                seg = segs[-1]
+                ptr = pool.alloc_value(f"torn@{key}", 0, seg)
+                seg.append(key, ptr, sealed=False)
+                # CAS landed, seal + superseded-pointer GC never did
+                pool.indirect[key] = ptr
+                pool._indirect_version += 1
+                rec["effect"] = f"dangling CAS for key {key} -> {ptr}"
+        self.crash_log.append(rec)
+        return rec
+
+    # ----- network faults ---------------------------------------------------
+    def drop_flush_rt(self) -> bool:
+        """One flush-ack bernoulli draw (scalar write path).  Zero rate
+        consumes no randomness, keeping fault-free runs bit-identical."""
+        if self.drop_flush_rt_rate <= 0.0:
+            return False
+        hit = bool(self.rng.random() < self.drop_flush_rt_rate)
+        self.flush_rts_dropped += hit
+        return hit
+
+    def drop_flush_mask(self, n: int) -> np.ndarray:
+        """Retry-RT increments per flush event for a staged batch of
+        ``n`` flush events (float 0/1 per event)."""
+        if self.drop_flush_rt_rate <= 0.0:
+            return np.zeros(n, np.float64)
+        m = (self.rng.random(n) < self.drop_flush_rt_rate)
+        self.flush_rts_dropped += int(m.sum())
+        return m.astype(np.float64)
+
+    def heartbeat_delay(self) -> float:
+        """Extra failure-detection latency beyond ``NetModel.detect_s``."""
+        d = self.heartbeat_delay_s
+        if self.heartbeat_jitter_s > 0.0:
+            d += float(self.rng.random()) * self.heartbeat_jitter_s
+        return d

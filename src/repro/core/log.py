@@ -173,3 +173,22 @@ class PySegment:
                 break
             out.append((k, p))
         return out
+
+    def recover_torn(self) -> list[tuple[int, int]]:
+        """Crash recovery: truncate to the longest sealed prefix,
+        exactly ``recover_segment``'s semantics on the JAX plane (a torn
+        entry invalidates itself and everything after it; the merge
+        cursor rewinds if it had run past the prefix -- it cannot in
+        healthy operation, but recovery trusts nothing). Returns the
+        discarded (key, ptr) entries so the pool can null their heap
+        rows."""
+        if False not in self.sealed:
+            return []
+        cut = self.sealed.index(False)
+        dropped = self.entries[cut:]
+        del self.entries[cut:]
+        del self.sealed[cut:]
+        self.valid -= len(dropped)
+        if self.merged_upto > cut:
+            self.merged_upto = cut
+        return dropped

@@ -54,6 +54,9 @@ class PolicyEngine:
     def __init__(self, cfg: PolicyConfig):
         self.cfg = cfg
         self._last_membership_change = -math.inf
+        # (epoch time, action kind) per decision -- the scenario
+        # harness's churn/storm accounting
+        self.decision_log: list[tuple[float, str]] = []
 
     def slo_violated(self, s: EpochStats) -> bool:
         return (s.avg_latency > self.cfg.avg_latency_slo
@@ -104,6 +107,7 @@ class PolicyEngine:
                 for k, r in s.replication.items():
                     if r > 1 and k in cold:
                         actions.append(Action("dereplicate", key=k))
+        self.decision_log.extend((s.now, a.kind) for a in actions)
         return actions
 
     def note_failure(self, now: float) -> None:

@@ -41,6 +41,14 @@ class NetModel:
     # (read + rewrite + index rebuild; calibrated to the paper's ~11 s
     # for 1/16th of a 32 GB dataset)
     reorg_bw: float = 190e6
+    # ---- failure / reconfiguration timing (Figs. 6-8) ---------------------
+    # heartbeat-miss failure detection at the M-node (paper Sec. 3.6)
+    detect_s: float = 0.04
+    # ownership-handoff metadata publish after a reconfiguration merge
+    # (new owners fetch the map + start serving)
+    handoff_s: float = 0.05
+    # Clover: all clients refresh metadata-server membership on failure
+    clover_refresh_s: float = 0.068
 
     # ---- throughput model -------------------------------------------------
     def op_net_bytes(self, rts_per_op: float, value_bytes: int,

@@ -1,0 +1,340 @@
+"""Production-traffic scenario harness: churn, storms, crashes.
+
+Figures 6-8 each reproduce one clean event -- a single scale-out, a
+single hot-key storm, a single failure.  Production traffic composes
+them: the autoscaler churns membership while a flash crowd concentrates
+load and a KN dies mid-batch.  This harness runs those compositions
+against the real data structures with the fault plane armed, and turns
+the paper's robustness claims into SLO rows:
+
+  churn     an oscillating offered load drives the PolicyEngine through
+            continuous join/leave churn; the ring must never empty,
+            every reconfiguration stays bounded, integrity holds at the
+            end of the run.
+  storm     a flash crowd redirects a fraction of traffic onto a
+            handful of hot keys mid-run, stressing selective
+            replication and the Eq. 1 screen; throughput must not
+            collapse onto the hot keys' owner.
+  crash     a KN fail-stops at a named (seeded) crash point under
+            write-heavy load -- armed mid-batch when the point fires
+            inside the observed step, forced otherwise -- and the
+            recovery plane (DPMPool.recover_kn) repairs the pool;
+            downtime is measured as an SLO: recovery window,
+            minimum-throughput fraction during recovery, and
+            zero-throughput epochs.
+  composed  all of the above at once: churn plus a storm window plus a
+            crash at the storm's peak.
+
+``violations`` in a result row collects integrity failures
+(DPMPool.verify_integrity), an emptied ring, or a dead cluster at the
+end of a run -- a healthy variant reports zero.  Network faults
+(dropped flush RTs, delayed heartbeats) ride along on every scenario
+via the seeded FaultPlane, so the SLOs are measured under realistic
+noise, not lab silence.
+
+Run one scenario:  ``run_scenario("composed", "dinomo", seed=0)``
+Emit the bench:    ``python -m benchmarks.bench_scenarios [--smoke]``
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .cluster import DinomoCluster, VARIANTS
+from .faults import ARMABLE_POINTS, CRASH_POINTS, FaultPlane, KNCrash
+from .mnode import PolicyConfig
+from .netmodel import DEFAULT_MODEL, NetModel
+from .simulate import TimedSimulation
+from ..data.ycsb import Workload
+
+SCENARIOS = ("churn", "storm", "crash", "composed")
+BENCH_VARIANTS = ("dinomo", "dinomo-n", "clover")
+
+
+@dataclass
+class ScenarioConfig:
+    """Knobs for one scenario run; ``smoke()`` is the CI profile."""
+    num_kns: int = 4
+    num_keys: int = 20_000
+    cache_bytes: int = 1 << 19
+    value_bytes: int = 1024
+    num_buckets: int = 1 << 14
+    segment_capacity: int = 256
+    sample_ops: int = 2000
+    dt: float = 1.0
+    duration_s: float = 120.0
+    dataset_bytes: float = 32e9          # represented scale (paper Sec. 5)
+    # load shape: base_load sits inside the policy's stable band for
+    # the starting cluster (no spurious scaling in steady scenarios);
+    # churn oscillates between churn_low (remove band) and peak_load
+    # (add band); storms bump to storm_load inside the window
+    base_load: float = 8e5
+    churn_low: float = 2e5
+    peak_load: float = 8e6
+    storm_load: float = 5e6
+    churn_period_s: float = 40.0
+    # storm window
+    storm_start_s: float = 40.0
+    storm_end_s: float = 80.0
+    storm_frac: float = 0.7
+    storm_hot: int = 4
+    # crash
+    crash_at_s: float = 60.0
+    # background network faults
+    drop_flush_rt_rate: float = 0.01
+    heartbeat_delay_s: float = 0.01
+    heartbeat_jitter_s: float = 0.01
+    # policy
+    epoch_s: float = 5.0
+    grace_period_s: float = 10.0
+    max_kns: int = 8
+
+    @classmethod
+    def smoke(cls) -> "ScenarioConfig":
+        return cls(num_keys=3000, num_buckets=1 << 13, sample_ops=400,
+                   duration_s=40.0, churn_period_s=16.0,
+                   storm_start_s=10.0, storm_end_s=28.0,
+                   crash_at_s=18.0, epoch_s=4.0, grace_period_s=8.0)
+
+
+@dataclass
+class ScenarioResult:
+    scenario: str
+    variant: str
+    seed: int
+    crash_point: str | None
+    duration_s: float
+    recovery_window_s: float | None
+    min_tput_during_frac: float | None
+    zero_tput_epochs: int
+    membership_changes: int
+    replication_actions: int
+    flush_rts_dropped: int
+    recovery: dict | None
+    violations: list[str] = field(default_factory=list)
+    events: list[str] = field(default_factory=list)
+
+    def row(self) -> dict:
+        return {
+            "scenario": self.scenario, "variant": self.variant,
+            "seed": self.seed, "crash_point": self.crash_point,
+            "duration_s": self.duration_s,
+            "recovery_window_s": self.recovery_window_s,
+            "min_tput_during_frac": self.min_tput_during_frac,
+            "zero_tput_epochs": self.zero_tput_epochs,
+            "membership_changes": self.membership_changes,
+            "replication_actions": self.replication_actions,
+            "flush_rts_dropped": self.flush_rts_dropped,
+            "recovery": self.recovery,
+            "violations": self.violations,
+        }
+
+
+class StormWorkload:
+    """Flash-crowd wrapper over a base Workload: during [t0, t1) a
+    fraction ``frac`` of the sampled ops redirect (uniformly) onto a
+    small hot set -- the sudden skew spike selective replication and
+    the Eq. 1 screen exist to absorb."""
+
+    def __init__(self, base: Workload, hot: list[int], frac: float,
+                 t0: float, t1: float):
+        self.base = base
+        self.hot = np.asarray(hot, dtype=np.int64)
+        self.frac = frac
+        self.t0, self.t1 = t0, t1
+
+    def timed_batched(self, t: float, rng, n: int):
+        kinds, keys = self.base.ops_arrays(n)
+        if self.t0 <= t < self.t1 and self.hot.size:
+            m = rng.random(n) < self.frac
+            hits = int(m.sum())
+            if hits:
+                keys = keys.copy()
+                keys[m] = self.hot[rng.integers(0, self.hot.size, hits)]
+        return kinds, keys
+
+
+def _offered_fn(scenario: str, cfg: ScenarioConfig):
+    if scenario in ("churn", "composed"):
+        # full sine sweep: troughs dip to churn_low (the policy's remove
+        # band), peaks reach peak_load (the add band) -- continuous
+        # join/leave churn by construction
+        def offered(t: float) -> float:
+            phase = math.sin(2.0 * math.pi * t / cfg.churn_period_s)
+            lo, hi = cfg.churn_low, cfg.peak_load
+            return lo + (hi - lo) * max(phase, 0.0)
+        return offered
+    if scenario == "storm":
+        # the flash crowd brings extra load with it -- enough to
+        # overload the hot keys' owner unless replication spreads it
+        return lambda t: (cfg.storm_load
+                          if cfg.storm_start_s <= t < cfg.storm_end_s
+                          else cfg.base_load)
+    # crashes run against a steady in-band load so the SLO fractions
+    # measure the event, not the load shape
+    return lambda t: cfg.base_load
+
+
+def _pick_victim(c: DinomoCluster) -> str | None:
+    """The alive KN with the most unmerged log state -- the most
+    interesting crash victim -- ties broken by name for determinism."""
+    best, best_pending = None, -1
+    for name in sorted(c.kns):
+        if not c.kns[name].alive:
+            continue
+        pending = sum(len(s.entries) - s.merged_upto
+                      for s in c.pool.segments.get(name, ()))
+        if pending > best_pending:
+            best, best_pending = name, pending
+    return best
+
+
+def _crash_and_recover(sim: TimedSimulation, faults: FaultPlane,
+                       point: str, offered, result: ScenarioResult):
+    """Crash a KN at ``point`` mid-run: arm the crash point so it fires
+    inside the next step's batched write/merge paths when it can (the
+    mid-batch flavor), force the equivalent state corruption when the
+    step completes without reaching it (e.g. Clover's inline-merge plane
+    or a point the victim never hits), then fail the KN through the
+    timed reconfiguration path and verify pool integrity."""
+    c = sim.c
+    victim = _pick_victim(c)
+    if victim is None or len(sim._alive_kns()) <= 1:
+        result.events.append("crash skipped: no eligible victim")
+        return
+    armed = point in ARMABLE_POINTS and c.variant.name != "clover"
+    if armed:
+        faults.arm_crash(point, kn=victim,
+                         after=int(faults.rng.integers(0, 64)))
+    crashed = False
+    try:
+        sim.step(offered(sim.now), [f"crash {victim}@{point}"])
+        sim.now += sim.dt
+    except KNCrash as e:
+        crashed = True
+        victim = e.kn
+        result.events.append(f"t={sim.now:.1f} {victim} crashed "
+                             f"mid-batch at {point}")
+    faults.disarm()
+    if not crashed:
+        rec = faults.force_crash(c.pool, victim, point)
+        result.events.append(f"t={sim.now:.1f} forced {point} on "
+                             f"{victim}: {rec['effect']}")
+    window = sim.inject_failure(victim)
+    result.recovery_window_s = window
+    result.recovery = (c.reconfig_log[-1].get("recovery")
+                       if c.reconfig_log else None)
+    result.violations.extend(
+        f"post-recovery: {v}" for v in c.pool.verify_integrity())
+
+
+def run_scenario(scenario: str, variant: str, seed: int = 0,
+                 smoke: bool = False, model: NetModel | None = None,
+                 crash_point: str | None = None,
+                 cfg: ScenarioConfig | None = None) -> ScenarioResult:
+    """Run one scenario against one variant; returns the SLO row."""
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}; "
+                         f"choose from {SCENARIOS}")
+    cfg = cfg or (ScenarioConfig.smoke() if smoke else ScenarioConfig())
+    model = model or DEFAULT_MODEL
+    faults = FaultPlane(seed=seed,
+                        drop_flush_rt_rate=cfg.drop_flush_rt_rate,
+                        heartbeat_delay_s=cfg.heartbeat_delay_s,
+                        heartbeat_jitter_s=cfg.heartbeat_jitter_s)
+    c = DinomoCluster(VARIANTS[variant], num_kns=cfg.num_kns,
+                      cache_bytes=cfg.cache_bytes,
+                      value_bytes=cfg.value_bytes, model=model,
+                      num_buckets=cfg.num_buckets,
+                      segment_capacity=cfg.segment_capacity,
+                      policy=PolicyConfig(epoch_s=cfg.epoch_s,
+                                          grace_period_s=cfg.grace_period_s,
+                                          max_kns=cfg.max_kns),
+                      seed=seed)
+    c.load((k, f"v{k}") for k in range(cfg.num_keys))
+    c.pool.faults = faults
+    mix = "read_mostly_update" if scenario == "storm" \
+        else "write_heavy_update"
+    base = Workload(num_keys=cfg.num_keys, zipf=0.99, mix=mix,
+                    value_bytes=cfg.value_bytes, seed=seed)
+    if scenario in ("storm", "composed"):
+        wl = StormWorkload(base, base.hot_keys(cfg.storm_hot),
+                           cfg.storm_frac, cfg.storm_start_s,
+                           cfg.storm_end_s).timed_batched
+    else:
+        wl = base.timed_batched
+    sim = TimedSimulation(c, wl, model=model, dt=cfg.dt,
+                          sample_ops=cfg.sample_ops, seed=seed,
+                          dataset_bytes=cfg.dataset_bytes, faults=faults)
+    offered = _offered_fn(scenario, cfg)
+    point = crash_point
+    if point is None:
+        point = CRASH_POINTS[int(faults.rng.integers(0, len(CRASH_POINTS)))]
+    with_crash = scenario in ("crash", "composed")
+    result = ScenarioResult(
+        scenario=scenario, variant=variant, seed=seed,
+        crash_point=point if with_crash else None,
+        duration_s=cfg.duration_s, recovery_window_s=None,
+        min_tput_during_frac=None, zero_tput_epochs=0,
+        membership_changes=0, replication_actions=0,
+        flush_rts_dropped=0, recovery=None)
+
+    if with_crash:
+        sim.run(cfg.crash_at_s, offered)
+        t_crash = sim.now
+        _crash_and_recover(sim, faults, point, offered, result)
+        sim.run(cfg.duration_s, offered)
+        # SLO: delivery ratio (throughput / offered) so an oscillating
+        # load doesn't masquerade as recovery -- minimum ratio during
+        # the recovery window vs the mean ratio just before the crash,
+        # plus zero-throughput epochs while the window is open
+        window = result.recovery_window_s or 0.0
+        obs_end = min(t_crash + max(window, 1.0) + 3 * cfg.dt,
+                      cfg.duration_s)
+        before = [p.throughput / p.offered for p in sim.trace
+                  if t_crash - 6 * cfg.dt <= p.t < t_crash and p.offered > 0]
+        during = [p.throughput / p.offered for p in sim.trace
+                  if t_crash <= p.t <= obs_end and p.offered > 0]
+        if before and during:
+            steady = sum(before) / len(before)
+            if steady > 0:
+                result.min_tput_during_frac = min(during) / steady
+        result.zero_tput_epochs = sum(1 for x in during if x <= 0.0)
+    else:
+        sim.run(cfg.duration_s, offered)
+
+    result.membership_changes = sum(
+        1 for r in c.reconfig_log if r["event"] in ("add", "remove",
+                                                    "fail"))
+    result.replication_actions = sum(
+        1 for _t, kind in c.mnode.decision_log
+        if kind in ("replicate", "dereplicate"))
+    result.flush_rts_dropped = faults.flush_rts_dropped
+    # end-of-run health: ring intact, cluster alive, pool consistent
+    alive = sim._alive_kns()
+    if not alive:
+        result.violations.append("end: no alive KNs")
+    if not c.ownership.ring.members:
+        result.violations.append("end: empty ownership ring")
+    result.violations.extend(f"end: {v}" for v in c.pool.verify_integrity())
+    # zero throughput at run end is a correctness smell for variants
+    # that reconfigure online; shared-nothing reorganizes the whole
+    # dataset on any membership change, so a legitimately-open outage
+    # window can overlap run end (the paper's Fig. 8 contrast)
+    if (sim.trace and sim.trace[-1].throughput <= 0 and not with_crash
+            and c.variant.architecture != "shared_nothing"):
+        result.violations.append("end: throughput collapsed to zero")
+    result.events.extend(sim.event_log)
+    return result
+
+
+def run_suite(variants=BENCH_VARIANTS, scenarios=SCENARIOS, seed: int = 0,
+              smoke: bool = False,
+              crash_point: str | None = None) -> list[ScenarioResult]:
+    """The bench matrix: every scenario x every variant, one seed."""
+    return [run_scenario(s, v, seed=seed, smoke=smoke,
+                         crash_point=crash_point)
+            for s in scenarios for v in variants]

@@ -44,7 +44,7 @@ class TimedSimulation:
                  model: NetModel = DEFAULT_MODEL, dt: float = 1.0,
                  sample_ops: int = 20_000, seed: int = 0,
                  dataset_bytes: float | None = None,
-                 batched: bool = True):
+                 batched: bool = True, faults=None):
         # the sampled working set stands in for a paper-scale dataset;
         # reorganization physics (Dinomo-N) uses the represented bytes
         self.dataset_bytes = dataset_bytes
@@ -66,6 +66,12 @@ class TimedSimulation:
         self.now = 0.0
         self.outages: list[Outage] = []
         self.trace: list[TimePoint] = []
+        # optional FaultPlane: perturbs failure detection (delayed
+        # heartbeats) -- the pool-level crash points attach to the pool
+        self.faults = faults
+        # operator-visible reasons for guarded no-ops (e.g. refusing to
+        # fail/remove the last alive KN) and injected faults
+        self.event_log: list[str] = []
         # per-epoch key-frequency accumulator, sparse: sorted key array
         # + aligned counts, merged once per step -- top-k extraction is
         # one argpartition over the distinct sampled keys instead of
@@ -310,6 +316,14 @@ class TimedSimulation:
             name, _ = c.add_kn()
             self._post_reconfig(name)
         elif action.kind == "remove_kn" and action.node in c.kns:
+            alive = self._alive_kns()
+            if len(alive) <= 1 and action.node in alive:
+                # removing the last alive KN would leave an empty ring;
+                # refuse with a reason rather than corrupt routing
+                self.event_log.append(
+                    f"t={self.now:.1f} refused remove_kn({action.node}): "
+                    f"last alive KN")
+                return
             c.remove_kn(action.node)
             self._post_reconfig(None)
         elif action.kind == "replicate":
@@ -333,14 +347,28 @@ class TimedSimulation:
                                        "data reorganization"))
         else:
             for p in rec["participants"]:
-                self.outages.append(Outage(p, self.now + merge_s + 0.05,
-                                           "ownership handoff"))
+                self.outages.append(Outage(
+                    p, self.now + merge_s + self.model.handoff_s,
+                    "ownership handoff"))
 
     # ------------------------------------------------------------------
-    def inject_failure(self, name: str) -> float:
-        """Fail a KN; returns the recovery window in seconds."""
+    def inject_failure(self, name: str, extra_detect_s: float = 0.0) -> float:
+        """Fail a KN; returns the recovery window in seconds.  Timing
+        constants come from the NetModel (detect_s / handoff_s /
+        clover_refresh_s) so scenarios can sweep them; an attached
+        FaultPlane adds its heartbeat delay to detection.  Failing the
+        last alive KN is refused (window 0.0, reason logged): a cluster
+        with an empty ring cannot recover ownership anywhere."""
         c = self.c
-        detect_s = 0.04                      # heartbeat miss
+        alive = self._alive_kns()
+        if name not in c.kns or (len(alive) <= 1 and name in alive):
+            self.event_log.append(
+                f"t={self.now:.1f} refused inject_failure({name}): "
+                + ("unknown KN" if name not in c.kns else "last alive KN"))
+            return 0.0
+        detect_s = self.model.detect_s + extra_detect_s   # heartbeat miss
+        if self.faults is not None:
+            detect_s += self.faults.heartbeat_delay()
         ev = c.fail_kn(name)
         rec = c.reconfig_log[-1]
         merge_s = rec["merged_entries"] / max(self.model.merge_capacity(), 1)
@@ -352,14 +380,16 @@ class TimedSimulation:
             self.outages.append(Outage(None, self.now + window,
                                        "failure reorganization"))
         elif c.variant.name == "clover":
-            window = detect_s + 0.068        # membership refresh only
+            window = detect_s + self.model.clover_refresh_s   # refresh only
             self.outages.append(Outage(None, self.now + window,
                                        "membership refresh"))
         else:
-            window = detect_s + merge_s + 0.05
+            window = detect_s + merge_s + self.model.handoff_s
             for p in rec["participants"]:
                 if p in c.kns:
                     self.outages.append(Outage(p, self.now + window,
                                                "failover"))
         self.c.mnode.note_failure(self.now)
+        self.event_log.append(f"t={self.now:.1f} failed {name}: "
+                              f"window {window * 1e3:.1f} ms")
         return window

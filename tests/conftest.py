@@ -37,6 +37,10 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "slow: heavy hypothesis sweeps (nightly profile; needs --runslow)")
+    config.addinivalue_line(
+        "markers",
+        "chaos: deep fault-injection sweeps (nightly profile; "
+        "needs --runslow)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -45,7 +49,7 @@ def pytest_collection_modifyitems(config, items):
     skip_slow = pytest.mark.skip(reason="nightly-profile sweep: "
                                         "pass --runslow to run")
     for item in items:
-        if "slow" in item.keywords:
+        if "slow" in item.keywords or "chaos" in item.keywords:
             item.add_marker(skip_slow)
 
 

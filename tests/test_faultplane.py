@@ -1,0 +1,314 @@
+"""Crash-consistent recovery plane (ISSUE 6 tentpole).
+
+The recovery contract: a KN that fail-stops at ANY named crash point
+(core.faults.CRASH_POINTS) leaves a pool that, after
+``DPMPool.recover_kn``, is observationally equal to a reference pool
+that replayed only the acknowledged (sealed-before-crash) ops -- and
+``verify_integrity()`` returns no violations.
+
+The drivers here partition keys by owning KN (key parity), as real
+ownership partitioning does: a key has exactly one log that orders its
+writes, so 'the last acked write' is well defined.  Acked accounting is
+physical, not bookkept: an op is acked iff its log entry's seal byte
+landed, measured as the victim's sealed-entry count delta across the
+crashing call (no merges run in between, so GC cannot skew the delta).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ARMABLE_POINTS, CRASH_POINTS, DPMPool, FaultPlane,
+                        KNCrash, Op, check_history)
+from repro.core.log import (PySegment, SEALED, log_append, recover_segment,
+                            segment_init)
+
+KNS = ("a", "b")
+
+
+def owner_of(key: int) -> str:
+    return KNS[key % len(KNS)]
+
+
+def sealed_count(pool: DPMPool, kn: str) -> int:
+    return sum(sum(s.sealed) for s in pool.segments.get(kn, ()))
+
+
+def make_ops(rng, rounds: int, batch: int, key_space: int,
+             tombstones: bool):
+    """Per-round op batches, keys already partitioned by owner. An op is
+    (kn, log_key, value): log_key < 0 encodes a tombstone for -(k+1)."""
+    out = []
+    ver = 0
+    for _ in range(rounds):
+        ops = []
+        for _ in range(batch):
+            k = int(rng.integers(0, key_space))
+            if tombstones and rng.random() < 0.15:
+                ops.append((owner_of(k), -(k + 1), None))
+            else:
+                ver += 1
+                ops.append((owner_of(k), k, f"v{ver}"))
+        out.append(ops)
+    return out
+
+
+def submit_round(pool: DPMPool, ops) -> None:
+    """One round: per-KN batched writes (contiguous runs, as the staged
+    write plane flushes them) followed by a budgeted async merge."""
+    for kn in KNS:
+        mine = [(k, v) for o, k, v in ops if o == kn]
+        if mine:
+            pool.log_write_batch(kn, [k for k, _ in mine],
+                                 [v for _, v in mine],
+                                 [0 if v is None else len(v) for _, v in mine])
+    pool.merge_budget(len(ops) // 2 + 1)
+
+
+def reference_replay(acked, num_buckets, segment_capacity) -> DPMPool:
+    """The oracle: a fresh scalar-plane pool that saw only acked ops."""
+    ref = DPMPool(num_buckets=num_buckets,
+                  segment_capacity=segment_capacity, vectorized=False)
+    for kn in KNS:
+        ref.register_kn(kn)
+    for kn, k, v in acked:
+        ref.log_write(kn, k, v, 0 if v is None else len(v))
+    ref.merge_all()
+    return ref
+
+
+def observed_value(pool: DPMPool, key: int):
+    ptr, _ = pool.index_lookup(key)
+    return None if ptr is None else pool.read_value(ptr)[0]
+
+
+def crash_recover_check(point: str, after: int, seed: int,
+                        tombstones: bool, rounds: int = 6,
+                        batch: int = 24, key_space: int = 80,
+                        segment_capacity: int = 16) -> bool:
+    """Run the driver; returns whether the armed point actually fired.
+    On a crash: recover, then assert observational equality with the
+    reference pool and a clean integrity report."""
+    pool = DPMPool(num_buckets=1 << 10, segment_capacity=segment_capacity)
+    for kn in KNS:
+        pool.register_kn(kn)
+    fp = FaultPlane(seed=seed)
+    pool.faults = fp
+    rng = np.random.default_rng(seed)
+    plan = make_ops(rng, rounds, batch, key_space, tombstones)
+
+    victim = "a"
+    fp.arm_crash(point, kn=victim, after=after)
+    submitted = []          # global submission order, acked prefix per KN
+    crashed = False
+    for ops in plan:
+        pre = sealed_count(pool, victim)
+        try:
+            submit_round(pool, ops)
+            submitted.extend(ops)
+        except KNCrash as e:
+            crashed = True
+            assert e.kn == victim and e.point == point
+            if point.startswith("log."):
+                # the crash fired inside the victim's flush: the sealed
+                # delta is exactly its acked prefix of this round, and
+                # KN "b" (flushed after "a") never got its run
+                newly = sealed_count(pool, victim) - pre
+                mine = [op for op in ops if op[0] == victim]
+                submitted.extend(mine[:newly])
+            else:
+                # merge crashes lose no writes: every op in the round
+                # reached a sealed entry before merge_budget ran
+                submitted.extend(ops)
+            break
+    if not crashed:
+        fp.disarm()
+        assert pool.verify_integrity() == []
+        return False
+
+    rec = pool.recover_kn(victim)
+    assert rec["kn"] == victim
+    assert pool.verify_integrity() == [], pool.verify_integrity()
+
+    # the surviving KN's pending entries merge on its own schedule;
+    # drain both pools so the comparison sees final state
+    pool.faults = None
+    pool.merge_all()
+    ref = reference_replay(submitted, 1 << 10, segment_capacity)
+
+    history = []
+    t = 0.0
+    for kn, k, v in submitted:
+        real = -k - 1 if k < 0 else k
+        history.append(Op("write", real, v if k >= 0 else None, t, t + 0.5))
+        t += 1.0
+    for key in range(key_space):
+        got = observed_value(pool, key)
+        want = observed_value(ref, key)
+        assert got == want, \
+            f"{point}@{after} seed={seed}: key {key} -> {got!r} != {want!r}"
+        history.append(Op("read", key, got, t, t + 0.5))
+        t += 1.0
+    verdicts = check_history(history, initial=None)
+    bad = [k for k, ok in verdicts.items() if not ok]
+    assert not bad, f"non-linearizable keys after recovery: {bad[:5]}"
+    return True
+
+
+class TestArmedCrashRecovery:
+    """Every armable crash point, deterministic offsets."""
+
+    # rotation / post_apply count *events* (far rarer than entries), so
+    # their offsets stay small; entry-counted points get deep ones too
+    @pytest.mark.parametrize("point,after", [
+        (p, a) for p in ARMABLE_POINTS for a in (0, 1, 3)
+    ] + [("log.pre_seal", 17), ("merge.mid_apply", 17)])
+    def test_recovered_equals_acked_replay(self, point, after):
+        fired = any(crash_recover_check(point, after, seed, tombstones=True)
+                    for seed in range(4))
+        assert fired, f"{point} after={after} never fired in 4 seeds"
+
+    def test_unfired_arm_is_harmless(self):
+        # an armed point the run never reaches must not corrupt anything
+        assert crash_recover_check("log.rotation", after=10_000,
+                                   seed=0, tombstones=False) is False
+
+    @given(point=st.sampled_from(ARMABLE_POINTS),
+           after=st.integers(min_value=0, max_value=40),
+           seed=st.integers(min_value=0, max_value=2 ** 16),
+           tombstones=st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def test_property_crash_consistency(self, point, after, seed,
+                                        tombstones):
+        crash_recover_check(point, after, seed, tombstones)
+
+    @pytest.mark.chaos
+    @given(point=st.sampled_from(ARMABLE_POINTS),
+           after=st.integers(min_value=0, max_value=200),
+           seed=st.integers(min_value=0, max_value=2 ** 32 - 1),
+           tombstones=st.booleans(),
+           segment_capacity=st.sampled_from([4, 16, 64]))
+    @settings(max_examples=300, deadline=None)
+    def test_chaos_sweep(self, point, after, seed, tombstones,
+                         segment_capacity):
+        crash_recover_check(point, after, seed, tombstones,
+                            rounds=10, batch=40,
+                            segment_capacity=segment_capacity)
+
+
+class TestForcedCrashes:
+    """force_crash imposes each point's torn state without the hooks."""
+
+    def _loaded_pool(self, seed=0):
+        pool = DPMPool(num_buckets=1 << 10, segment_capacity=16)
+        for kn in KNS:
+            pool.register_kn(kn)
+        rng = np.random.default_rng(seed)
+        for ops in make_ops(rng, 5, 24, 80, tombstones=True):
+            submit_round(pool, ops)
+        return pool
+
+    @pytest.mark.parametrize("point", CRASH_POINTS)
+    def test_force_then_recover(self, point):
+        pool = self._loaded_pool()
+        if point == "rep.post_cas":
+            # establish a replicated key with an acked CAS first
+            pool.log_write("a", 998, "v_first", 7)
+            pool.merge_all()
+            pool.install_indirect(998)
+            old = pool.indirect[998]
+            seg = pool.segments["a"][-1]
+            new = pool.alloc_value("v_acked", 7, seg)
+            seg.append(998, new, sealed=True)
+            assert pool.cas_indirect(998, old, new)
+        else:
+            # guarantee material for the point: an unmerged flush big
+            # enough to rotate segments into the backlog and leave an
+            # unsealed-able active tail
+            keys = [2 * i for i in range(50)]
+            pool.log_write_batch("a", keys, [f"r{k}" for k in keys],
+                                 [2] * len(keys))
+        fp = FaultPlane(seed=1)
+        rec = fp.force_crash(pool, "a", point)
+        assert rec["forced"] and rec["point"] == point
+        assert rec["effect"] != "none"
+        out = pool.recover_kn("a")
+        assert pool.verify_integrity() == [], pool.verify_integrity()
+        if point == "rep.post_cas":
+            assert out["repaired_indirect"] >= 1
+
+    def test_post_cas_detected_then_rewound(self):
+        """The dangling-CAS hazard: detection names the unsealed target,
+        recovery rewinds the slot to the last acked CAS value."""
+        pool = DPMPool(num_buckets=1 << 8, segment_capacity=8)
+        pool.register_kn("a")
+        pool.log_write("a", 5, "v0", 2)
+        pool.merge_all()
+        pool.install_indirect(5)
+        seg = pool.segments["a"][-1]
+        acked = pool.alloc_value("v_acked", 7, seg)
+        seg.append(5, acked, sealed=True)
+        assert pool.cas_indirect(5, pool.indirect[5], acked)
+
+        fp = FaultPlane(seed=0)
+        rec = fp.force_crash(pool, "a", "rep.post_cas")
+        assert rec["effect"].startswith("dangling CAS")
+        assert any("unsealed target" in v for v in pool.verify_integrity())
+
+        pool.recover_kn("a")
+        assert pool.verify_integrity() == []
+        assert pool.indirect[5] == acked
+        assert observed_value(pool, 5) == "v_acked"
+
+    def test_unknown_point_rejected(self):
+        fp = FaultPlane()
+        with pytest.raises(ValueError):
+            fp.force_crash(DPMPool(), "a", "log.bogus")
+        with pytest.raises(ValueError):
+            fp.arm_crash("rep.post_cas")        # forced-only point
+
+
+class TestTornTailSemantics:
+    """PySegment.recover_torn == the JAX plane's recover_segment."""
+
+    @given(n=st.integers(min_value=0, max_value=30),
+           cut=st.integers(min_value=0, max_value=30),
+           merged=st.integers(min_value=0, max_value=30),
+           seed=st.integers(min_value=0, max_value=999))
+    @settings(max_examples=60, deadline=None)
+    def test_planes_agree(self, n, cut, merged, seed):
+        cap = 32
+        rng = np.random.default_rng(seed)
+        keys = rng.integers(0, 50, n)
+        ptrs = np.arange(n)
+        merged = min(merged, n)
+        cut = min(cut, n)
+
+        py = PySegment(cap, "a")
+        for k, p in zip(keys.tolist(), ptrs.tolist()):
+            py.append(int(k), int(p))
+        for i in range(cut, n):     # tear a suffix (fail-stop shape)
+            py.sealed[i] = False
+        py.merged_upto = merged
+
+        jx = segment_init(cap)
+        jx, ok = log_append(jx, jnp.asarray(keys, jnp.int32),
+                            jnp.asarray(ptrs, jnp.int32))
+        assert bool(ok) or n == 0
+        seal = jx.seal.at[cut:n].set(0)
+        jx = type(jx)(keys=jx.keys, ptrs=jx.ptrs, seal=seal,
+                      count=jx.count, merged=jnp.int32(merged))
+
+        dropped = py.recover_torn()
+        jx = recover_segment(jx)
+
+        assert len(py.entries) == int(jx.count)
+        assert py.merged_upto == int(jx.merged)
+        assert [k for k, _ in py.entries] == \
+            jx.keys[:int(jx.count)].tolist()
+        assert all(py.sealed)
+        assert len(dropped) == n - cut
+        assert not any(int(s) != SEALED
+                       for s in jx.seal[:int(jx.count)].tolist())

@@ -135,3 +135,109 @@ def test_cluster_reconfig_low_vnodes_merges_every_participant():
         # participants dropped their soft state during the handoff
         assert kn.cache.num_values + kn.cache.num_shortcuts == 0
         assert len(kn.segcache) == 0
+
+
+# ---------------------------------------------------------------------------
+# Durable ownership snapshots + replica repair (ISSUE 6 satellites)
+# ---------------------------------------------------------------------------
+
+class TestSnapshotRoundTrip:
+    """``snapshot_blob``/``from_blob`` must reconstruct routing exactly:
+    the blob is what restarted KNs/RNs rebuild their soft state from
+    (stored durably in ``pool.policy_metadata``, Sec. 3.5)."""
+
+    def _replicated_map(self, seed=0):
+        m = OwnershipMap(vnodes=16)
+        for i in range(5):
+            m.add_kn(f"kn{i}")
+        rng = np.random.default_rng(seed)
+        for key in rng.integers(0, 10_000, 12).tolist():
+            m.replicate(int(key), int(rng.integers(2, 5)))
+        return m
+
+    def test_round_trip_preserves_routing_and_replication(self):
+        m = self._replicated_map()
+        r = OwnershipMap.from_blob(m.snapshot_blob())
+        assert r.version == m.version
+        assert r.ring.members == m.ring.members
+        assert r.replicated == m.replicated
+        keys = np.random.default_rng(1).integers(0, 1 << 62, 5000)
+        for k in keys.tolist():
+            assert r.primary(k) == m.primary(k)
+            assert r.owners(k) == m.owners(k)
+        ids_m, names_m = m.primary_ids(keys)
+        ids_r, names_r = r.primary_ids(keys)
+        assert names_m == names_r
+        assert np.array_equal(ids_m, ids_r)
+
+    def test_round_trip_survives_json(self):
+        """The durable form must survive serialization: JSON stringifies
+        int keys, and ``from_blob`` must undo that."""
+        import json
+        m = self._replicated_map(seed=2)
+        r = OwnershipMap.from_blob(json.loads(json.dumps(m.snapshot_blob())))
+        assert r.replicated == m.replicated
+        assert sorted(r.replicated) == sorted(map(int, m.replicated))
+
+    def test_cluster_persists_snapshot_on_reconfig(self):
+        c = DinomoCluster(VARIANTS["dinomo"], num_kns=3,
+                          cache_bytes=1 << 18, value_bytes=256,
+                          num_buckets=1 << 10, seed=0)
+        c.load((k, f"v{k}") for k in range(200))
+        c.add_kn()
+        blob = c.pool.policy_metadata["ownership"]
+        r = OwnershipMap.from_blob(blob)
+        assert r.ring.members == c.ownership.ring.members
+        assert r.version == c.ownership.version
+
+
+class TestReplicaRepair:
+    """``_repair_replicas`` after a failure: no owner list may name a
+    dead KN, the (new) primary always leads, and degenerate lists
+    collapse back to unreplicated."""
+
+    def _map_with_replica(self, key=42, factor=3):
+        m = OwnershipMap(vnodes=16)
+        for i in range(4):
+            m.add_kn(f"kn{i}")
+        owners = m.replicate(key, factor)
+        assert len(owners) == factor
+        return m, owners
+
+    def test_failed_secondary_dropped(self):
+        m, owners = self._map_with_replica()
+        gone = owners[1]                       # a secondary
+        m.remove_kn(gone, failed=True)
+        for key, reps in m.replicated.items():
+            assert gone not in reps
+            assert reps[0] == m.primary(key)
+            assert all(o in m.ring for o in reps)
+            assert len(reps) >= 2
+
+    def test_failed_primary_replaced(self):
+        m, owners = self._map_with_replica(key=7, factor=3)
+        m.remove_kn(owners[0], failed=True)   # kill the primary
+        if 7 in m.replicated:
+            reps = m.replicated[7]
+            assert reps[0] == m.primary(7)
+            assert owners[0] not in reps
+        assert m.owners(7)[0] == m.primary(7)
+
+    def test_degenerate_replica_collapses(self):
+        m, owners = self._map_with_replica(key=9, factor=2)
+        # kill every owner but one: replication cannot survive
+        for o in owners:
+            if len(m.ring.members) > 1:
+                m.remove_kn(o, failed=True)
+        assert m.replication_factor(9) == 1 or \
+            len(m.replicated.get(9, [])) >= 2
+
+    def test_post_failure_routing_matches_fresh_snapshot(self):
+        """After a failure + repair, a map rebuilt from the blob routes
+        identically -- restarted nodes converge with survivors."""
+        m, owners = self._map_with_replica(key=11, factor=3)
+        m.remove_kn(owners[1], failed=True)
+        r = OwnershipMap.from_blob(m.snapshot_blob())
+        keys = np.random.default_rng(2).integers(0, 1 << 62, 2000)
+        for k in keys.tolist():
+            assert r.owners(k) == m.owners(k)

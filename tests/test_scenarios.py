@@ -1,0 +1,155 @@
+"""Scenario harness + failure-timing satellites (ISSUE 6).
+
+Covers: the NetModel failure/reconfiguration timing constants (moved out
+of simulate.py so scenarios can sweep them), the last-alive-KN guards in
+TimedSimulation, the StormWorkload redirection, and the scenario suite's
+SLO rows (smoke profile; the full matrix is the nightly chaos sweep and
+``benchmarks/bench_scenarios.py``).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (DINOMO, CLOVER, DinomoCluster, FaultPlane,
+                        PolicyConfig, TimedSimulation, VARIANTS)
+from repro.core.mnode import Action
+from repro.core.netmodel import DEFAULT_MODEL
+from repro.core.scenarios import (ScenarioConfig, SCENARIOS, StormWorkload,
+                                  run_scenario)
+from repro.data import Workload
+
+NO_OPS = lambda t, rng, n: []  # noqa: E731  (timing tests never sample)
+
+
+def quiesced_sim(variant, num_kns=4, model=None, faults=None):
+    """A loaded, fully-merged cluster: failure windows then expose the
+    timing constants exactly (no pending entries to merge)."""
+    c = DinomoCluster(variant, num_kns=num_kns, cache_bytes=1 << 18,
+                      value_bytes=256, num_buckets=1 << 10,
+                      segment_capacity=64,
+                      model=model or DEFAULT_MODEL)
+    c.load((k, f"v{k}") for k in range(200))
+    return c, TimedSimulation(c, NO_OPS, model=model or DEFAULT_MODEL,
+                              dt=1.0, sample_ops=10, faults=faults)
+
+
+class TestFailureTimingModel:
+    """Satellite: detect/handoff/refresh live in NetModel, not inline."""
+
+    def test_defaults_match_paper_calibration(self):
+        assert DEFAULT_MODEL.detect_s == pytest.approx(0.04)
+        assert DEFAULT_MODEL.handoff_s == pytest.approx(0.05)
+        assert DEFAULT_MODEL.clover_refresh_s == pytest.approx(0.068)
+
+    def test_dinomo_window_is_detect_plus_merge_plus_handoff(self):
+        m = dataclasses.replace(DEFAULT_MODEL, detect_s=0.2, handoff_s=0.3)
+        c, sim = quiesced_sim(DINOMO, model=m)
+        window = sim.inject_failure(sorted(c.kns)[0])
+        assert window == pytest.approx(0.5)      # merge_s == 0 (quiesced)
+
+    def test_clover_window_is_detect_plus_refresh(self):
+        m = dataclasses.replace(DEFAULT_MODEL, detect_s=0.2,
+                                clover_refresh_s=0.7)
+        c, sim = quiesced_sim(CLOVER, model=m)
+        window = sim.inject_failure(sorted(c.kns)[0])
+        assert window == pytest.approx(0.9)
+
+    def test_heartbeat_delay_widens_detection(self):
+        fp = FaultPlane(seed=0, heartbeat_delay_s=0.5)
+        c, sim = quiesced_sim(DINOMO, faults=fp)
+        base_c, base_sim = quiesced_sim(DINOMO)
+        delayed = sim.inject_failure(sorted(c.kns)[0])
+        base = base_sim.inject_failure(sorted(base_c.kns)[0])
+        assert delayed == pytest.approx(base + 0.5)
+
+
+class TestLastKNGuards:
+    """Satellite: no path may remove/fail the last alive KN."""
+
+    def test_inject_failure_refuses_last_alive(self):
+        c, sim = quiesced_sim(DINOMO, num_kns=1)
+        (name,) = c.kns
+        assert sim.inject_failure(name) == 0.0
+        assert c.kns[name].alive
+        assert c.ownership.ring.members
+        assert any("last alive KN" in e for e in sim.event_log)
+
+    def test_inject_failure_refuses_unknown_kn(self):
+        c, sim = quiesced_sim(DINOMO)
+        assert sim.inject_failure("kn-nope") == 0.0
+        assert any("unknown KN" in e for e in sim.event_log)
+        assert len(sim._alive_kns()) == len(c.kns)
+
+    def test_policy_remove_refuses_last_alive(self):
+        c, sim = quiesced_sim(DINOMO, num_kns=2)
+        a, b = sorted(c.kns)
+        sim.inject_failure(a)                    # one real failure
+        sim._apply(Action("remove_kn", node=b))  # would empty the ring
+        assert c.kns[b].alive
+        assert c.ownership.ring.members
+        assert any("refused remove_kn" in e for e in sim.event_log)
+
+
+class TestStormWorkload:
+    def test_redirects_only_inside_window(self):
+        base = Workload(num_keys=1000, zipf=0.99, mix="read_mostly_update",
+                        value_bytes=64, seed=0)
+        hot = [1, 2, 3]
+        w = StormWorkload(base, hot, frac=0.6, t0=10.0, t1=20.0)
+        rng = np.random.default_rng(0)
+        _, inside = w.timed_batched(15.0, rng, 4000)
+        _, outside = w.timed_batched(25.0, rng, 4000)
+        hot_in = np.isin(inside, hot).mean()
+        hot_out = np.isin(outside, hot).mean()
+        assert 0.5 < hot_in < 0.75               # ~frac plus base mass
+        assert hot_out < 0.1
+
+
+class TestScenarios:
+    def test_unknown_scenario_rejected(self):
+        with pytest.raises(ValueError):
+            run_scenario("earthquake", "dinomo")
+
+    def test_crash_scenario_dinomo_slo(self):
+        r = run_scenario("crash", "dinomo", seed=0, smoke=True)
+        assert r.violations == []
+        assert r.crash_point is not None
+        assert r.recovery_window_s is not None
+        assert r.recovery_window_s < 1.0         # paper: ~109 ms + detect
+        assert r.zero_tput_epochs == 0
+        assert r.min_tput_during_frac is not None
+        assert r.min_tput_during_frac > 0.5
+        assert r.recovery is not None and r.recovery["kn"]
+
+    def test_crash_scenario_paper_contrast(self):
+        d = run_scenario("crash", "dinomo", seed=0, smoke=True)
+        n = run_scenario("crash", "dinomo-n", seed=0, smoke=True)
+        assert n.violations == []
+        # shared-nothing pays a reorganization outage; DINOMO does not
+        assert n.recovery_window_s > 5 * d.recovery_window_s
+        assert n.zero_tput_epochs > 0 and d.zero_tput_epochs == 0
+
+    def test_churn_scenario_exercises_membership(self):
+        r = run_scenario("churn", "dinomo", seed=0, smoke=True)
+        assert r.violations == []
+        assert r.membership_changes > 0
+
+    def test_storm_scenario_triggers_replication(self):
+        r = run_scenario("storm", "dinomo", seed=0, smoke=True)
+        assert r.violations == []
+        assert r.replication_actions > 0
+
+    def test_network_faults_observed(self):
+        r = run_scenario("composed", "dinomo", seed=0, smoke=True)
+        assert r.violations == []
+        assert r.flush_rts_dropped > 0
+
+    @pytest.mark.chaos
+    @pytest.mark.parametrize("scenario", SCENARIOS)
+    @pytest.mark.parametrize("variant", ("dinomo", "dinomo-n", "clover"))
+    @pytest.mark.parametrize("seed", range(3))
+    def test_chaos_matrix(self, scenario, variant, seed):
+        r = run_scenario(scenario, variant, seed=seed, smoke=True)
+        assert r.violations == [], (scenario, variant, seed, r.violations)
