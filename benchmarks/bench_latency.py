@@ -1,0 +1,178 @@
+"""Open-loop latency-vs-load bench: p50/p99/p999 under offered load.
+
+The paper's Figs. 3-8 are closed-loop (clients wait, so offered load
+can never exceed capacity).  This bench drives the ISSUE 7 open-loop
+request plane (``repro.core.requestplane``) instead: Poisson (and
+bursty) arrivals at a sweep of offered-load fractions of the estimated
+saturation point, per-KN bounded queues with shedding, per-attempt
+deadlines with exactly-once retries.  For each (YCSB mix, arrival
+kind, load fraction) it reports goodput plus client-latency
+percentiles over completed ops, and emits ``BENCH_latency.json`` next
+to this file.
+
+Machine-checked SLO gates (asserted here and in CI):
+
+  * low-load tails: at the lowest load point every mix serves p50
+    under 1 ms and p999 under the per-attempt deadline;
+  * backpressure engages past saturation: every >=1.5x row sheds, and
+    admitted (completed) ops stay under the retry-closed latency bound
+    (``scenarios.admitted_latency_bound``);
+  * graceful degradation: the ``run_overload`` scenario's gates all
+    pass (bounded p999 at 2x with shedding, lowest-priority-first
+    sheds, recovery to baseline, exactly-once);
+  * exactly-once hygiene on every row: no shed or never-dispatched
+    write's request ID registered in the durable log, zero retried ops
+    double-applied, pool integrity clean.
+
+Usage:  PYTHONPATH=src python -m benchmarks.bench_latency [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core import DinomoCluster, VARIANTS
+from repro.core.netmodel import ArrivalProcess, DEFAULT_MODEL
+from repro.core.requestplane import RequestPlane, RequestPlaneConfig
+from repro.core.scenarios import (admitted_latency_bound,
+                                  estimated_capacity, run_overload)
+from repro.data.ycsb import Workload
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "BENCH_latency.json")
+
+MIX_SWEEP = ("read_only", "read_mostly_update", "write_heavy_update")
+LOAD_SWEEP = (0.25, 0.6, 0.9, 1.5, 2.0)       # x estimated saturation
+PAST_SATURATION = 1.5
+
+
+def run_point(mix: str, frac: float, kind: str, seed: int,
+              smoke: bool) -> dict:
+    """One open-loop run against a fresh cluster; returns the JSON row
+    plus gate-relevant observables."""
+    model = DEFAULT_MODEL
+    num_keys = 3000 if smoke else 10_000
+    duration = 0.6 if smoke else 2.0
+    num_kns = 4
+    c = DinomoCluster(VARIANTS["dinomo"], num_kns=num_kns,
+                      cache_bytes=1 << 19, value_bytes=1024, model=model,
+                      num_buckets=1 << 13, segment_capacity=256,
+                      seed=seed)
+    c.load((k, f"v{k}") for k in range(num_keys))
+    wl = Workload(num_keys=num_keys, zipf=0.99, mix=mix,
+                  value_bytes=1024, seed=seed)
+    cap = estimated_capacity(model, num_kns, mix)
+    cfg = RequestPlaneConfig()
+    arrival = ArrivalProcess(rate=frac * cap, kind=kind)
+    plane = RequestPlane(c, arrival, wl.timed_batched, cfg=cfg,
+                         model=model, seed=seed + 1)
+    res = plane.run(duration)
+    pct = res.percentiles()
+    cnt = res.counters
+    # exactly-once hygiene for this row
+    leaked = sum(1 for r in plane.never_applied_reqs
+                 if c.pool.req_applied(r))
+    violations = list(c.pool.verify_integrity())
+    return {
+        "mix": mix, "arrival": kind, "load_frac": frac,
+        "capacity_est": cap, "offered_rate": res.offered_rate,
+        "duration_s": duration, "goodput": res.goodput(),
+        "p50": pct["p50"], "p99": pct["p99"], "p999": pct["p999"],
+        "offered": cnt["offered"], "completed": cnt["completed"],
+        "shed": cnt["shed"], "failed": cnt["failed"],
+        "retries": cnt["retries"], "dedup_hits": cnt["dedup_hits"],
+        "queue_expired": cnt["queue_expired"],
+        "latency_bound": admitted_latency_bound(cfg),
+        "exactly_once_leaks": leaked,
+        "violations": violations,
+    }
+
+
+def check_slos(rows: list[dict], overload_row: dict) -> list[str]:
+    """The acceptance gates; returns human-readable failures."""
+    bad = []
+    for r in rows:
+        tag = f"{r['mix']}/{r['arrival']}@{r['load_frac']}x"
+        if r["violations"]:
+            bad.append(f"{tag}: integrity {r['violations']}")
+        if r["exactly_once_leaks"]:
+            bad.append(f"{tag}: {r['exactly_once_leaks']} shed/failed "
+                       f"request IDs leaked into the durable log")
+        if r["completed"] == 0:
+            bad.append(f"{tag}: zero completed ops")
+            continue
+        if r["load_frac"] == min(x["load_frac"] for x in rows):
+            if r["p50"] is None or r["p50"] > 1e-3:
+                bad.append(f"{tag}: low-load p50 {r['p50']} > 1 ms")
+            if r["p999"] is None or r["p999"] > 0.03:
+                bad.append(f"{tag}: low-load p999 {r['p999']} above "
+                           f"the per-attempt deadline")
+        if r["load_frac"] >= PAST_SATURATION and r["arrival"] == "poisson":
+            if r["shed"] == 0:
+                bad.append(f"{tag}: past saturation but nothing shed "
+                           f"(backpressure never engaged)")
+            if r["p999"] is not None and r["p999"] > r["latency_bound"]:
+                bad.append(f"{tag}: admitted p999 {r['p999']:.3f}s "
+                           f"exceeds bound {r['latency_bound']:.3f}s")
+    for name, g in overload_row["gates"].items():
+        if not g["passed"]:
+            bad.append(f"overload/{name}: observed {g['observed']} "
+                       f"vs bound {g['bound']}")
+    if overload_row["violations"]:
+        bad.append(f"overload: {overload_row['violations']}")
+    return bad
+
+
+def main(smoke: bool = False, seed: int = 0):
+    t0 = time.time()
+    rows = []
+    for mix in MIX_SWEEP:
+        for frac in LOAD_SWEEP:
+            rows.append(run_point(mix, frac, "poisson", seed, smoke))
+        # one bursty point near saturation per mix: same long-run rate,
+        # 4x peaks -- the tail cost of burstiness at fixed mean load
+        rows.append(run_point(mix, 0.9, "bursty", seed, smoke))
+    overload = run_overload(seed=seed, smoke=smoke).row()
+    wall = time.time() - t0
+    failures = check_slos(rows, overload)
+
+    payload = {
+        "profile": "smoke" if smoke else "full",
+        "seed": seed,
+        "wall_s": round(wall, 2),
+        "mixes": list(MIX_SWEEP),
+        "load_sweep": list(LOAD_SWEEP),
+        "rows": rows,
+        "overload": overload,
+        "slo_failures": failures,
+    }
+    with open(OUT, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    for r in rows:
+        p = (lambda x: "-" if x is None else f"{x * 1e3:8.3f}ms")
+        print(f"{r['mix']:22s} {r['arrival']:7s} {r['load_frac']:4.2f}x "
+              f"goodput={r['goodput'] / 1e6:6.2f}M/s p50={p(r['p50'])} "
+              f"p99={p(r['p99'])} p999={p(r['p999'])} "
+              f"shed={r['shed']:<6d} retries={r['retries']:<5d}")
+    print(f"wrote {OUT} ({len(rows)} rows + overload, {wall:.1f}s)")
+    if failures:
+        raise SystemExit("SLO failures:\n  " + "\n  ".join(failures))
+
+    us = wall / max(len(rows), 1) * 1e6
+    derived = (f"rows={len(rows)} mixes={len(MIX_SWEEP)} "
+               f"loads={len(LOAD_SWEEP)} failures=0 "
+               f"profile={payload['profile']}")
+    return us, derived
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI profile: small keyspace, sub-second runs")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(smoke=args.smoke, seed=args.seed)

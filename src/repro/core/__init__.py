@@ -12,8 +12,11 @@ from .faults import ARMABLE_POINTS, CRASH_POINTS, FaultPlane, KNCrash
 from .hashring import HashRing, stable_hash
 from .linearizability import Op, check_history, check_key_history
 from .mnode import Action, EpochStats, PolicyConfig, PolicyEngine
-from .netmodel import DEFAULT_MODEL, NetModel
+from .netmodel import (ArrivalProcess, DEFAULT_MODEL, NetModel,
+                       PhasedArrival)
 from .ownership import OwnershipMap, ReconfigEvent
+from .requestplane import (OpRecord, RequestPlane, RequestPlaneConfig,
+                           RequestPlaneResult)
 from .simulate import TimedSimulation
 from .transition import (PLAN_STATS, DacWindowPlan, StaticWindowPlan,
                          CloverReadPlan, plan_clover_reads,
@@ -29,7 +32,9 @@ __all__ = [
     "HashRing",
     "stable_hash", "Op", "check_history", "check_key_history", "Action",
     "EpochStats", "PolicyConfig", "PolicyEngine", "NetModel",
-    "DEFAULT_MODEL", "OwnershipMap", "ReconfigEvent", "TimedSimulation",
+    "DEFAULT_MODEL", "ArrivalProcess", "PhasedArrival", "OpRecord",
+    "RequestPlane", "RequestPlaneConfig", "RequestPlaneResult",
+    "OwnershipMap", "ReconfigEvent", "TimedSimulation",
     "PLAN_STATS", "DacWindowPlan", "StaticWindowPlan", "CloverReadPlan",
     "plan_dac_window", "plan_static_window", "plan_clover_reads",
     "reset_plan_stats",

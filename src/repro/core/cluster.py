@@ -507,14 +507,14 @@ class DinomoCluster:
         return value, rts, True
 
     def write(self, key: int, value, kn_name: str | None = None,
-              delete: bool = False):
+              delete: bool = False, req_id: int = -1):
         kn_name = kn_name or self.route(key)
         kn = self.kns[kn_name]
         if not kn.available or not kn.alive:
             kn.stats.refused += 1
             return 0.0, False
         if self.variant.name == "clover":
-            return self._clover_write(kn, key, value, delete)
+            return self._clover_write(kn, key, value, delete, req_id)
         kn.stats.ops += 1
         kn.stats.writes += 1
         self._seq += 1
@@ -524,7 +524,8 @@ class DinomoCluster:
         replicated = (self.variant.selective_replication
                       and self.ownership.is_replicated(key) and not delete)
         ptr, rotated = self.pool.log_write(kn.name, logical_key,
-                                           None if delete else value, length)
+                                           None if delete else value, length,
+                                           req_id=req_id)
         if self.pool.write_blocked(kn.name):
             kn.stats.write_stalls += 1
             self.pool.merge_budget(self.pool.segment_capacity)
@@ -566,13 +567,15 @@ class DinomoCluster:
         kn.stats.rts += rts
         return value, rts, True
 
-    def _clover_write(self, kn: KVSNode, key: int, value, delete: bool):
+    def _clover_write(self, kn: KVSNode, key: int, value, delete: bool,
+                      req_id: int = -1):
         kn.stats.ops += 1
         kn.stats.writes += 1
         length = 0 if delete else self.value_bytes
         logical_key = -key - 1 if delete else key
         ptr, _ = self.pool.log_write(kn.name, logical_key,
-                                     None if delete else value, length)
+                                     None if delete else value, length,
+                                     req_id=req_id)
         self.pool.merge_all(kn.name)    # Clover updates metadata in place
         rts = 2.0                       # out-of-place append + link/CAS
         self.versions[key] = self.versions.get(key, 0) + 1
@@ -597,8 +600,8 @@ class DinomoCluster:
     # (property-tested in tests/test_dataplane.py + test_writeplane.py).
     # ---------------------------------------------------------------------
     def execute_batch(self, kinds, keys, *, value=None, values=None,
-                      blocked_kns=(), collect_values: bool = False
-                      ) -> "BatchResult":
+                      blocked_kns=(), collect_values: bool = False,
+                      req_ids=None) -> "BatchResult":
         """Execute a batch of operations in submission order.
 
         kinds: (N,) array, 0 == read, 1 == write, 2 == delete
@@ -607,9 +610,15 @@ class DinomoCluster:
         blocked_kns: KN names whose ops are dropped before execution
             (the timed simulation's outage windows)
         collect_values: materialize read results (costs a python pass)
+        req_ids: optional (N,) int array of client request IDs (-1 for
+            none); write entries carry them into the durable log so the
+            open-loop request plane's retries deduplicate exactly-once
+            (DPMPool.req_index)
         """
         keys = np.ascontiguousarray(np.asarray(keys, dtype=np.int64))
         kinds = np.asarray(kinds, dtype=np.uint8)
+        if req_ids is not None:
+            req_ids = np.asarray(req_ids, dtype=np.int64)
         n = keys.shape[0]
         out_values: list | None = [None] * n if collect_values else None
         if n == 0 or not self.kns:
@@ -625,20 +634,22 @@ class DinomoCluster:
                 # (and every batch re-establishes) empty active logs
                 return self._execute_batch_clover(kinds, keys, value,
                                                   values, blocked_kns,
-                                                  out_values)
+                                                  out_values, req_ids)
             return self._execute_batch_fused(kinds, keys, value, values,
-                                             blocked_kns, out_values)
+                                             blocked_kns, out_values,
+                                             req_ids)
         if not all(isinstance(k.cache, (ArrayDAC, ArrayStaticCache))
                    for k in self.kns.values()):
             # reference caches have no vectorized plane: run the fused
             # scalar loop (same per-op semantics, minus driver overhead)
             return self._execute_batch_fused(kinds, keys, value, values,
-                                             blocked_kns, out_values)
+                                             blocked_kns, out_values,
+                                             req_ids)
         return self._execute_batch_spans(kinds, keys, value, values,
-                                         blocked_kns, out_values)
+                                         blocked_kns, out_values, req_ids)
 
     def _execute_batch_spans(self, kinds, keys, value, values, blocked_kns,
-                             out_values) -> "BatchResult":
+                             out_values, req_ids=None) -> "BatchResult":
         names = list(self.kns.keys())
         name_idx = {nm: j for j, nm in enumerate(names)}
         n = keys.shape[0]
@@ -679,7 +690,7 @@ class DinomoCluster:
         # ----- stage the write plane ---------------------------------------
         pool = self.pool
         plan = self._build_write_plan(kinds, keys, kn_ids, live, names,
-                                      value, values)
+                                      value, values, req_ids)
 
         # ----- per-KN windows + predicted-miss probe prefetch --------------
         # (one vectorized CLHT gather replaces per-key chain walks; each
@@ -790,7 +801,7 @@ class DinomoCluster:
                            keys[exec_mask], out_values)
 
     def _build_write_plan(self, kinds, keys, kn_ids, live, names, value,
-                          values) -> "_WritePlan":
+                          values, req_ids=None) -> "_WritePlan":
         """Stage every live write's log append up front: one bulk heap
         extension in global write order (pointer values are observable,
         so allocation order must match the per-op sequence) with the
@@ -843,6 +854,8 @@ class DinomoCluster:
             kn._pending_flush = (kn._pending_flush + m) % kn.write_batch
             logical = np.where(wdel[sel], -wkeys[sel] - 1, wkeys[sel])
             pl = ptrs[sel].tolist()
+            rq = [-1] * m if req_ids is None \
+                else req_ids[wpos[sel]].tolist()
             # segment ranges: the active segment takes the first
             # cap - c0 staged entries, fresh segments take cap each
             active = pool.segments[nm][-1]
@@ -876,7 +889,7 @@ class DinomoCluster:
             rotations.extend(zip(rpos.tolist(), itertools.repeat(nm)))
             plan.segq[nm] = segq
             plan.rot_done[nm] = 0
-            plan.staged[nm] = (logical.tolist(), pl)
+            plan.staged[nm] = (logical.tolist(), pl, rq)
             plan.wpos_by_name[nm] = wpos[sel]
         rotations.sort(key=lambda t: t[0])
         plan.rotations = rotations
@@ -911,17 +924,23 @@ class DinomoCluster:
             if j is not None:
                 # j staged entries of this fill sealed; the (j+1)-th
                 # landed torn (its seal byte never made it to DPM)
-                lk, pl = plan.staged[nm]
+                lk, pl, rq = plan.staged[nm]
                 seg.entries.extend(zip(lk[lo:lo + j + 1],
                                        pl[lo:lo + j + 1]))
                 seg.sealed.extend([True] * j + [False])
+                seg.reqs.extend(rq[lo:lo + j + 1])
                 seg.valid += j + 1
+                # only the sealed prefix durably applied; the torn
+                # entry's request stays unregistered so its retry lands
+                pool.register_reqs(rq[lo:lo + j], pl[lo:lo + j])
                 raise KNCrash(nm, "log.pre_seal")
         if not final:
-            lk, pl = plan.staged[nm]
+            lk, pl, rq = plan.staged[nm]
             seg.entries.extend(zip(lk[lo:hi], pl[lo:hi]))
             seg.sealed.extend([True] * (hi - lo))
+            seg.reqs.extend(rq[lo:hi])
             seg.valid += hi - lo
+            pool.register_reqs(rq[lo:hi], pl[lo:hi])
             plan.rot_done[nm] = k + 1
             if fp is not None and fp.armed and \
                     fp.take_crash("log.rotation", nm, 1) is not None:
@@ -936,10 +955,12 @@ class DinomoCluster:
             return
         # batch end: the remaining range (if any) is the partial tail
         if hi > lo:
-            lk, pl = plan.staged[nm]
+            lk, pl, rq = plan.staged[nm]
             seg.entries.extend(zip(lk[lo:hi], pl[lo:hi]))
             seg.sealed.extend([True] * (hi - lo))
+            seg.reqs.extend(rq[lo:hi])
             seg.valid += hi - lo
+            pool.register_reqs(rq[lo:hi], pl[lo:hi])
             plan.rot_done[nm] = k + 1
 
     # ----- window processing -----------------------------------------------
@@ -1691,7 +1712,8 @@ class DinomoCluster:
         yield from np.split(sp, bounds)
 
     def _execute_batch_clover(self, kinds, keys, value, values,
-                              blocked_kns, out_values) -> "BatchResult":
+                              blocked_kns, out_values,
+                              req_ids=None) -> "BatchResult":
         """The batched Clover plane (shared-everything, version-chain
         cache): client routing draws the rng per op exactly as the
         scalar path, version-counter checks and shortcut fills run
@@ -1789,6 +1811,10 @@ class DinomoCluster:
             seg = PySegment(cap, nm)
             seg.entries.append((-k - 1 if delete else k, ptr))
             seg.sealed.append(True)
+            rid = -1 if req_ids is None else int(req_ids[i])
+            seg.reqs.append(rid)
+            if rid >= 0:
+                pool.req_index[rid] = ptr
             seg.valid = 1
             seg.merged_upto = 1
             heap_seg.append(seg)
@@ -1895,7 +1921,7 @@ class DinomoCluster:
                            out_values)
 
     def _execute_batch_fused(self, kinds, keys, value, values, blocked_kns,
-                             out_values):
+                             out_values, req_ids=None):
         blocked = set(blocked_kns)
         per_kn: dict[str, int] = {}
         writes = 0
@@ -1911,16 +1937,18 @@ class DinomoCluster:
                 continue
             exec_idx.append(i)
             per_kn[kn] = per_kn.get(kn, 0) + 1
+            rid = -1 if req_ids is None else int(req_ids[i])
             if kinds[i] == 0:
                 r = read(key, kn)
                 if out_values is not None:
                     out_values[i] = r[0]
             elif kinds[i] == 2:
                 writes += 1
-                write(key, None, kn, delete=True)
+                write(key, None, kn, delete=True, req_id=rid)
             else:
                 writes += 1
-                write(key, self._value_at(i, value, values), kn)
+                write(key, self._value_at(i, value, values), kn,
+                      req_id=rid)
         idx = np.asarray(exec_idx, dtype=np.int64)
         return BatchResult(len(exec_idx), writes, per_kn, keys[idx],
                            out_values)

@@ -66,6 +66,14 @@ class DPMPool:
         # wall-clock spent inside merge_budget/merge_all: the bench's
         # per-row merge wall-time share (PR 4 tracking)
         self.merge_wall_s = 0.0
+        # exactly-once retry contract (the open-loop request plane):
+        # request IDs ride inside durable log entries; this table maps a
+        # *sealed* entry's request ID to its heap pointer, so a client
+        # retry of an already-applied write deduplicates instead of
+        # double-applying.  Derived state: recovery unregisters IDs
+        # whose torn entries were discarded (the retry then applies
+        # fresh -- still exactly once overall).
+        self.req_index: dict[int, int] = {}
         # indirection table for replicated keys: key -> ptr  (CAS target)
         self.indirect: dict[int, int] = {}
         self._indirect_version = 0
@@ -127,7 +135,22 @@ class DPMPool:
         self.heap_seg.extend([None] * (len(self.heap_val) - base))
         return base
 
-    def fill_segments_batch(self, kn: str, keys, ptrs) -> list[PySegment]:
+    def register_reqs(self, req_ids, ptrs) -> None:
+        """Record sealed entries' request IDs (-1 entries skipped): the
+        durable applied-set the exactly-once retry contract dedups
+        against."""
+        ri = self.req_index
+        for r, p in zip(req_ids, ptrs):
+            if r >= 0:
+                ri[r] = p
+
+    def req_applied(self, req_id: int) -> bool:
+        """Has a *sealed* log entry for this request ID landed?  The
+        KN-side dedup check a retry pays one RT for."""
+        return req_id in self.req_index
+
+    def fill_segments_batch(self, kn: str, keys, ptrs,
+                            req_ids=None) -> list[PySegment]:
         """Append a run of staged (key, ptr) entries to the KN's log,
         creating (but NOT enqueuing) rotated segments: the caller must
         replay the rotation events in global op order, because per-op
@@ -160,11 +183,17 @@ class DPMPool:
                     # torn (value bytes written, seal byte lost)
                     ki = keys[i:i + j + 1]
                     pi = ptrs[i:i + j + 1]
+                    ri = ([-1] * (j + 1) if req_ids is None
+                          else req_ids[i:i + j + 1])
                     seg.entries.extend(zip(ki, pi))
                     seg.sealed.extend([True] * j + [False])
+                    seg.reqs.extend(ri)
                     seg.valid += j + 1
                     for p in pi:
                         hs[p] = seg
+                    # only the sealed prefix is applied; the torn
+                    # entry's request stays retryable
+                    self.register_reqs(ri[:j], pi[:j])
                     raise KNCrash(kn, "log.pre_seal")
             ki = keys[i:i + take]
             pi = ptrs[i:i + take]
@@ -173,6 +202,12 @@ class DPMPool:
             seg.valid += take
             for p in pi:
                 hs[p] = seg
+            if req_ids is None:
+                seg.reqs.extend([-1] * take)
+            else:
+                ri = req_ids[i:i + take]
+                seg.reqs.extend(ri)
+                self.register_reqs(ri, pi)
             i += take
             if len(seg.entries) >= cap:
                 # crash at the rotation boundary: the segment is full
@@ -189,20 +224,21 @@ class DPMPool:
                 self.gc.segments_created += 1
         return rotated
 
-    def log_write_batch(self, kn: str, keys, values, lengths):
+    def log_write_batch(self, kn: str, keys, values, lengths,
+                        req_ids=None):
         """Batched ``log_write``: one heap extension + one segment fill
         for a run of same-KN entries, rotated segments enqueued for
         async merge in order. Element-wise equivalent to per-entry
         log_write calls. Returns (ptrs, rotations)."""
         base = self.alloc_values_batch(values, lengths)
         ptrs = list(range(base, base + len(keys)))
-        rotated = self.fill_segments_batch(kn, keys, ptrs)
+        rotated = self.fill_segments_batch(kn, keys, ptrs, req_ids=req_ids)
         for seg in rotated:
             self.merge_backlog.append((seg, 0))
         return ptrs, len(rotated)
 
     def log_write(self, kn: str, key: int, value, length: int,
-                  sealed: bool = True) -> tuple[int, bool]:
+                  sealed: bool = True, req_id: int = -1) -> tuple[int, bool]:
         """Append one entry to the KN's active segment. Returns
         (ptr, rotated): ``rotated`` tells the caller a segment filled up
         and was queued for async merge -- the KN must block if its
@@ -212,10 +248,13 @@ class DPMPool:
         if fp is not None and sealed and \
                 fp.take_crash("log.pre_seal", kn, 1) is not None:
             ptr = self.alloc_value(value, length, seg)
-            seg.append(key, ptr, sealed=False)     # seal byte never landed
+            # seal byte never landed: the request stays retryable
+            seg.append(key, ptr, sealed=False, req=req_id)
             raise KNCrash(kn, "log.pre_seal")
         ptr = self.alloc_value(value, length, seg)
-        seg.append(key, ptr, sealed=sealed)
+        seg.append(key, ptr, sealed=sealed, req=req_id)
+        if sealed and req_id >= 0:
+            self.req_index[req_id] = ptr
         rotated = False
         if seg.full():
             if fp is not None and \
@@ -229,6 +268,21 @@ class DPMPool:
 
     def write_blocked(self, kn: str) -> bool:
         return self.unmerged_count(kn) > self.unmerged_threshold
+
+    def write_once(self, kn: str, key: int, value, length: int,
+                   req_id: int) -> tuple[int, bool]:
+        """The retry contract in one call: check-then-write.  A client
+        that timed out retries the *same* request ID; if a sealed log
+        entry for it already landed (the original attempt was applied,
+        only the ack was lost), the write is a dedup no-op -- otherwise
+        it applies fresh.  Returns (ptr, applied): ``applied`` False
+        means deduplicated.  Exactly-once overall: at most one sealed
+        entry per request ID ever exists."""
+        if req_id >= 0 and self.req_applied(req_id):
+            return self.req_index[req_id], False
+        ptr, _rotated = self.log_write(kn, key, value, length,
+                                       req_id=req_id)
+        return ptr, True
 
     # ----- asynchronous merge (DPM processors) --------------------------------
     def merge_budget(self, ops: int) -> int:
@@ -441,6 +495,7 @@ class DPMPool:
             self.gc.segments_collected += 1
             seg.entries.clear()
             seg.sealed.clear()
+            seg.reqs.clear()
 
     # ----- crash recovery (paper Sec. 3.6) ------------------------------------
     def recover_kn(self, kn: str) -> dict:
@@ -481,10 +536,16 @@ class DPMPool:
             segs = list(self.segments.get(kn, ()))
             discarded = 0
             for seg in segs:
-                for _key, ptr in seg.recover_torn():
+                for _key, ptr, req in seg.recover_torn():
                     # the torn entries' value bytes are garbage rows now
                     self.heap_val[ptr] = None
                     self.heap_seg[ptr] = None
+                    # a discarded entry was never applied: drop its
+                    # request ID so the client's retry goes through
+                    # (force_crash can tear entries whose IDs already
+                    # registered -- recovery must unregister them)
+                    if req >= 0:
+                        self.req_index.pop(req, None)
                     discarded += 1
             replayed = 0
             for seg in segs:
@@ -501,6 +562,14 @@ class DPMPool:
             for seg in segs:
                 seg.valid = self._recount_valid(seg)
                 self._maybe_collect(seg)
+            # the KN resumes serving after recovery; a crash at the
+            # rotation boundary leaves its last segment full (replayed
+            # above, but never rotated), so retried writes need a fresh
+            # active segment to land on
+            live = self.segments.setdefault(kn, [])
+            if not live or live[-1].full():
+                live.append(PySegment(self.segment_capacity, kn))
+                self.gc.segments_created += 1
             return {"kn": kn, "discarded": discarded, "replayed": replayed,
                     "repaired_indirect": repaired}
         finally:
@@ -606,6 +675,10 @@ class DPMPool:
                 if seg.valid != want:
                     problems.append(f"{kn}/seg{si}: valid counter "
                                     f"{seg.valid} != recount {want}")
+                if len(seg.reqs) != len(seg.entries):
+                    problems.append(f"{kn}/seg{si}: request-ID column "
+                                    f"misaligned ({len(seg.reqs)} != "
+                                    f"{len(seg.entries)} entries)")
         keys = self.index.keys.ravel()
         ptrs = self.index.ptrs.ravel()
         live = keys >= 0
@@ -638,6 +711,16 @@ class DPMPool:
                 # unsealed bytes through the slot
                 problems.append(f"indirect key {key}: unsealed target "
                                 f"{ptr}")
+        # exactly-once contract: an "applied" request ID must name an
+        # in-range pointer whose entry is not torn (a torn entry never
+        # happened -- claiming it applied would make a retry dedup
+        # against a lost write)
+        for req, ptr in self.req_index.items():
+            if not 0 <= ptr < nheap:
+                problems.append(f"req {req}: pointer {ptr} out of range")
+            elif ptr in torn_ptrs:
+                problems.append(f"req {req}: registered against torn "
+                                f"entry {ptr}")
         return problems
 
     # ----- index reads (one-sided) --------------------------------------------

@@ -9,10 +9,20 @@ an exhaustive Wing-Gong search (histories in tests are small).
 Events carry real-time invocation/response intervals; concurrent
 operations may be ordered either way, sequential ones must respect
 real time.
-"""
+
+Open-loop histories add *indeterminate* operations (``status=
+"maybe"``): a write whose client timed out may or may not have taken
+effect.  An indeterminate op has no response, so it never real-time-
+precedes anything, and the checker may either linearize it (its effect
+landed after invocation) or exclude it entirely (it never applied) --
+the standard treatment of info/timeout ops in Jepsen-style checkers.
+Shed operations are guaranteed clean no-ops and should simply be left
+out of the history (the request plane asserts their request IDs never
+registered)."""
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from itertools import permutations
 
@@ -25,6 +35,14 @@ class Op:
     invoke: float
     respond: float
     client: str = "c0"
+    status: str = "ok"   # "ok" (definite) | "maybe" (indeterminate)
+
+
+def _eff_respond(op: Op) -> float:
+    """Indeterminate ops have no observed response: they constrain no
+    real-time order (their linearization point can be arbitrarily
+    late)."""
+    return math.inf if op.status != "ok" else op.respond
 
 
 def _check_sequence(ops: list[Op], initial) -> bool:
@@ -42,30 +60,30 @@ def _check_sequence(ops: list[Op], initial) -> bool:
 def _respects_realtime(order: list[Op]) -> bool:
     for i, a in enumerate(order):
         for b in order[i + 1:]:
-            if b.respond < a.invoke:     # b finished before a started
+            if _eff_respond(b) < a.invoke:   # b finished before a started
                 return False
     return True
 
 
 def check_key_history(ops: list[Op], initial=None,
                       max_exhaustive: int = 8) -> bool:
-    """True iff the per-key history is linearizable."""
+    """True iff the per-key history is linearizable.  Ops with
+    ``status="maybe"`` may be included or excluded by the search."""
     ops = sorted(ops, key=lambda o: o.invoke)
-    if len(ops) <= max_exhaustive:
-        for perm in permutations(ops):
-            order = list(perm)
-            if _respects_realtime(order) and _check_sequence(order, initial):
-                return True
-        return False
-    # larger histories: greedy DFS over linearization points
-    return _dfs(ops, initial)
+    if any(o.status != "ok" for o in ops) or len(ops) > max_exhaustive:
+        return _dfs(ops, initial)
+    for perm in permutations(ops):
+        order = list(perm)
+        if _respects_realtime(order) and _check_sequence(order, initial):
+            return True
+    return False
 
 
 def _dfs(pending: list[Op], value) -> bool:
     if not pending:
         return True
     # candidates: ops whose invocation precedes every other response
-    min_resp = min(o.respond for o in pending)
+    min_resp = min(_eff_respond(o) for o in pending)
     for i, op in enumerate(pending):
         if op.invoke > min_resp:
             continue
@@ -75,6 +93,13 @@ def _dfs(pending: list[Op], value) -> bool:
         nxt = op.value if op.kind == "write" else value
         if _dfs(rest, nxt):
             return True
+    # exclusion branches: an indeterminate op may simply never have
+    # taken effect -- drop it and retry (exclusions commute, and test
+    # histories are small, so the duplicate exploration is acceptable)
+    for i, op in enumerate(pending):
+        if op.status != "ok":
+            if _dfs(pending[:i] + pending[i + 1:], value):
+                return True
     return False
 
 

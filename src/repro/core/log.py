@@ -139,14 +139,22 @@ def merge_segment(table: CLHT, seg: LogSegment):
 # Python-plane mirror for the per-op cluster simulator.
 # --------------------------------------------------------------------------
 class PySegment:
-    """Per-KN log segment in the simulator: entries + seal + GC counters."""
+    """Per-KN log segment in the simulator: entries + seal + GC counters.
 
-    __slots__ = ("entries", "sealed", "capacity", "valid", "kn",
+    Entries optionally carry a client *request ID* (``reqs``, -1 when
+    absent): the exactly-once retry contract embeds the ID in the
+    durable log entry, so 'was this request applied?' is answered by the
+    log itself -- a retry deduplicates against sealed entries, and a
+    crash-discarded torn entry takes its request ID with it (the retry
+    then applies fresh, still exactly once overall)."""
+
+    __slots__ = ("entries", "sealed", "reqs", "capacity", "valid", "kn",
                  "merged_upto")
 
     def __init__(self, capacity: int, kn: str):
         self.entries: list[tuple[int, int]] = []   # (key, ptr)
         self.sealed: list[bool] = []
+        self.reqs: list[int] = []                  # request IDs (-1 = none)
         self.capacity = capacity
         self.valid = 0          # live values still pointed to by the index
         self.kn = kn
@@ -155,10 +163,12 @@ class PySegment:
     def full(self) -> bool:
         return len(self.entries) >= self.capacity
 
-    def append(self, key: int, ptr: int, sealed: bool = True) -> None:
+    def append(self, key: int, ptr: int, sealed: bool = True,
+               req: int = -1) -> None:
         assert not self.full()
         self.entries.append((key, ptr))
         self.sealed.append(sealed)
+        self.reqs.append(req)
         self.valid += 1
 
     def sealed_entries(self) -> list[tuple[int, int]]:
@@ -174,20 +184,23 @@ class PySegment:
             out.append((k, p))
         return out
 
-    def recover_torn(self) -> list[tuple[int, int]]:
+    def recover_torn(self) -> list[tuple[int, int, int]]:
         """Crash recovery: truncate to the longest sealed prefix,
         exactly ``recover_segment``'s semantics on the JAX plane (a torn
         entry invalidates itself and everything after it; the merge
         cursor rewinds if it had run past the prefix -- it cannot in
         healthy operation, but recovery trusts nothing). Returns the
-        discarded (key, ptr) entries so the pool can null their heap
-        rows."""
+        discarded (key, ptr, req) entries so the pool can null their
+        heap rows and unregister their request IDs (a discarded entry
+        was never applied: its retry must go through)."""
         if False not in self.sealed:
             return []
         cut = self.sealed.index(False)
-        dropped = self.entries[cut:]
+        dropped = [(k, p, r) for (k, p), r in zip(self.entries[cut:],
+                                                  self.reqs[cut:])]
         del self.entries[cut:]
         del self.sealed[cut:]
+        del self.reqs[cut:]
         self.valid -= len(dropped)
         if self.merged_upto > cut:
             self.merged_upto = cut

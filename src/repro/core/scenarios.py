@@ -46,9 +46,11 @@ import numpy as np
 from .cluster import DinomoCluster, VARIANTS
 from .faults import ARMABLE_POINTS, CRASH_POINTS, FaultPlane, KNCrash
 from .mnode import PolicyConfig
-from .netmodel import DEFAULT_MODEL, NetModel
+from .netmodel import (ArrivalProcess, DEFAULT_MODEL, NetModel,
+                       PhasedArrival)
+from .requestplane import RequestPlaneConfig
 from .simulate import TimedSimulation
-from ..data.ycsb import Workload
+from ..data.ycsb import MIXES, Workload
 
 SCENARIOS = ("churn", "storm", "crash", "composed")
 BENCH_VARIANTS = ("dinomo", "dinomo-n", "clover")
@@ -327,7 +329,199 @@ def run_scenario(scenario: str, variant: str, seed: int = 0,
     if (sim.trace and sim.trace[-1].throughput <= 0 and not with_crash
             and c.variant.architecture != "shared_nothing"):
         result.violations.append("end: throughput collapsed to zero")
-    result.events.extend(sim.event_log)
+    result.events.extend(_format_events(sim.event_log))
+    return result
+
+
+def _format_events(event_log: list[dict]) -> list[str]:
+    """Render schema'd timeline events as human-readable rows."""
+    out = []
+    for e in event_log:
+        rest = " ".join(f"{k}={v}" for k, v in e.items()
+                        if k not in ("t", "kind"))
+        out.append(f"t={e['t']:.1f} {e['kind']}"
+                   + (f" {rest}" if rest else ""))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Graceful degradation under sustained overload (the open-loop request
+# plane's SLO story): baseline -> 2x-saturation overload -> recovery,
+# one continuous run so the overload backlog really drains into the
+# recovery phase.  The policy under test: shed lowest-priority traffic
+# first, keep latency bounded for admitted ops, return to baseline
+# behavior within a bounded settle window once load drops.
+# --------------------------------------------------------------------------
+def estimated_capacity(model: NetModel, num_kns: int, mix: str,
+                       value_bytes: int = 1024,
+                       rts_per_op: float = 2.0) -> float:
+    """Closed-form saturation estimate used to place open-loop load
+    points (the bench reports measured goodput; this only anchors the
+    sweep)."""
+    r, u, ins = MIXES[mix]
+    return model.cluster_throughput(
+        num_kns=num_kns, rts_per_op=rts_per_op, value_bytes=value_bytes,
+        write_fraction=u + ins)
+
+
+@dataclass
+class OverloadResult:
+    """SLO row for one overload run; ``gates`` maps gate name ->
+    (passed, observed, bound)."""
+    variant: str
+    seed: int
+    capacity_est: float
+    phases: dict
+    counters: dict
+    gates: dict
+    violations: list[str] = field(default_factory=list)
+
+    @property
+    def passed(self) -> bool:
+        return not self.violations and all(
+            ok for ok, _obs, _bound in self.gates.values())
+
+    def row(self) -> dict:
+        return {
+            "variant": self.variant, "seed": self.seed,
+            "capacity_est": self.capacity_est, "phases": self.phases,
+            "counters": {k: v for k, v in self.counters.items()},
+            "gates": {k: {"passed": ok, "observed": obs, "bound": bound}
+                      for k, (ok, obs, bound) in self.gates.items()},
+            "violations": self.violations,
+        }
+
+
+def _phase_stats(records, lo: float, hi: float, op_scale: float) -> dict:
+    """Latency percentiles + outcome counts for ops that *arrived*
+    inside [lo, hi)."""
+    lats, completed, shed, failed, total = [], 0, 0, 0, 0
+    shed_by_prio: dict[int, int] = {}
+    for op in records:
+        if not (lo <= op.arrival < hi):
+            continue
+        total += 1
+        if op.status == "completed":
+            completed += 1
+            lats.append(op.done_t - op.arrival)
+        elif op.status == "shed":
+            shed += 1
+            shed_by_prio[op.priority] = shed_by_prio.get(op.priority,
+                                                         0) + 1
+        elif op.status == "failed":
+            failed += 1
+    out = {"offered": total, "completed": completed, "shed": shed,
+           "failed": failed, "shed_by_prio": shed_by_prio,
+           "goodput": completed / op_scale / max(hi - lo, 1e-9),
+           "p50": None, "p99": None, "p999": None}
+    if lats:
+        p50, p99, p999 = np.percentile(np.asarray(lats),
+                                       [50.0, 99.0, 99.9])
+        out.update(p50=float(p50), p99=float(p99), p999=float(p999))
+    return out
+
+
+def admitted_latency_bound(cfg: RequestPlaneConfig) -> float:
+    """Worst-case client latency of a *completed* request: every
+    attempt may burn a full deadline, plus the (jittered) exponential
+    backoffs between attempts, plus one engine quantum of slack."""
+    n = cfg.max_retries + 1
+    backoffs = cfg.backoff_s * (2.0 ** n - 1.0) * 1.25
+    return n * cfg.deadline_s + backoffs + 2 * cfg.round_s
+
+
+def run_overload(variant: str = "dinomo", seed: int = 0,
+                 smoke: bool = False, mix: str = "read_mostly_update",
+                 num_kns: int = 4, num_keys: int | None = None,
+                 plane_cfg: RequestPlaneConfig | None = None,
+                 baseline_frac: float = 0.4,
+                 overload_frac: float = 2.0,
+                 model: NetModel | None = None) -> OverloadResult:
+    """One graceful-degradation run: baseline load, sustained
+    2x-saturation overload, recovery -- continuous, so the overload
+    backlog drains into the recovery window.  Machine-checked gates:
+
+      overload_p999    admitted (completed) ops stay under the
+                       retry-closed latency bound during overload
+      shed_priority    sheds hit the lowest priority class first
+      recovery         post-settle recovery p99 and delivery return to
+                       baseline-comparable levels
+      exactly_once     no shed / never-dispatched request ID is
+                       registered in the durable log; pool integrity
+                       holds end-to-end
+    """
+    model = model or DEFAULT_MODEL
+    num_keys = num_keys or (3000 if smoke else 20_000)
+    base_s, over_s, rec_s = (0.6, 0.9, 0.9) if smoke else (2.0, 3.0, 3.0)
+    settle_s = 0.4 if smoke else 1.0
+    cfg = plane_cfg or RequestPlaneConfig()
+    c = DinomoCluster(VARIANTS[variant], num_kns=num_kns,
+                      cache_bytes=1 << 19, value_bytes=1024, model=model,
+                      num_buckets=1 << 13, segment_capacity=256,
+                      seed=seed)
+    c.load((k, f"v{k}") for k in range(num_keys))
+    wl = Workload(num_keys=num_keys, zipf=0.99, mix=mix,
+                  value_bytes=1024, seed=seed)
+    sim = TimedSimulation(c, wl.timed_batched, model=model, seed=seed)
+    cap = estimated_capacity(model, num_kns, mix)
+    arrival = PhasedArrival((
+        (base_s, ArrivalProcess(rate=baseline_frac * cap)),
+        (over_s, ArrivalProcess(rate=overload_frac * cap)),
+        (rec_s, ArrivalProcess(rate=baseline_frac * cap)),
+    ))
+    res = sim.run_open_loop(base_s + over_s + rec_s, arrival, config=cfg)
+    recs = res.records or []
+    base = _phase_stats(recs, 0.0, base_s, cfg.op_scale)
+    over = _phase_stats(recs, base_s, base_s + over_s, cfg.op_scale)
+    rec = _phase_stats(recs, base_s + over_s + settle_s,
+                       base_s + over_s + rec_s, cfg.op_scale)
+    result = OverloadResult(
+        variant=variant, seed=seed, capacity_est=cap,
+        phases={"baseline": base, "overload": over, "recovery": rec},
+        counters={k: v for k, v in res.counters.items()}, gates={})
+
+    # gate: bounded tails for admitted ops under sustained overload
+    bound = admitted_latency_bound(cfg)
+    p999 = over["p999"]
+    result.gates["overload_p999"] = (
+        p999 is not None and p999 <= bound, p999, bound)
+    # gate: sheds follow priority order (lowest class absorbs the cut)
+    sbp = over["shed_by_prio"]
+    lowest = cfg.priorities - 1
+    low_sheds = sbp.get(lowest, 0)
+    high_sheds = sum(v for p, v in sbp.items() if p != lowest)
+    total_shed = low_sheds + high_sheds
+    result.gates["shed_priority"] = (
+        total_shed == 0 or low_sheds > high_sheds,
+        {"lowest": low_sheds, "higher": high_sheds}, "lowest > higher")
+    # gate: recovery returns to baseline-comparable service after the
+    # settle window (tails within 4x baseline p99 or the absolute
+    # bound, and delivery ratio back above 95%)
+    rec_ok = rec["offered"] > 0 and rec["p99"] is not None
+    if rec_ok:
+        base_p99 = base["p99"] or bound
+        lat_ok = rec["p99"] <= max(4.0 * base_p99, 0.25 * bound)
+        deliver = rec["completed"] / rec["offered"]
+        rec_ok = lat_ok and deliver >= 0.95
+        obs = {"p99": rec["p99"], "delivery": deliver}
+    else:
+        obs = None
+    result.gates["recovery"] = (
+        bool(rec_ok), obs,
+        {"p99": "<= max(4x baseline, bound/4)", "delivery": ">= 0.95"})
+    # gate: exactly-once -- shed / never-dispatched requests left no
+    # durable trace, and the pool stays internally consistent
+    leaked = 0
+    shed_writes = 0
+    for op in recs:
+        if op.kind != 0 and op.status == "shed":
+            shed_writes += 1
+            if c.pool.req_applied(op.req_id):
+                leaked += 1
+    result.gates["exactly_once"] = (
+        leaked == 0, {"shed_writes": shed_writes, "leaked": leaked}, 0)
+    result.violations.extend(f"overload: {v}"
+                             for v in c.pool.verify_integrity())
     return result
 
 

@@ -69,9 +69,14 @@ class TimedSimulation:
         # optional FaultPlane: perturbs failure detection (delayed
         # heartbeats) -- the pool-level crash points attach to the pool
         self.faults = faults
-        # operator-visible reasons for guarded no-ops (e.g. refusing to
-        # fail/remove the last alive KN) and injected faults
-        self.event_log: list[str] = []
+        # operator-visible event timeline: guarded no-ops (e.g. refusing
+        # to fail/remove the last alive KN), injected faults, and the
+        # open-loop request plane's sheds/retries/timeouts.  Stable
+        # schema: every entry is a dict with at least {"t": <simulated
+        # seconds>, "kind": <event kind>}, plus kind-specific fields --
+        # so scenario/latency reports can correlate sheds, retries,
+        # crashes, and recoveries on one timeline.
+        self.event_log: list[dict] = []
         # per-epoch key-frequency accumulator, sparse: sorted key array
         # + aligned counts, merged once per step -- top-k extraction is
         # one argpartition over the distinct sampled keys instead of
@@ -81,6 +86,12 @@ class TimedSimulation:
         self._ef_cnts = np.empty(0, np.int64)
         self._epoch_total = 0.0
         self._next_epoch = cluster.mnode.cfg.epoch_s
+
+    def log_event(self, kind: str, **fields) -> dict:
+        """Append one schema'd event to the timeline and return it."""
+        ev = {"t": round(self.now, 6), "kind": kind, **fields}
+        self.event_log.append(ev)
+        return ev
 
     def _freq_add(self, u: np.ndarray, cnt: np.ndarray) -> None:
         """Fold one step's (sorted unique keys, counts) into the epoch
@@ -184,7 +195,11 @@ class TimedSimulation:
         util = offered_ops_per_s / max(cap, 1.0)
         queue = 1.0 / max(1.0 - min(util, 0.99), 0.01) if util > 0.7 else 1.0
         stale_penalty = 2.0 if events else 1.0   # mapping refresh hops
-        avg_lat = model.op_latency(rts, queue * stale_penalty)
+        # closed-loop queue estimate: a utilization-derived depth stands
+        # in for the open-loop plane's real per-KN queues (run_open_loop
+        # measures the real thing)
+        avg_lat = model.request_latency(
+            rts, queue_depth=queue * stale_penalty - 1.0)
         p99 = avg_lat * (4.0 + 8.0 * max(util - 0.8, 0.0) * 5.0)
         if blocked > 0:
             # requests to blocked owners wait for the outage to clear
@@ -320,9 +335,8 @@ class TimedSimulation:
             if len(alive) <= 1 and action.node in alive:
                 # removing the last alive KN would leave an empty ring;
                 # refuse with a reason rather than corrupt routing
-                self.event_log.append(
-                    f"t={self.now:.1f} refused remove_kn({action.node}): "
-                    f"last alive KN")
+                self.log_event("refused", action="remove_kn",
+                               node=action.node, reason="last alive KN")
                 return
             c.remove_kn(action.node)
             self._post_reconfig(None)
@@ -352,6 +366,35 @@ class TimedSimulation:
                     "ownership handoff"))
 
     # ------------------------------------------------------------------
+    def run_open_loop(self, duration: float, arrival, config=None,
+                      on_crash=None):
+        """Drive the cluster *open-loop* for ``duration`` seconds:
+        requests arrive on ``arrival``'s schedule (an ArrivalProcess /
+        PhasedArrival), queue at their owner KN's bounded FIFO, and
+        live through the full backpressure / deadline / retry / hedge
+        machinery (core.requestplane).  Ops sample from this
+        simulation's workload and run against the real data structures
+        through execute_batch; request-plane events land on this
+        simulation's event_log timeline.  Returns the
+        ``RequestPlaneResult`` (per-op records, latency percentiles,
+        shed/retry counters)."""
+        from .requestplane import RequestPlane, RequestPlaneConfig
+        plane = RequestPlane(
+            self.c, arrival, self.workload,
+            cfg=config or RequestPlaneConfig(), model=self.model,
+            seed=int(self.rng.integers(1 << 31)), t0=self.now,
+            event_sink=self.event_log, on_crash=on_crash)
+        res = plane.run(duration)
+        self.now += duration
+        self.log_event("open_loop_done",
+                       offered_rate=res.offered_rate,
+                       goodput=res.goodput(),
+                       completed=res.counters["completed"],
+                       shed=res.counters["shed"],
+                       retries=res.counters["retries"])
+        return res
+
+    # ------------------------------------------------------------------
     def inject_failure(self, name: str, extra_detect_s: float = 0.0) -> float:
         """Fail a KN; returns the recovery window in seconds.  Timing
         constants come from the NetModel (detect_s / handoff_s /
@@ -362,9 +405,9 @@ class TimedSimulation:
         c = self.c
         alive = self._alive_kns()
         if name not in c.kns or (len(alive) <= 1 and name in alive):
-            self.event_log.append(
-                f"t={self.now:.1f} refused inject_failure({name}): "
-                + ("unknown KN" if name not in c.kns else "last alive KN"))
+            self.log_event("refused", action="inject_failure", node=name,
+                           reason=("unknown KN" if name not in c.kns
+                                   else "last alive KN"))
             return 0.0
         detect_s = self.model.detect_s + extra_detect_s   # heartbeat miss
         if self.faults is not None:
@@ -390,6 +433,5 @@ class TimedSimulation:
                     self.outages.append(Outage(p, self.now + window,
                                                "failover"))
         self.c.mnode.note_failure(self.now)
-        self.event_log.append(f"t={self.now:.1f} failed {name}: "
-                              f"window {window * 1e3:.1f} ms")
+        self.log_event("kn_failed", node=name, window_s=window)
         return window

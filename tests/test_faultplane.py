@@ -198,6 +198,127 @@ class TestArmedCrashRecovery:
                             segment_capacity=segment_capacity)
 
 
+def retry_exactly_once_check(point: str, after: int, seed: int,
+                             writes: int = 70, key_space: int = 24,
+                             segment_capacity: int = 8,
+                             merge_every: int = 16) -> bool:
+    """ISSUE 7 retry contract, across every armable crash point: a
+    client that never saw an ack retries the same request ID through
+    ``DPMPool.write_once`` after recovery; each request must apply
+    exactly once (at most one sealed log entry ever exists for it) no
+    matter where the crash fired.  Returns whether the point fired."""
+    pool = DPMPool(num_buckets=1 << 9, segment_capacity=segment_capacity)
+    pool.register_kn("a")
+    fp = FaultPlane(seed=seed)
+    pool.faults = fp
+    fp.arm_crash(point, kn="a", after=after)
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, writes).tolist()
+
+    applied = {}            # rid -> apply count (exactly-once ledger)
+    order = []              # rids in durable-apply order
+    crashed = False
+    interrupted = None
+    for rid, k in enumerate(keys):
+        try:
+            pool.log_write("a", int(k), f"v{rid}", 4, req_id=rid)
+            applied[rid] = 1
+            order.append(rid)
+            if (rid + 1) % merge_every == 0:
+                pool.merge_budget(merge_every // 2)
+        except KNCrash as e:
+            assert e.point == point
+            crashed = True
+            if point.startswith("log."):
+                # the in-flight write is the indeterminate one; merge
+                # crashes interrupt the background merge instead, after
+                # the round's writes were all acked
+                interrupted = rid
+            break
+    if not crashed:
+        fp.disarm()
+        assert pool.verify_integrity() == []
+        return False
+
+    pool.recover_kn("a")
+    pool.faults = None
+    assert pool.verify_integrity() == [], pool.verify_integrity()
+    if interrupted is not None:
+        # indeterminate from the client's view; physically it either
+        # sealed before the crash (log.rotation: the seal and the
+        # req-index registration land before the rotation event) or
+        # tore (log.pre_seal: recovery unregistered its request ID)
+        applied[interrupted] = int(pool.req_applied(interrupted))
+        if applied[interrupted]:
+            order.append(interrupted)
+
+    # clients retry every request whose ack they never saw -- plus,
+    # adversarially, every 3rd acked one (the lost-ack duplicate)
+    for rid, k in enumerate(keys):
+        acked = applied.get(rid, 0) == 1 and rid != interrupted
+        if acked and rid % 3 != 0:
+            continue
+        _, fresh = pool.write_once("a", int(k), f"v{rid}", 4, req_id=rid)
+        if fresh:
+            applied[rid] = applied.get(rid, 0) + 1
+            order.append(rid)
+        else:
+            # a dedup hit is only legal when the request already applied
+            assert applied.get(rid, 0) == 1, rid
+
+    assert all(n == 1 for n in applied.values()), \
+        {r: n for r, n in applied.items() if n != 1}
+    # physically: no request ID owns two sealed log entries (GC can
+    # only remove entries, never duplicate them)
+    per_req: dict[int, int] = {}
+    for seg in pool.segments["a"]:
+        for sealed, r in zip(seg.sealed, seg.reqs):
+            if sealed and r >= 0:
+                per_req[r] = per_req.get(r, 0) + 1
+    dups = {r: n for r, n in per_req.items() if n > 1}
+    assert not dups, f"double-applied request IDs: {dups}"
+
+    # final state = replay of the durable-apply order
+    pool.merge_all()
+    want = {}
+    for rid in order:
+        want[keys[rid]] = f"v{rid}"
+    for key, v in want.items():
+        got = observed_value(pool, key)
+        assert got == v, f"{point}@{after} seed={seed}: " \
+            f"key {key} -> {got!r} != {v!r}"
+    return True
+
+
+class TestRetryIdempotency:
+    """Satellite: exactly-once retries across crash points."""
+
+    @pytest.mark.parametrize("point", ARMABLE_POINTS)
+    def test_each_point_fires_and_holds(self, point):
+        fired = any(retry_exactly_once_check(point, after, seed)
+                    for after in (0, 1, 3) for seed in range(3))
+        assert fired, f"{point} never fired"
+
+    @given(point=st.sampled_from(ARMABLE_POINTS),
+           after=st.integers(min_value=0, max_value=60),
+           seed=st.integers(min_value=0, max_value=2 ** 16))
+    @settings(max_examples=25, deadline=None)
+    def test_property_retry_exactly_once(self, point, after, seed):
+        retry_exactly_once_check(point, after, seed)
+
+    @pytest.mark.chaos
+    @given(point=st.sampled_from(ARMABLE_POINTS),
+           after=st.integers(min_value=0, max_value=250),
+           seed=st.integers(min_value=0, max_value=2 ** 32 - 1),
+           segment_capacity=st.sampled_from([4, 8, 32]))
+    @settings(max_examples=200, deadline=None)
+    def test_chaos_retry_sweep(self, point, after, seed,
+                               segment_capacity):
+        retry_exactly_once_check(point, after, seed, writes=200,
+                                 key_space=60,
+                                 segment_capacity=segment_capacity)
+
+
 class TestForcedCrashes:
     """force_crash imposes each point's torn state without the hooks."""
 

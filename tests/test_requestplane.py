@@ -1,0 +1,322 @@
+"""Open-loop request plane (ISSUE 7 tentpole).
+
+Covers: the deprecated ``op_latency(queue_factor=...)`` shim pinned
+against ``request_latency(queue_depth=...)`` on Table-5-style RT
+counts, the seeded arrival processes (Poisson / bursty / phased), the
+bounded-queue + backpressure + deadline + retry engine over the real
+batched data plane, exactly-once retries across an armed KN crash, the
+hedged-read path, linearizability of histories that contain timeouts /
+retries / hedges / sheds, the stable event schema, and the
+``TimedSimulation.run_open_loop`` integration.
+
+The graceful-degradation scenario gates (bounded p999 at 2x with
+shedding, lowest-priority-first, recovery SLO) live in
+``scenarios.run_overload`` and are smoke-tested in test_scenarios.py /
+enforced in benchmarks/bench_latency.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (DINOMO, DinomoCluster, FaultPlane,
+                        check_history)
+from repro.core.netmodel import (ArrivalProcess, DEFAULT_MODEL, NetModel,
+                                 PhasedArrival)
+from repro.core.requestplane import (COMPLETED, FAILED, SHED,
+                                     RequestPlane, RequestPlaneConfig)
+from repro.core.scenarios import estimated_capacity
+from repro.data import Workload
+
+MIX = "read_mostly_update"
+
+
+def make_cluster(num_kns=4, num_keys=1500, seed=0, value_bytes=256):
+    c = DinomoCluster(DINOMO, num_kns=num_kns, cache_bytes=1 << 18,
+                      value_bytes=value_bytes, num_buckets=1 << 11,
+                      segment_capacity=64, model=DEFAULT_MODEL, seed=seed)
+    c.load((k, f"v{k}") for k in range(num_keys))
+    return c
+
+
+def run_plane(c, *, load_frac, duration=0.25, seed=1, mix=MIX,
+              num_keys=1500, cfg=None, kind="poisson", on_crash=None):
+    wl = Workload(num_keys=num_keys, zipf=0.99, mix=mix,
+                  value_bytes=c.value_bytes, seed=seed)
+    cap = estimated_capacity(DEFAULT_MODEL, len(c.kns), mix,
+                             value_bytes=c.value_bytes)
+    plane = RequestPlane(c, ArrivalProcess(rate=load_frac * cap, kind=kind),
+                         wl.timed_batched, cfg=cfg or RequestPlaneConfig(),
+                         model=DEFAULT_MODEL, seed=seed, on_crash=on_crash)
+    return plane, plane.run(duration)
+
+
+class TestOpLatencyShim:
+    """Satellite: op_latency(queue_factor=...) is a deprecated shim over
+    request_latency(queue_depth=...), regression-pinned on Table-5-style
+    RT counts so the two stay numerically identical."""
+
+    # representative per-op RDMA RT counts (index probe + value RTs):
+    # cached read, uncached read, log write, replicated write, deep miss
+    TABLE5_RTS = (1.0, 2.0, 3.0, 4.4, 6.0)
+
+    @pytest.mark.parametrize("rts", TABLE5_RTS)
+    @pytest.mark.parametrize("qf", (1.0, 2.5, 8.0))
+    def test_shim_matches_request_latency(self, rts, qf):
+        m = DEFAULT_MODEL
+        with pytest.deprecated_call():
+            old = m.op_latency(rts, qf)
+        assert old == pytest.approx(
+            m.request_latency(rts, queue_depth=qf - 1.0))
+        # the old formula was queue_factor * service_time exactly
+        assert old == pytest.approx(qf * m.service_time(rts))
+
+    def test_shim_clamps_subunit_factor(self):
+        with pytest.deprecated_call():
+            lo = DEFAULT_MODEL.op_latency(2.0, 0.25)
+        assert lo == pytest.approx(DEFAULT_MODEL.service_time(2.0))
+
+    def test_two_sided_rts_forwarded(self):
+        m = DEFAULT_MODEL
+        with pytest.deprecated_call():
+            got = m.op_latency(2.0, 3.0, two_sided_rts=1.5)
+        assert got == pytest.approx(
+            m.request_latency(2.0, queue_depth=2.0, two_sided_rts=1.5))
+
+    def test_queue_depth_wait_modes(self):
+        m = NetModel()
+        svc = m.service_time(2.0)
+        assert m.request_latency(2.0) == pytest.approx(svc)
+        # self-paced wait: depth ops at this op's own service time
+        assert m.request_latency(2.0, queue_depth=4.0) \
+            == pytest.approx(5.0 * svc)
+        # drain-rate wait: depth / service_rate
+        assert m.request_latency(2.0, queue_depth=10.0,
+                                 service_rate=1000.0) \
+            == pytest.approx(10.0 / 1000.0 + svc)
+
+
+class TestArrivalProcesses:
+    def test_poisson_mean_and_determinism(self):
+        a = ArrivalProcess(rate=5000.0)
+        ts = a.arrivals(np.random.default_rng(7), 0.0, 2.0)
+        assert 0.9 * 10_000 < ts.size < 1.1 * 10_000
+        assert np.all(np.diff(ts) >= 0)
+        assert np.all((ts >= 0.0) & (ts < 2.0))
+        again = a.arrivals(np.random.default_rng(7), 0.0, 2.0)
+        assert np.array_equal(ts, again)
+
+    def test_bursty_keeps_longrun_mean_but_peaks(self):
+        a = ArrivalProcess(rate=5000.0, kind="bursty", burst_factor=4.0,
+                           burst_s=0.2)
+        ts = a.arrivals(np.random.default_rng(3), 0.0, 20.0)
+        mean = ts.size / 20.0
+        assert 0.85 * 5000 < mean < 1.15 * 5000
+        # instantaneous rate inside a burst is ~burst_factor * rate
+        # (deterministic on/off schedule: duty cycle keeps the mean)
+        on_frac = (1.0 - 0.1) / (4.0 - 0.1)
+        in_burst = (ts % (0.2 / on_frac)) < 0.2
+        burst_rate = in_burst.sum() / (on_frac * 20.0)
+        assert burst_rate > 2.0 * 5000
+
+    def test_scaled_preserves_shape(self):
+        a = ArrivalProcess(rate=8000.0, kind="bursty")
+        s = a.scaled(1e-3)
+        assert s.rate == pytest.approx(8.0)
+        assert (s.kind, s.burst_factor, s.burst_s) \
+            == (a.kind, a.burst_factor, a.burst_s)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            ArrivalProcess(rate=1.0, kind="diurnal")
+
+    def test_phased_schedule(self):
+        lo = ArrivalProcess(rate=100.0)
+        hi = ArrivalProcess(rate=10_000.0)
+        p = PhasedArrival(((1.0, lo), (1.0, hi)))
+        assert p.rate == pytest.approx(5050.0)
+        assert p.phase_at(0.5) is lo
+        assert p.phase_at(1.5) is hi
+        assert p.phase_at(99.0) is hi          # last phase extends
+        ts = p.arrivals(np.random.default_rng(0), 0.0, 2.0)
+        first = (ts < 1.0).sum()
+        second = (ts >= 1.0).sum()
+        assert second > 50 * max(first, 1)
+        scaled = p.scaled(0.5)
+        assert scaled.rate == pytest.approx(2525.0)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            RequestPlaneConfig(policy="drop")
+        with pytest.raises(ValueError):
+            RequestPlaneConfig(priorities=0)
+        with pytest.raises(ValueError):
+            RequestPlaneConfig(op_scale=0.0)
+
+
+class TestEngineBehavior:
+    def test_low_load_everything_completes(self):
+        c = make_cluster()
+        plane, res = run_plane(c, load_frac=0.25)
+        cnt = res.counters
+        assert cnt["offered"] > 100
+        assert cnt["completed"] == cnt["offered"]
+        assert cnt["shed"] == cnt["failed"] == cnt["censored"] == 0
+        pct = res.percentiles()
+        assert 0.0 < pct["p50"] < 1e-3
+        assert pct["p999"] <= plane.cfg.deadline_s
+        # timestamps are threaded through: queued <= dispatched < done
+        for op in res.records:
+            assert op.status == COMPLETED
+            assert op.arrival <= op.enq_t <= op.dispatch_t < op.done_t
+
+    def test_overload_sheds_lowest_priority_first(self):
+        c = make_cluster()
+        cfg = RequestPlaneConfig(queue_capacity=8, max_retries=1)
+        plane, res = run_plane(c, load_frac=2.5, cfg=cfg)
+        cnt = res.counters
+        assert cnt["shed"] > 0
+        by_prio = cnt["shed_by_prio"]
+        assert by_prio[-1] > by_prio[0]
+        # shed ops are clean no-ops: none of their request IDs ever
+        # reached the durable log
+        assert not any(c.pool.req_applied(r)
+                       for r in plane.never_applied_reqs)
+        # bounded queues bound the tails of admitted ops
+        assert res.percentiles()["p999"] < 10 * cfg.deadline_s
+        # goodput tops out near capacity, not at the offered rate
+        assert res.goodput() < 0.8 * res.offered_rate
+
+    def test_defer_policy_never_sheds(self):
+        c = make_cluster()
+        cfg = RequestPlaneConfig(queue_capacity=8, policy="defer",
+                                 max_retries=1)
+        _, res = run_plane(c, load_frac=2.5, cfg=cfg)
+        assert res.counters["shed"] == 0
+        assert res.counters["deferred"] > 0
+
+    def test_counters_partition_offered_ops(self):
+        c = make_cluster()
+        for frac in (0.25, 2.5):
+            plane, res = run_plane(c, load_frac=frac,
+                                   cfg=RequestPlaneConfig(queue_capacity=8))
+            cnt = res.counters
+            assert cnt["offered"] == (cnt["completed"] + cnt["shed"]
+                                      + cnt["failed"] + cnt["censored"])
+            assert cnt["completed"] == sum(cnt["completed_by_prio"])
+            assert cnt["shed"] == sum(cnt["shed_by_prio"])
+            assert not list(c.pool.verify_integrity())
+
+    def test_hedged_reads_fire_under_queueing(self):
+        c = make_cluster()
+        cfg = RequestPlaneConfig(hedge_after_s=1e-3, queue_capacity=64)
+        _, res = run_plane(c, load_frac=1.5, cfg=cfg, mix="read_only")
+        assert res.counters["hedges"] > 0
+        assert res.counters["hedge_wins"] >= 0
+
+    def test_event_schema(self):
+        c = make_cluster()
+        plane, res = run_plane(c, load_frac=2.5,
+                               cfg=RequestPlaneConfig(queue_capacity=8))
+        assert res.events, "an overloaded run must log shed events"
+        for e in res.events:
+            assert isinstance(e, dict)
+            assert isinstance(e["t"], float)
+            assert isinstance(e["kind"], str) and e["kind"]
+
+
+class TestExactlyOnceAcrossCrash:
+    def test_crash_retry_applies_exactly_once(self):
+        c = make_cluster(num_keys=800)
+        fp = FaultPlane(seed=5)
+        c.pool.faults = fp
+        fp.arm_crash("log.pre_seal", after=40)
+        cfg = RequestPlaneConfig(max_retries=3, deadline_s=0.05)
+        plane, res = run_plane(c, load_frac=0.7, num_keys=800,
+                               mix="write_heavy_update", cfg=cfg)
+        cnt = res.counters
+        assert cnt["crashes"] >= 1
+        assert cnt["retries"] > 0
+        assert any(e["kind"] == "kn_crash" for e in res.events)
+        assert any(e["kind"] == "kn_recovered" for e in res.events)
+        assert not list(c.pool.verify_integrity())
+        # every completed write's request ID is durably registered ...
+        for op in res.records:
+            if op.kind != 0 and op.status == COMPLETED:
+                assert c.pool.req_applied(op.req_id)
+        # ... no shed / never-dispatched write's ID is ...
+        assert not any(c.pool.req_applied(r)
+                       for r in plane.never_applied_reqs)
+        # ... and no request ID has two sealed log entries (at most one
+        # survives GC; duplicates would mean a retry double-applied)
+        per_req = {}
+        for segs in c.pool.segments.values():
+            for seg in segs:
+                for sealed, rid in zip(seg.sealed, seg.reqs):
+                    if sealed and rid >= 0:
+                        per_req[rid] = per_req.get(rid, 0) + 1
+        dups = {r: n for r, n in per_req.items() if n > 1}
+        assert not dups, f"double-applied request IDs: {dups}"
+
+    def test_history_linearizable_with_timeouts_retries_hedges_sheds(self):
+        c = make_cluster(num_kns=2, num_keys=12)
+        fp = FaultPlane(seed=2)
+        c.pool.faults = fp
+        fp.arm_crash("log.pre_seal", after=20)
+        cfg = RequestPlaneConfig(queue_capacity=6, deadline_s=0.01,
+                                 hedge_after_s=2e-3, op_scale=2e-4,
+                                 record_values=True)
+        plane, res = run_plane(c, load_frac=1.2, num_keys=12,
+                               duration=0.2, cfg=cfg,
+                               mix="write_heavy_update")
+        cnt = res.counters
+        # the history genuinely contains the hard cases
+        assert cnt["crashes"] >= 1 and cnt["retries"] > 0
+        assert cnt["shed"] > 0
+        statuses = {op.status for op in res.records}
+        assert SHED in statuses and COMPLETED in statuses
+        ops = plane.history()
+        assert any(o.status == "maybe" for o in ops) \
+            or cnt["failed"] == cnt["censored"] == 0
+        verdicts = check_history(ops, initial=lambda k: f"v{k}")
+        bad = [k for k, ok in verdicts.items() if not ok]
+        assert not bad, f"non-linearizable keys: {bad}"
+        assert not list(c.pool.verify_integrity())
+
+    def test_failed_never_dispatched_writes_are_noops(self):
+        # all KNs dead except none available: route to dead owner
+        c = make_cluster(num_kns=2, num_keys=100)
+        for kn in c.kns.values():
+            kn.alive = False
+        cfg = RequestPlaneConfig(max_retries=1, backoff_s=1e-3)
+        plane, res = run_plane(c, load_frac=0.1, num_keys=100,
+                               duration=0.1, cfg=cfg)
+        cnt = res.counters
+        assert cnt["refused"] > 0
+        assert cnt["completed"] == 0
+        assert cnt["failed"] == cnt["offered"]
+        writes = [op for op in res.records if op.kind != 0]
+        assert writes and all(op.status == FAILED for op in writes)
+        assert sorted(plane.never_applied_reqs) \
+            == sorted(op.req_id for op in writes)
+        assert not any(c.pool.req_applied(r)
+                       for r in plane.never_applied_reqs)
+
+
+class TestRunOpenLoop:
+    def test_timed_simulation_integration(self):
+        from repro.core import TimedSimulation
+        c = make_cluster()
+        wl = Workload(num_keys=1500, zipf=0.99, mix=MIX,
+                      value_bytes=256, seed=0)
+        sim = TimedSimulation(c, wl.timed_batched, model=DEFAULT_MODEL,
+                              dt=1.0, sample_ops=10)
+        t0 = sim.now
+        cap = estimated_capacity(DEFAULT_MODEL, 4, MIX, value_bytes=256)
+        res = sim.run_open_loop(0.2, ArrivalProcess(rate=0.3 * cap))
+        assert sim.now == pytest.approx(t0 + 0.2)
+        assert res.counters["completed"] > 0
+        done = [e for e in sim.event_log if e["kind"] == "open_loop_done"]
+        assert len(done) == 1
+        assert done[0]["completed"] == res.counters["completed"]
+        # request-plane events share the simulation's timeline sink
+        assert res.events is sim.event_log
