@@ -127,7 +127,7 @@ def check_slos(rows: list[dict], overload_row: dict) -> list[str]:
 
 
 def main(smoke: bool = False, seed: int = 0):
-    t0 = time.time()
+    t0 = time.perf_counter()
     rows = []
     for mix in MIX_SWEEP:
         for frac in LOAD_SWEEP:
@@ -136,7 +136,7 @@ def main(smoke: bool = False, seed: int = 0):
         # 4x peaks -- the tail cost of burstiness at fixed mean load
         rows.append(run_point(mix, 0.9, "bursty", seed, smoke))
     overload = run_overload(seed=seed, smoke=smoke).row()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     failures = check_slos(rows, overload)
 
     payload = {

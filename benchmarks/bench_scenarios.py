@@ -57,9 +57,9 @@ def check_slos(results) -> list[str]:
 
 def main(smoke: bool = False, seed: int = 0):
     cfg = ScenarioConfig.smoke() if smoke else ScenarioConfig()
-    t0 = time.time()
+    t0 = time.perf_counter()
     results = run_suite(seed=seed, smoke=smoke)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     failures = check_slos(results)
 
     payload = {

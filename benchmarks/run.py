@@ -94,7 +94,7 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         print(f"\n===== {name} =====", flush=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             us, derived = fn(args.fast)
             lines.append(csv_line(name, us, derived))
@@ -103,7 +103,7 @@ def main() -> None:
             traceback.print_exc()
             lines.append(csv_line(name, 0.0,
                                   f"ERROR:{type(e).__name__}:{e}"))
-        print(f"===== {name} done in {time.time() - t0:.0f}s =====",
+        print(f"===== {name} done in {time.perf_counter() - t0:.0f}s =====",
               flush=True)
 
     print("\n# ===== summary: name,us_per_call,derived =====")

@@ -1,0 +1,150 @@
+"""Repo-specific static-analysis framework (``python -m repro.analysis``).
+
+DINOMO's correctness conventions -- pure planning halves, a closed
+registry of crash points, seeded determinism, oracle-backed kernels,
+dead deprecated shims -- are invariants generic linters cannot see.
+This package checks them by AST: each pass in :mod:`repro.analysis.passes`
+walks the parsed tree of the relevant files and emits
+:class:`Finding` objects with a *stable fingerprint* (hashed from the
+pass, file, and symbol -- never the line number, so findings survive
+unrelated line drift).
+
+Workflow:
+
+- ``python -m repro.analysis``          report all findings
+- ``python -m repro.analysis --strict`` exit 1 on any finding whose
+  fingerprint is not justified in ``baseline.json`` (the CI gate)
+- ``python -m repro.analysis --write-baseline``  grandfather the
+  current findings (each entry then needs a one-line justification)
+
+The committed baseline is expected to stay empty: true findings are
+fixed at introduction time; only intentional, justified exceptions may
+live there.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+__all__ = ["Finding", "Corpus", "run_passes", "load_baseline",
+           "write_baseline", "repo_root", "BASELINE_PATH"]
+
+BASELINE_PATH = Path(__file__).with_name("baseline.json")
+
+
+def repo_root() -> Path:
+    """The repo checkout this package was imported from
+    (``src/repro/analysis`` -> three levels up)."""
+    return Path(__file__).resolve().parents[3]
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One invariant violation.
+
+    ``symbol`` is the stable anchor (function / member / call target)
+    the finding is about; the fingerprint hashes ``pass:file:symbol:
+    detail`` so it survives line renumbering but changes when the
+    violation itself changes."""
+
+    pass_name: str
+    file: str                   # path relative to the analyzed root
+    line: int
+    severity: str               # "error" | "warn"
+    symbol: str
+    message: str
+    detail: str = ""            # extra fingerprint discriminator
+
+    @property
+    def fingerprint(self) -> str:
+        h = hashlib.sha256(
+            f"{self.pass_name}:{self.file}:{self.symbol}:{self.detail}"
+            .encode()).hexdigest()
+        return h[:12]
+
+    def render(self) -> str:
+        return (f"{self.file}:{self.line}: [{self.pass_name}] "
+                f"{self.severity}: {self.message} "
+                f"(fp={self.fingerprint})")
+
+
+@dataclass
+class Corpus:
+    """Lazy, cached view of the files a run analyzes.
+
+    Rooted at a repo checkout (the real tree or a test fixture tree
+    with the same ``src/repro`` / ``tests`` / ``benchmarks`` shape);
+    passes only ever go through these accessors, so fixture trees and
+    the real tree are analyzed identically."""
+
+    root: Path
+    _cache: dict = field(default_factory=dict)
+
+    def read(self, rel: str) -> str | None:
+        """Source of ``root/rel``, or None if absent."""
+        ent = self._entry(rel)
+        return ent[0] if ent else None
+
+    def tree(self, rel: str) -> ast.AST | None:
+        """Parsed AST of ``root/rel``, or None if absent/unparsable."""
+        ent = self._entry(rel)
+        return ent[1] if ent else None
+
+    def _entry(self, rel: str):
+        if rel not in self._cache:
+            p = self.root / rel
+            if not p.is_file():
+                self._cache[rel] = None
+            else:
+                src = p.read_text()
+                try:
+                    self._cache[rel] = (src, ast.parse(src, filename=rel))
+                except SyntaxError:
+                    self._cache[rel] = (src, None)
+        return self._cache[rel]
+
+    def py_files(self, sub: str, recursive: bool = True) -> list[str]:
+        """Sorted relative paths of ``.py`` files under ``root/sub``.
+        Non-recursive listing is used for ``tests/`` so fixture
+        mini-trees below ``tests/fixtures`` never leak into a real-tree
+        run."""
+        base = self.root / sub
+        if not base.is_dir():
+            return []
+        it = base.rglob("*.py") if recursive else base.glob("*.py")
+        return sorted(str(p.relative_to(self.root)) for p in it)
+
+
+def run_passes(corpus: Corpus, passes=None) -> list[Finding]:
+    from .passes import ALL_PASSES
+    out: list[Finding] = []
+    for mod in (passes if passes is not None else ALL_PASSES):
+        out.extend(mod.run(corpus))
+    return sorted(out, key=lambda f: (f.file, f.line, f.pass_name))
+
+
+def load_baseline(path: Path = BASELINE_PATH) -> dict[str, dict]:
+    if not path.is_file():
+        return {}
+    data = json.loads(path.read_text())
+    return data.get("findings", {})
+
+
+def write_baseline(findings: list[Finding],
+                   path: Path = BASELINE_PATH) -> None:
+    data = {
+        "comment": "Grandfathered findings. Every entry needs a one-line"
+                   " justification; fix-and-remove beats justifying.",
+        "findings": {
+            f.fingerprint: {
+                "pass": f.pass_name, "file": f.file, "symbol": f.symbol,
+                "message": f.message,
+                "justification": "TODO: justify or fix",
+            } for f in findings
+        },
+    }
+    path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")

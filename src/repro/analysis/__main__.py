@@ -1,0 +1,64 @@
+"""CLI: ``python -m repro.analysis [--strict] [--write-baseline]``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import (BASELINE_PATH, Corpus, load_baseline, repo_root,
+               run_passes, write_baseline)
+from .passes import ALL_PASSES, BY_NAME
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-specific invariant lints (see repro.analysis "
+                    "docstring for the pass catalog)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="tree to analyze (default: this checkout)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any non-baselined finding (CI gate)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather current findings into the baseline "
+                         "(entries then need justifications)")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=sorted(BY_NAME), default=None,
+                    help="run only the named pass (repeatable)")
+    args = ap.parse_args(argv)
+
+    corpus = Corpus(args.root or repo_root())
+    passes = [BY_NAME[p] for p in args.passes] if args.passes \
+        else list(ALL_PASSES)
+    findings = run_passes(corpus, passes)
+
+    if args.write_baseline:
+        write_baseline(findings)
+        print(f"wrote {len(findings)} finding(s) to {BASELINE_PATH}")
+        return 0
+
+    baseline = load_baseline()
+    fresh = [f for f in findings if f.fingerprint not in baseline]
+    grandfathered = [f for f in findings if f.fingerprint in baseline]
+    for f in fresh:
+        print(f.render())
+    for f in grandfathered:
+        just = baseline[f.fingerprint].get("justification", "")
+        print(f"{f.render()} [baselined: {just}]")
+    stale = sorted(set(baseline)
+                   - {f.fingerprint for f in findings})
+    for fp in stale:
+        print(f"note: baseline entry {fp} no longer fires; remove it "
+              f"from {BASELINE_PATH.name}")
+
+    n_passes = len(passes)
+    print(f"{len(findings)} finding(s) from {n_passes} pass(es); "
+          f"{len(fresh)} new, {len(grandfathered)} baselined")
+    if args.strict and fresh:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""Pass registry.  Each pass module exposes ``NAME`` and
+``run(corpus) -> list[Finding]``."""
+
+from __future__ import annotations
+
+from . import (crash_points, deprecations, determinism, kernel_hygiene,
+               plan_purity)
+
+ALL_PASSES = (plan_purity, crash_points, determinism, kernel_hygiene,
+              deprecations)
+
+BY_NAME = {m.NAME: m for m in ALL_PASSES}
+
+__all__ = ["ALL_PASSES", "BY_NAME"]

@@ -1,0 +1,78 @@
+"""deprecation/exactness coverage: shims stay dead, batched APIs stay
+tested.
+
+Two rot vectors this pass closes:
+
+- **Deprecated shims growing new callers.**  ``NetModel.op_latency``
+  survives only for external compatibility (the regression pin calls
+  it under ``pytest.deprecated_call``); any *internal* caller would
+  silently route latency through the superseded queue-factor
+  heuristic.  Flagged: every ``.op_latency`` access in ``src/repro``
+  and ``benchmarks`` outside its defining module.
+
+- **Batched public APIs losing their equivalence tests.**  The house
+  style is that every batched path is decision-for-decision identical
+  to the scalar reference, enforced by tests that call the API by
+  name.  A batched entry point no test names is one refactor away from
+  rotting; each must appear in at least one top-level ``tests/*.py``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import Corpus, Finding
+
+NAME = "deprecations"
+
+DEPRECATED_ATTRS = {"op_latency": "src/repro/core/netmodel.py"}
+SCOPES = ("src/repro", "benchmarks")
+
+# batched public surface that must be named by >=1 test
+BATCHED_APIS = ("execute_batch", "insert_batch", "log_write_batch",
+                "apply_plan", "apply_merge_plan", "merge_entries_batch",
+                "write_once")
+
+
+def _def_site(corpus: Corpus, name: str) -> tuple[str, int]:
+    """First definition of ``name`` in src/repro, for anchoring
+    coverage findings."""
+    for rel in corpus.py_files("src/repro"):
+        tree = corpus.tree(rel)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == name:
+                return rel, node.lineno
+    return "src/repro", 1
+
+
+def run(corpus: Corpus) -> list[Finding]:
+    out: list[Finding] = []
+    for scope in SCOPES:
+        for rel in corpus.py_files(scope):
+            tree = corpus.tree(rel)
+            if tree is None:
+                continue
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Attribute) and \
+                        node.attr in DEPRECATED_ATTRS and \
+                        rel != DEPRECATED_ATTRS[node.attr]:
+                    out.append(Finding(
+                        NAME, rel, node.lineno, "error", node.attr,
+                        f"internal caller of deprecated "
+                        f".{node.attr}; use request_latency/"
+                        f"service_time",
+                        f"deprecated:{node.attr}:{ast.unparse(node)}"))
+
+    test_srcs = [corpus.read(rel)
+                 for rel in corpus.py_files("tests", recursive=False)]
+    for api in BATCHED_APIS:
+        if not any(src and api in src for src in test_srcs):
+            rel, line = _def_site(corpus, api)
+            out.append(Finding(
+                NAME, rel, line, "error", api,
+                f"batched public API {api!r} is not named by any "
+                f"tests/*.py equivalence test", f"untested-api:{api}"))
+    return out

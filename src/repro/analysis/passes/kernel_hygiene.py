@@ -1,0 +1,98 @@
+"""kernel-hygiene: every Pallas kernel has an oracle and env-routed
+interpret mode.
+
+The JAX plane's contract (ROADMAP) is that every kernel package ships a
+``ref.py`` oracle that ``tests/test_kernels.py`` property-tests
+against, and that interpret-vs-compiled is a *deployment* decision
+(``REPRO_PALLAS_INTERPRET`` via ``kernels/interpret.py:
+resolve_interpret``), never a hardcoded call-site constant -- a
+hardcoded ``interpret=True`` silently pins a kernel to the slow path on
+real hardware, and a hardcoded ``False`` breaks every CPU host.
+
+Checked over ``src/repro/kernels``:
+
+- each kernel package directory ships ``ref.py``;
+- each kernel package is referenced by name in
+  ``tests/test_kernels.py``;
+- no function parameter named ``interpret`` defaults to a boolean
+  constant (must be ``None``, resolved via ``resolve_interpret``);
+- no call passes ``interpret=True`` / ``interpret=False`` as a
+  constant keyword (``interpret=interpret`` pass-through and
+  ``resolve_interpret(...)`` are the sanctioned forms).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .. import Corpus, Finding
+
+NAME = "kernel-hygiene"
+
+KERNELS_DIR = "src/repro/kernels"
+TESTS_FILE = "tests/test_kernels.py"
+ROUTER_FILE = "src/repro/kernels/interpret.py"
+
+
+def _kernel_packages(corpus: Corpus) -> list[str]:
+    base = corpus.root / KERNELS_DIR
+    if not base.is_dir():
+        return []
+    return sorted(p.name for p in base.iterdir()
+                  if p.is_dir() and (p / "__init__.py").is_file())
+
+
+def run(corpus: Corpus) -> list[Finding]:
+    out: list[Finding] = []
+    test_src = corpus.read(TESTS_FILE) or ""
+    for pkg in _kernel_packages(corpus):
+        pkg_rel = f"{KERNELS_DIR}/{pkg}"
+        if corpus.read(f"{pkg_rel}/ref.py") is None:
+            out.append(Finding(
+                NAME, f"{pkg_rel}/__init__.py", 1, "error", pkg,
+                f"kernel package {pkg!r} ships no ref.py oracle",
+                f"no-ref:{pkg}"))
+        if pkg not in test_src:
+            out.append(Finding(
+                NAME, f"{pkg_rel}/__init__.py", 1, "error", pkg,
+                f"kernel package {pkg!r} is not referenced by "
+                f"{TESTS_FILE}", f"untested:{pkg}"))
+
+    for rel in corpus.py_files(KERNELS_DIR):
+        if rel == ROUTER_FILE:
+            continue
+        tree = corpus.tree(rel)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = (node.args.posonlyargs + node.args.args
+                        + node.args.kwonlyargs)
+                defaults = ([None] * (len(node.args.posonlyargs
+                                          + node.args.args)
+                                      - len(node.args.defaults))
+                            + list(node.args.defaults)
+                            + list(node.args.kw_defaults))
+                for a, d in zip(args, defaults):
+                    if a.arg == "interpret" and \
+                            isinstance(d, ast.Constant) and \
+                            isinstance(d.value, bool):
+                        out.append(Finding(
+                            NAME, rel, node.lineno, "error", node.name,
+                            f"{node.name}() hardcodes interpret="
+                            f"{d.value}; default to None and route "
+                            f"through resolve_interpret",
+                            f"hardcoded-default:{node.name}"))
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "interpret" and \
+                            isinstance(kw.value, ast.Constant) and \
+                            isinstance(kw.value.value, bool):
+                        tgt = ast.unparse(node.func)
+                        out.append(Finding(
+                            NAME, rel, node.lineno, "error", tgt,
+                            f"call to {tgt} pins interpret="
+                            f"{kw.value.value}; route through "
+                            f"resolve_interpret",
+                            f"hardcoded-kw:{tgt}"))
+    return out

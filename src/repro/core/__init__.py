@@ -8,7 +8,8 @@ from .cluster import (CLOVER, DINOMO, DINOMO_N, DINOMO_S, VARIANTS,
                       DinomoCluster, VariantConfig)
 from .dac import ArrayDAC, ArrayStaticCache, DAC, StaticCache
 from .dpm_pool import DPMPool
-from .faults import ARMABLE_POINTS, CRASH_POINTS, FaultPlane, KNCrash
+from .faults import (ALL_POINTS, ARMABLE_POINTS, CRASH_POINTS,
+                     FaultPlane, KNCrash)
 from .hashring import HashRing, stable_hash
 from .linearizability import Op, check_history, check_key_history
 from .mnode import Action, EpochStats, PolicyConfig, PolicyEngine
@@ -28,7 +29,8 @@ __all__ = [
     "DINOMO_S", "DINOMO_N",
     "CLOVER", "VARIANTS", "DAC", "ArrayDAC", "ArrayStaticCache",
     "StaticCache", "CloverCache", "ArrayCloverCache", "DPMPool",
-    "FaultPlane", "KNCrash", "CRASH_POINTS", "ARMABLE_POINTS",
+    "FaultPlane", "KNCrash", "CRASH_POINTS", "ALL_POINTS",
+    "ARMABLE_POINTS",
     "HashRing",
     "stable_hash", "Op", "check_history", "check_key_history", "Action",
     "EpochStats", "PolicyConfig", "PolicyEngine", "NetModel",

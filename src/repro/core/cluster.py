@@ -26,7 +26,8 @@ import numpy as np
 from .dac import (ArrayDAC, ArrayStaticCache, DAC, StaticCache,
                   CacheStats, CNT_HIST_MAX)
 from .dpm_pool import DPMPool
-from .faults import KNCrash
+from .faults import CRASH_POINTS, KNCrash
+from . import sanitize
 from .log import PySegment
 from .mnode import PolicyConfig, PolicyEngine
 from .netmodel import NetModel, DEFAULT_MODEL
@@ -268,6 +269,8 @@ class KVSNode:
         self.variant = variant
         self.cache = make_cache(variant.cache_policy, cache_bytes,
                                 reference=reference_cache)
+        if sanitize.enabled():
+            sanitize.guard_cache(self.cache, name)
         self.pool = pool
         self.write_batch = write_batch
         self._pending_flush = 0
@@ -300,7 +303,9 @@ class KVSNode:
         return 0.0
 
     def clear_soft_state(self):
-        self.cache.clear()
+        # reconfiguration/failure path: any peer may wipe this KN's DRAM
+        with sanitize.management():
+            self.cache.clear()
         self.segcache.clear()
 
 
@@ -429,14 +434,16 @@ class DinomoCluster:
         self.pool.install_indirect(key)
         owners = self.ownership.replicate(key, factor)
         # indirect pointers forbid value caching (paper Sec. 5.3)
-        for o in owners:
-            if o in self.kns:
-                self.kns[o].cache.demote_to_shortcut(key)
+        with sanitize.management():
+            for o in owners:
+                if o in self.kns:
+                    self.kns[o].cache.demote_to_shortcut(key)
 
     def dereplicate_key(self, key: int) -> None:
-        for o in self.ownership.owners(key):
-            if o in self.kns:
-                self.kns[o].cache.invalidate(key)
+        with sanitize.management():
+            for o in self.ownership.owners(key):
+                if o in self.kns:
+                    self.kns[o].cache.invalidate(key)
         self.ownership.dereplicate(key)
         self.pool.remove_indirect(key)
 
@@ -458,6 +465,10 @@ class DinomoCluster:
         execute_batch against the current index version -- used in place
         of the per-key index traversal on the miss path."""
         kn_name = kn_name or self.route(key)
+        with sanitize.owned(kn_name):
+            return self._read_at(key, kn_name, _probe)
+
+    def _read_at(self, key: int, kn_name: str, _probe=None):
         kn = self.kns[kn_name]
         if not kn.available or not kn.alive:
             kn.stats.refused += 1
@@ -509,6 +520,11 @@ class DinomoCluster:
     def write(self, key: int, value, kn_name: str | None = None,
               delete: bool = False, req_id: int = -1):
         kn_name = kn_name or self.route(key)
+        with sanitize.owned(kn_name):
+            return self._write_at(key, value, kn_name, delete, req_id)
+
+    def _write_at(self, key: int, value, kn_name: str,
+                  delete: bool = False, req_id: int = -1):
         kn = self.kns[kn_name]
         if not kn.available or not kn.alive:
             kn.stats.refused += 1
@@ -920,7 +936,7 @@ class DinomoCluster:
         seg, lo, hi = segq[k]
         fp = pool.faults
         if fp is not None and fp.armed and hi > lo:
-            j = fp.take_crash("log.pre_seal", nm, hi - lo)
+            j = fp.take_crash(CRASH_POINTS.LOG_PRE_SEAL, nm, hi - lo)
             if j is not None:
                 # j staged entries of this fill sealed; the (j+1)-th
                 # landed torn (its seal byte never made it to DPM)
@@ -933,7 +949,7 @@ class DinomoCluster:
                 # only the sealed prefix durably applied; the torn
                 # entry's request stays unregistered so its retry lands
                 pool.register_reqs(rq[lo:lo + j], pl[lo:lo + j])
-                raise KNCrash(nm, "log.pre_seal")
+                raise KNCrash(nm, CRASH_POINTS.LOG_PRE_SEAL)
         if not final:
             lk, pl, rq = plan.staged[nm]
             seg.entries.extend(zip(lk[lo:hi], pl[lo:hi]))
@@ -943,10 +959,10 @@ class DinomoCluster:
             pool.register_reqs(rq[lo:hi], pl[lo:hi])
             plan.rot_done[nm] = k + 1
             if fp is not None and fp.armed and \
-                    fp.take_crash("log.rotation", nm, 1) is not None:
+                    fp.take_crash(CRASH_POINTS.LOG_ROTATION, nm, 1) is not None:
                 # the filled segment sealed but was never published to
                 # the shared merge backlog; recovery must rediscover it
-                raise KNCrash(nm, "log.rotation")
+                raise KNCrash(nm, CRASH_POINTS.LOG_ROTATION)
             pool.merge_backlog.append((seg, 0))
             nxt = segq[k + 1][0] if k + 1 < len(segq) \
                 else PySegment(pool.segment_capacity, nm)
@@ -983,6 +999,12 @@ class DinomoCluster:
         with one kind-gather, split into maximal same-class runs, apply
         vectorizable runs in bulk (re-validated against the live cache
         at run boundaries), drop to the exact scalar op otherwise."""
+        with sanitize.owned(w.kn.name):
+            self._run_window_at(w, hi, keys, kinds, plan, probe_map,
+                                dkeys, dbuckets, out_values)
+
+    def _run_window_at(self, w, hi, keys, kinds, plan, probe_map, dkeys,
+                       dbuckets, out_values) -> None:
         pos = w.pos
         i0 = w.idx
         i1 = int(np.searchsorted(pos, hi, side="right"))
@@ -1684,19 +1706,21 @@ class DinomoCluster:
         length = 0 if delete else self.value_bytes
         replicated = (self.variant.selective_replication
                       and self.ownership.is_replicated(k) and not delete)
-        if replicated:
-            # atomically swing the indirect pointer: one-sided CAS
-            expect = self.pool.read_indirect(k)
-            self.pool.cas_indirect(k, expect, ptr)
-            rts += 1.0
-            kn.cache.update_pointer(k, ptr, length)
-            dkeys.add(k)       # index_lookup(k) now resolves differently
-        elif delete:
-            kn.cache.invalidate(k)
-            kn.segcache.pop(k, None)
-        else:
-            kn._segcache_put(k, ptr, length)
-            kn.cache.fill_after_write(k, ptr, length, segment_cached=True)
+        with sanitize.owned(kn.name):
+            if replicated:
+                # atomically swing the indirect pointer: one-sided CAS
+                expect = self.pool.read_indirect(k)
+                self.pool.cas_indirect(k, expect, ptr)
+                rts += 1.0
+                kn.cache.update_pointer(k, ptr, length)
+                dkeys.add(k)   # index_lookup(k) now resolves differently
+            elif delete:
+                kn.cache.invalidate(k)
+                kn.segcache.pop(k, None)
+            else:
+                kn._segcache_put(k, ptr, length)
+                kn.cache.fill_after_write(k, ptr, length,
+                                          segment_cached=True)
         st.rts += rts
 
     @staticmethod
@@ -1726,6 +1750,16 @@ class DinomoCluster:
         point). Requires (and leaves)
         empty active logs; statistics are op-for-op identical to the
         per-op path (property-tested)."""
+        # shared-everything: every KN serves (and stamps) any key, so
+        # there is no ownership partition for the sanitizer to enforce
+        with sanitize.management():
+            return self._execute_batch_clover_at(
+                kinds, keys, value, values, blocked_kns, out_values,
+                req_ids)
+
+    def _execute_batch_clover_at(self, kinds, keys, value, values,
+                                 blocked_kns, out_values,
+                                 req_ids=None) -> "BatchResult":
         pool = self.pool
         versions = self.versions
         heap = pool.heap_val
@@ -1793,7 +1827,8 @@ class DinomoCluster:
                     if cached is not None and cur > cached else 0
                 # walk the version chain from the cached cursor
                 rts += 2.0 + stale
-                cache.fill(k, cur)
+                with sanitize.owned(kn.name):
+                    cache.fill(k, cur)
                 if collect:
                     out_values[i] = heap[p_]
                 st.rts += rts
@@ -1835,7 +1870,8 @@ class DinomoCluster:
                     pool._invalidate_ptr(old)
                 pend[k] = ptr
             versions[k] = versions.get(k, 0) + 1
-            cache.fill(k, versions[k])
+            with sanitize.owned(kn.name):
+                cache.fill(k, versions[k])
             st.rts += 2.0              # out-of-place append + link/CAS
         # land the final index state (grouped bucket update); superseded
         # pointers were invalidated at their op positions above
@@ -1905,7 +1941,8 @@ class DinomoCluster:
             st.refused += refused
             if wp is None:
                 continue
-            kn.cache.apply_plan(wp)
+            with sanitize.owned(nm):
+                kn.cache.apply_plan(wp)
             st.ops += int(grp.size)
             st.reads += int(grp.size)
             st.rts += wp.rts
@@ -1992,17 +2029,19 @@ class DinomoCluster:
             return
         keys = [k for k, _ in items]
         names = list(self.kns)
-        for k in keys:
-            ptr, _ = self.pool.index_lookup(k)
-            if ptr is None:
-                continue
-            if self.variant.name == "clover":
-                kn = self.kns[names[stable_hash(("load", k)) % len(names)]]
-                kn.cache.fill(k, self.versions.get(k, 0))
-            else:
-                owner = self.ownership.primary(k)
-                self.kns[owner].cache.fill_after_write(
-                    k, ptr, self.value_bytes, segment_cached=False)
+        with sanitize.management():     # warm load fills any KN's cache
+            for k in keys:
+                ptr, _ = self.pool.index_lookup(k)
+                if ptr is None:
+                    continue
+                if self.variant.name == "clover":
+                    kn = self.kns[names[stable_hash(("load", k))
+                                        % len(names)]]
+                    kn.cache.fill(k, self.versions.get(k, 0))
+                else:
+                    owner = self.ownership.primary(k)
+                    self.kns[owner].cache.fill_after_write(
+                        k, ptr, self.value_bytes, segment_cached=False)
 
     def aggregate_stats(self) -> dict:
         tot_ops = sum(k.stats.ops for k in self.kns.values())

@@ -23,7 +23,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .clht import NumpyCLHT
-from .faults import KNCrash
+from .faults import CRASH_POINTS, KNCrash
 from .log import PySegment
 from .transition import (MERGE_PLAN_STATS, MIN_MERGE_PLAN_OPS,
                          plan_merge_window)
@@ -169,15 +169,15 @@ class DPMPool:
                 # defensively rotate a full active segment (log_write
                 # never leaves one, but a caller could)
                 if fp is not None and \
-                        fp.take_crash("log.rotation", kn, 1) is not None:
-                    raise KNCrash(kn, "log.rotation")
+                        fp.take_crash(CRASH_POINTS.LOG_ROTATION, kn, 1) is not None:
+                    raise KNCrash(kn, CRASH_POINTS.LOG_ROTATION)
                 rotated.append(seg)
                 seg = PySegment(cap, kn)
                 segs.append(seg)
                 self.gc.segments_created += 1
             take = min(cap - len(seg.entries), n - i)
             if fp is not None:
-                j = fp.take_crash("log.pre_seal", kn, take)
+                j = fp.take_crash(CRASH_POINTS.LOG_PRE_SEAL, kn, take)
                 if j is not None:
                     # j entries of this run sealed; the (j+1)-th landed
                     # torn (value bytes written, seal byte lost)
@@ -194,7 +194,7 @@ class DPMPool:
                     # only the sealed prefix is applied; the torn
                     # entry's request stays retryable
                     self.register_reqs(ri[:j], pi[:j])
-                    raise KNCrash(kn, "log.pre_seal")
+                    raise KNCrash(kn, CRASH_POINTS.LOG_PRE_SEAL)
             ki = keys[i:i + take]
             pi = ptrs[i:i + take]
             seg.entries.extend(zip(ki, pi))
@@ -216,8 +216,8 @@ class DPMPool:
                 # this returns) -- recovery must rediscover it by
                 # scanning the KN's segments
                 if fp is not None and \
-                        fp.take_crash("log.rotation", kn, 1) is not None:
-                    raise KNCrash(kn, "log.rotation")
+                        fp.take_crash(CRASH_POINTS.LOG_ROTATION, kn, 1) is not None:
+                    raise KNCrash(kn, CRASH_POINTS.LOG_ROTATION)
                 rotated.append(seg)
                 seg = PySegment(cap, kn)
                 segs.append(seg)
@@ -246,11 +246,11 @@ class DPMPool:
         seg = self.active_segment(kn)
         fp = self.faults
         if fp is not None and sealed and \
-                fp.take_crash("log.pre_seal", kn, 1) is not None:
+                fp.take_crash(CRASH_POINTS.LOG_PRE_SEAL, kn, 1) is not None:
             ptr = self.alloc_value(value, length, seg)
             # seal byte never landed: the request stays retryable
             seg.append(key, ptr, sealed=False, req=req_id)
-            raise KNCrash(kn, "log.pre_seal")
+            raise KNCrash(kn, CRASH_POINTS.LOG_PRE_SEAL)
         ptr = self.alloc_value(value, length, seg)
         seg.append(key, ptr, sealed=sealed, req=req_id)
         if sealed and req_id >= 0:
@@ -258,8 +258,8 @@ class DPMPool:
         rotated = False
         if seg.full():
             if fp is not None and \
-                    fp.take_crash("log.rotation", kn, 1) is not None:
-                raise KNCrash(kn, "log.rotation")  # never published
+                    fp.take_crash(CRASH_POINTS.LOG_ROTATION, kn, 1) is not None:
+                raise KNCrash(kn, CRASH_POINTS.LOG_ROTATION)  # never published
             self.merge_backlog.append((seg, 0))
             self.segments[kn].append(PySegment(self.segment_capacity, kn))
             self.gc.segments_created += 1
@@ -379,19 +379,19 @@ class DPMPool:
         fp = self.faults
         if fp is not None and fp.armed and n:
             kn = seg.kn
-            j = fp.take_crash("merge.mid_apply", kn, n)
+            j = fp.take_crash(CRASH_POINTS.MERGE_MID_APPLY, kn, n)
             if j is not None:
                 # a prefix of the window reached the index; the merge
                 # cursor (the caller's merged_upto advance) never did
                 for key, ptr in entries[:j]:
                     self._merge_entry(key, ptr, seg)
-                raise KNCrash(kn, "merge.mid_apply")
-            if fp.take_crash("merge.post_apply", kn, 1) is not None:
+                raise KNCrash(kn, CRASH_POINTS.MERGE_MID_APPLY)
+            if fp.take_crash(CRASH_POINTS.MERGE_POST_APPLY, kn, 1) is not None:
                 # the whole window applied; cursor/allowance accounting
                 # never ran, so recovery will replay these entries
                 for key, ptr in entries:
                     self._merge_entry(key, ptr, seg)
-                raise KNCrash(kn, "merge.post_apply")
+                raise KNCrash(kn, CRASH_POINTS.MERGE_POST_APPLY)
         if not self.vectorized or n < MIN_MERGE_PLAN_OPS:
             for key, ptr in entries:
                 self._merge_entry(key, ptr, seg)

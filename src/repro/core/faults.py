@@ -48,15 +48,51 @@ when an armed point does not fire inside the observed step).
 
 from __future__ import annotations
 
+import enum
 from dataclasses import dataclass
 
 import numpy as np
 
-CRASH_POINTS = ("log.pre_seal", "log.rotation", "merge.mid_apply",
-                "merge.post_apply", "rep.post_cas")
+
+class CRASH_POINTS(str, enum.Enum):
+    """Canonical registry of declared crash points.
+
+    Every ``take_crash`` / ``arm_crash`` / ``force_crash`` site must
+    name one of these members -- the static crash-point pass
+    (``repro.analysis``) cross-references hook sites, tests, and this
+    enum so an undeclared literal or an unhooked declaration is a lint
+    failure, not a silent gap.  Members are ``str`` subclasses whose
+    value is the wire name, so existing string-keyed comparisons,
+    dict lookups, and crash-log records keep working unchanged.
+    """
+
+    LOG_PRE_SEAL = "log.pre_seal"
+    LOG_ROTATION = "log.rotation"
+    MERGE_MID_APPLY = "merge.mid_apply"
+    MERGE_POST_APPLY = "merge.post_apply"
+    REP_POST_CAS = "rep.post_cas"
+
+    def __str__(self) -> str:  # str(member) == wire name, not member name
+        return self.value
+
+    __hash__ = str.__hash__  # interchangeable with plain str as dict key
+
+
+# declaration-ordered tuple (the enum class itself indexes by *name*)
+ALL_POINTS = tuple(CRASH_POINTS)
 # points the take_crash hooks can fire mid-operation (rep.post_cas is
 # only ever forced: the CAS race needs state the hooks don't see)
-ARMABLE_POINTS = CRASH_POINTS[:4]
+ARMABLE_POINTS = ALL_POINTS[:4]
+
+
+def _as_point(point: str) -> CRASH_POINTS:
+    """Normalize a wire name (or member) to the declared member."""
+    try:
+        return CRASH_POINTS(point)
+    except ValueError:
+        raise ValueError(
+            f"unknown crash point {point!r}; declared points: "
+            f"{[p.value for p in CRASH_POINTS]}") from None
 
 
 class KNCrash(Exception):
@@ -99,9 +135,10 @@ class FaultPlane:
     # ----- armed crashes (raise KNCrash inside the guarded paths) ---------
     def arm_crash(self, point: str, kn: str | None = None,
                   after: int = 0) -> CrashSpec:
+        point = _as_point(point)
         if point not in ARMABLE_POINTS:
-            raise ValueError(f"cannot arm {point!r}; armable points: "
-                             f"{ARMABLE_POINTS}")
+            raise ValueError(f"cannot arm {point.value!r}; armable points: "
+                             f"{[p.value for p in ARMABLE_POINTS]}")
         spec = CrashSpec(point, kn, max(int(after), 0))
         self._armed.append(spec)
         return spec
@@ -129,7 +166,7 @@ class FaultPlane:
                 return None
             j = spec.after
             self._armed.remove(spec)
-            self.crash_log.append({"point": point, "kn": kn,
+            self.crash_log.append({"point": str(point), "kn": kn,
                                    "offset": j, "forced": False})
             return j
         return None
@@ -145,11 +182,11 @@ class FaultPlane:
         applied -- some points degrade to "nothing to corrupt" when the
         KN has no matching state (a KN with an empty log has nothing to
         tear)."""
-        if point not in CRASH_POINTS:
-            raise ValueError(f"unknown crash point {point!r}")
+        point = _as_point(point)
         segs = pool.segments.get(kn, [])
-        rec = {"point": point, "kn": kn, "forced": True, "effect": "none"}
-        if point == "log.pre_seal":
+        rec = {"point": str(point), "kn": kn, "forced": True,
+               "effect": "none"}
+        if point is CRASH_POINTS.LOG_PRE_SEAL:
             for seg in reversed(segs):
                 cut = max(len(seg.entries) - torn, seg.merged_upto)
                 if cut < len(seg.entries):
@@ -157,7 +194,7 @@ class FaultPlane:
                         seg.sealed[i] = False
                     rec["effect"] = f"tore {len(seg.entries) - cut} entries"
                     break
-        elif point == "log.rotation":
+        elif point is CRASH_POINTS.LOG_ROTATION:
             # un-publish one of the KN's sealed backlog segments
             for i, (seg, d) in enumerate(pool.merge_backlog):
                 if seg.kn == kn and seg.merged_upto < len(seg.entries):
@@ -165,20 +202,21 @@ class FaultPlane:
                     rec["effect"] = (f"unpublished segment with "
                                      f"{len(seg.entries)} entries")
                     break
-        elif point in ("merge.mid_apply", "merge.post_apply"):
+        elif point in (CRASH_POINTS.MERGE_MID_APPLY,
+                       CRASH_POINTS.MERGE_POST_APPLY):
             for seg in segs:
                 entries = seg.sealed_entries()
                 todo = entries[seg.merged_upto:]
                 if not todo:
                     continue
-                j = len(todo) if point == "merge.post_apply" \
+                j = len(todo) if point is CRASH_POINTS.MERGE_POST_APPLY \
                     else max(len(todo) // 2, 1)
                 for key, ptr in todo[:j]:
                     pool._merge_entry(key, ptr, seg)
                 # the crash: merged_upto / accounting never advanced
                 rec["effect"] = f"applied {j}/{len(todo)} without cursor"
                 break
-        elif point == "rep.post_cas":
+        elif point is CRASH_POINTS.REP_POST_CAS:
             key = next(iter(pool.indirect), None)
             if key is not None and segs and not segs[-1].full():
                 seg = segs[-1]

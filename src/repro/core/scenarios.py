@@ -44,7 +44,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .cluster import DinomoCluster, VARIANTS
-from .faults import ARMABLE_POINTS, CRASH_POINTS, FaultPlane, KNCrash
+from .faults import (ALL_POINTS, ARMABLE_POINTS, CRASH_POINTS,
+                     FaultPlane, KNCrash)
 from .mnode import PolicyConfig
 from .netmodel import (ArrivalProcess, DEFAULT_MODEL, NetModel,
                        PhasedArrival)
@@ -274,7 +275,7 @@ def run_scenario(scenario: str, variant: str, seed: int = 0,
     offered = _offered_fn(scenario, cfg)
     point = crash_point
     if point is None:
-        point = CRASH_POINTS[int(faults.rng.integers(0, len(CRASH_POINTS)))]
+        point = ALL_POINTS[int(faults.rng.integers(0, len(ALL_POINTS)))]
     with_crash = scenario in ("crash", "composed")
     result = ScenarioResult(
         scenario=scenario, variant=variant, seed=seed,

@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..interpret import resolve_interpret
+
 NEG_INF = -1e30
 INVALID_POS = 1 << 30
 
@@ -84,7 +86,7 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, page_table: jax.Array,
                            page_pos: jax.Array, lengths: jax.Array, *,
                            scale: float | None = None,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """q: (B, H, D); k_pages/v_pages: (NP, PS, KH, D);
     page_table: (B, P) int32 page ids (-1 = no page);
     page_pos:   (B, P) int32 token-position base of each slot;
@@ -93,6 +95,7 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     Returns un-normalized partials (acc, m, l):
       acc (B, H, D) f32, m (B, H) f32, l (B, H) f32
     so that attention = acc / l after merging partials across owners."""
+    interpret = resolve_interpret(interpret)
     b, h, d = q.shape
     np_, ps, kh, _ = k_pages.shape
     assert h % kh == 0

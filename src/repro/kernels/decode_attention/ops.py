@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..interpret import resolve_interpret
 from .decode_attention import paged_decode_attention
 from .ref import normalize, paged_decode_ref
 
@@ -47,11 +48,10 @@ def paged_decode(q, k_pages, v_pages, page_table, page_pos, lengths, *,
     if use_kernel is None:
         use_kernel = _on_tpu()
     if use_kernel:
-        if interpret is None:
-            interpret = not _on_tpu()
         acc, m, l = paged_decode_attention(q, k_pages, v_pages, page_table,
                                            page_pos, lengths,
-                                           interpret=interpret)
+                                           interpret=resolve_interpret(
+                                               interpret))
     else:
         acc, m, l = paged_decode_ref(q, k_pages, v_pages, page_table,
                                      page_pos, lengths)

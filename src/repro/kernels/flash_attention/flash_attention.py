@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..interpret import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -79,9 +81,10 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, scale: float | None = None,
                     bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q: (B, H, Sq, D); k, v: (B, KH, Sk, D) with H % KH == 0.
     Returns (B, H, Sq, D) in q.dtype."""
+    interpret = resolve_interpret(interpret)
     b, h, sq, d = q.shape
     _, kh, sk, _ = k.shape
     assert h % kh == 0, "GQA requires H % KH == 0"

@@ -10,6 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..interpret import resolve_interpret
 from .flash_attention import flash_attention
 from .ref import blocked_mha_heads, blocked_mha_jnp, mha_ref
 
@@ -45,10 +46,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
     if use_kernel:
-        if interpret is None:
-            interpret = not _on_tpu()
         out = flash_attention(qt, kt, vt, causal=causal, bq=bq, bk=bk,
-                              interpret=interpret)
+                              interpret=resolve_interpret(interpret))
     elif kt.shape[2] > 2048 and kt.shape[2] % 1024 == 0:
         from ...distributed.act_sharding import (constrain_heads,
                                                  head_sharding_active)

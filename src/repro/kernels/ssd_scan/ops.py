@@ -10,6 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..interpret import resolve_interpret
 from .ref import ssd_ref
 from .ssd_scan import ssd_scan
 
@@ -76,7 +77,6 @@ def ssd(x, dt, a, b, c, d, *, chunk: int = 64,
     if use_kernel is None:
         use_kernel = _on_tpu()
     if use_kernel:
-        if interpret is None:
-            interpret = not _on_tpu()
-        return ssd_scan(x, dt, a, b, c, d, chunk=chunk, interpret=interpret)
+        return ssd_scan(x, dt, a, b, c, d, chunk=chunk,
+                        interpret=resolve_interpret(interpret))
     return _ssd_chunked_jnp(x, dt, a, b, c, d, chunk)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..interpret import resolve_interpret
+
 
 def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, state,
                 *, chunk: int):
@@ -67,9 +69,10 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, state,
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
              c: jax.Array, d: jax.Array, *, chunk: int = 64,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool | None = None) -> jax.Array:
     """x: (B,S,H,P); dt: (B,S,H) (positive, post-softplus); a: (H,)
     (negative); b, c: (B,S,G,N); d: (H,). Returns y: (B,S,H,P)."""
+    interpret = resolve_interpret(interpret)
     bsz, s, h, p = x.shape
     _, _, g, n = b.shape
     assert s % chunk == 0, "seq must divide chunk"

@@ -26,6 +26,11 @@ except ImportError:                                    # pragma: no cover
 # run in subprocesses *before* their first ``from jax.sharding import``:
 _SUBPROC_PREAMBLE = "import repro.distributed.jax_compat\n"
 
+# the static-analysis fixture mini-trees contain deliberately broken
+# files (some named test_*.py inside their fake tests/ dirs); they are
+# analyzer *inputs*, never test modules
+collect_ignore = ["fixtures"]
+
 
 def pytest_addoption(parser):
     parser.addoption(
@@ -70,3 +75,16 @@ def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
 @pytest.fixture
 def subproc():
     return run_subprocess
+
+
+@pytest.fixture(autouse=True)
+def _ownership_sanitizer():
+    """Wires the ownership-write sanitizer (repro.core.sanitize) into
+    every tier-1 test: under ``REPRO_SANITIZE=1`` the module enables
+    itself at import and every cluster built during the test runs with
+    write-barriered caches.  Either way, the owner-context stack must
+    unwind by test end -- a leak means some engine path pushed a
+    context it never popped."""
+    from repro.core import sanitize
+    yield
+    assert not sanitize._CTX, "sanitizer context stack leaked"

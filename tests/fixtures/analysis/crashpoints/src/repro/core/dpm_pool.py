@@ -1,0 +1,6 @@
+"""Fixture: one declared hook, one undeclared crash-point literal."""
+
+
+def log_write(fp, kn):
+    fp.take_crash("log.pre_seal", kn, 1)       # declared: fine
+    fp.take_crash("log.not_declared", kn, 1)   # undeclared -> violation

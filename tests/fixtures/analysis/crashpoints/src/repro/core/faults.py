@@ -1,0 +1,12 @@
+"""Fixture: a minimal CRASH_POINTS registry."""
+
+import enum
+
+
+class CRASH_POINTS(str, enum.Enum):
+    LOG_PRE_SEAL = "log.pre_seal"
+
+
+class FaultPlane:
+    def take_crash(self, point, kn, n):
+        return None

@@ -1,0 +1,1 @@
+"""Fixture test naming the declared point ("log.pre_seal")."""

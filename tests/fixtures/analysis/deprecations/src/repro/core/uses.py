@@ -1,0 +1,5 @@
+"""Fixture: an internal caller of the deprecated op_latency shim."""
+
+
+def latency(model):
+    return model.op_latency(1.0, queue_factor=2.0)   # -> violation

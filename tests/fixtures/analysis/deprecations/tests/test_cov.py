@@ -1,0 +1,4 @@
+"""Fixture coverage test naming every batched API so only the
+deprecated-shim finding fires: execute_batch insert_batch
+log_write_batch apply_plan apply_merge_plan merge_entries_batch
+write_once."""

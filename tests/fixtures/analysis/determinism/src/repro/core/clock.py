@@ -1,0 +1,15 @@
+"""Fixture: wall clock and global RNG in a sim path."""
+
+import random
+import time
+
+import numpy as np
+
+
+def step():
+    t = time.time()                # wall clock -> violation
+    r = random.random()            # global RNG -> violation
+    g = np.random.rand(4)          # global np RNG -> violation
+    ok = time.perf_counter()       # host measurement: allowed
+    rng = np.random.default_rng(0)  # seeded: allowed
+    return t, r, g, ok, rng.random()

@@ -1,0 +1,1 @@
+# Fixture kernel package: no ref.py oracle, not referenced by tests.

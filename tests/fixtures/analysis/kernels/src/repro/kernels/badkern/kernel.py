@@ -1,0 +1,9 @@
+"""Fixture: hardcoded interpret default + pinned call-site keyword."""
+
+
+def run_kernel(x, interpret: bool = True):   # hardcoded -> violation
+    return launch(x, interpret=True)         # pinned kw -> violation
+
+
+def launch(x, interpret=None):
+    return x

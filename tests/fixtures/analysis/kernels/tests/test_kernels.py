@@ -1,0 +1,1 @@
+"""Fixture kernel tests (deliberately do not mention the package)."""

@@ -1,0 +1,10 @@
+"""Fixture: a plan function that violates plan-purity both ways."""
+
+
+def plan_dac_window(cache, keys):
+    kind = cache.kind          # bare attribute chain: aliases the cache
+    kind[0] = 2                # store through the alias -> violation
+    cache.apply_plan(None)     # mutating call -> violation
+    local = [0] * 4
+    local[0] = 1               # local object: allowed
+    return local

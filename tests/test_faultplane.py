@@ -433,3 +433,69 @@ class TestTornTailSemantics:
         assert len(dropped) == n - cut
         assert not any(int(s) != SEALED
                        for s in jx.seal[:int(jx.count)].tolist())
+
+
+class TestCrashPointRegistry:
+    """The CRASH_POINTS enum is the single source of truth: the ROADMAP
+    "Fault model" table, the enum, and the expected fault surface must
+    all agree (naming each point literally here also satisfies the
+    crash-point analysis pass's test-coverage rule)."""
+
+    EXPECTED = {
+        "log.pre_seal": "entries",
+        "log.rotation": "events",
+        "merge.mid_apply": "entries",
+        "merge.post_apply": "events",
+        "rep.post_cas": "forced only",
+    }
+
+    @staticmethod
+    def _roadmap_fault_table():
+        import re
+        from pathlib import Path
+        text = (Path(__file__).resolve().parents[1]
+                / "ROADMAP.md").read_text()
+        section = text.split("## Fault model", 1)[1].split("\n## ", 1)[0]
+        rows = {}
+        for m in re.finditer(r"^\| `([a-z._]+)` \| ([^|]+) \|",
+                             section, re.M):
+            rows[m.group(1)] = m.group(2).strip()
+        return rows
+
+    def test_enum_matches_expected_surface(self):
+        assert {p.value for p in CRASH_POINTS} == set(self.EXPECTED)
+        from repro.core import ALL_POINTS
+        assert tuple(p.value for p in ALL_POINTS) == tuple(self.EXPECTED)
+        assert tuple(ARMABLE_POINTS) == tuple(ALL_POINTS[:4])
+        assert "rep.post_cas" not in ARMABLE_POINTS
+
+    def test_roadmap_table_matches_enum(self):
+        rows = self._roadmap_fault_table()
+        assert rows == self.EXPECTED, (
+            "ROADMAP 'Fault model' table and CRASH_POINTS disagree; "
+            "update both together")
+
+    def test_members_are_str_interchangeable(self):
+        p = CRASH_POINTS.LOG_PRE_SEAL
+        assert p == "log.pre_seal" and str(p) == "log.pre_seal"
+        assert f"{p}" == "log.pre_seal"
+        assert hash(p) == hash("log.pre_seal")
+        assert {p: 1}["log.pre_seal"] == 1
+        assert CRASH_POINTS("log.pre_seal") is p
+
+    def test_arming_undeclared_point_is_rejected(self):
+        fp = FaultPlane(seed=0)
+        with pytest.raises(ValueError, match="unknown crash point"):
+            fp.arm_crash("log.not_a_point")
+        with pytest.raises(ValueError, match="cannot arm"):
+            fp.arm_crash("rep.post_cas")
+        with pytest.raises(ValueError, match="unknown crash point"):
+            fp.force_crash(DPMPool(), "kn1", "merge.not_a_point")
+
+    def test_crash_log_records_plain_strings(self):
+        fp = FaultPlane(seed=0)
+        fp.arm_crash(CRASH_POINTS.LOG_PRE_SEAL, kn="kn1", after=0)
+        assert fp.take_crash(CRASH_POINTS.LOG_PRE_SEAL, "kn1", 4) == 0
+        rec = fp.crash_log[-1]
+        assert rec["point"] == "log.pre_seal"
+        assert type(rec["point"]) is str

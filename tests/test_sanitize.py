@@ -1,0 +1,131 @@
+"""Ownership-write sanitizer: cross-owner writes trip, legitimate
+engine traffic doesn't.
+
+The invariant (paper Sec. 3): only the owner KN's window/merge/
+recovery machinery mutates that KN's soft state.  These tests turn the
+sanitizer on explicitly (independent of ``REPRO_SANITIZE``), build real
+clusters, and check both directions: a deliberate cross-owner write
+raises :class:`OwnershipViolation` at the offending store, while full
+batched/scalar/faulted runs under the barrier stay green and
+decision-identical to unsanitized runs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import DINOMO, CLOVER, DinomoCluster
+from repro.core import sanitize
+from repro.core.sanitize import GuardedArray, OwnershipViolation
+
+
+@pytest.fixture
+def sanitized():
+    was = sanitize.enabled()
+    sanitize.enable()
+    yield
+    if not was:
+        sanitize.disable()
+
+
+def make_cluster(variant=DINOMO, **kw):
+    kw.setdefault("num_kns", 3)
+    kw.setdefault("cache_bytes", 1 << 14)
+    kw.setdefault("num_buckets", 1 << 10)
+    kw.setdefault("seed", 7)
+    return DinomoCluster(variant, **kw)
+
+
+def run_mix(c, n=400, seed=3):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 512, n).astype(np.int64)
+    kinds = (rng.random(n) < 0.4).astype(np.int8)
+    c.load((int(k), f"v{k}") for k in np.unique(keys))
+    c.execute_batch(kinds, keys, value="x")
+    return c.aggregate_stats()
+
+
+class TestGuardedArray:
+    def test_cross_owner_write_trips(self, sanitized):
+        c = make_cluster()
+        kn = next(iter(c.kns.values()))
+        arr = kn.cache.kind
+        assert isinstance(arr, GuardedArray)
+        with pytest.raises(OwnershipViolation, match="context None"):
+            arr[0] = 3                       # no context at all
+        with sanitize.owned("intruder"):     # some other KN's context
+            with pytest.raises(OwnershipViolation,
+                               match=f"KN '{kn.name}'"):
+                arr[0] = 3
+
+    def test_owner_and_management_contexts_pass(self, sanitized):
+        c = make_cluster()
+        kn = next(iter(c.kns.values()))
+        before = int(kn.cache.kind[0])
+        with sanitize.owned(kn.name):
+            kn.cache.kind[0] = before        # owner: allowed
+        with sanitize.management():
+            kn.cache.kind[0] = before        # management: allowed
+
+    def test_views_guarded_copies_free(self, sanitized):
+        c = make_cluster()
+        kn = next(iter(c.kns.values()))
+        arr = kn.cache.kind
+        view = arr[1:]
+        with pytest.raises(OwnershipViolation):
+            view[0] = 1                      # views keep the barrier
+        gather = arr[np.array([0, 1, 2])]
+        gather[0] = 9                        # fancy-index copy: free
+        comp = arr + 1
+        comp[0] = 9                          # ufunc result: free
+        with pytest.raises(OwnershipViolation):
+            arr += 1                         # in-place ufunc: barred
+        with pytest.raises(OwnershipViolation):
+            arr.fill(0)
+
+    def test_growth_rebinds_stay_guarded(self, sanitized):
+        c = make_cluster()
+        kn = next(iter(c.kns.values()))
+        with sanitize.owned(kn.name):
+            kn.cache._ensure(10 * kn.cache.kind.shape[0])
+        assert isinstance(kn.cache.kind, GuardedArray)
+        with pytest.raises(OwnershipViolation):
+            kn.cache.kind[-1] = 1
+
+    def test_guard_cache_skips_dict_caches(self, sanitized):
+        c = make_cluster(reference_cache=True)
+        kn = next(iter(c.kns.values()))
+        # reference (dict/heap) caches carry no bulk arrays: unchanged
+        assert type(kn.cache).__name__ == "DAC"
+        kn.cache.clear()                     # no barrier, no context
+
+
+class TestEngineUnderSanitizer:
+    @pytest.mark.parametrize("variant", [DINOMO, CLOVER],
+                             ids=lambda v: v.name)
+    def test_batched_run_green_and_identical(self, sanitized, variant):
+        got = run_mix(make_cluster(variant))
+        sanitize.disable()
+        want = run_mix(make_cluster(variant))
+        sanitize.enable()
+        assert got == want
+
+    def test_scalar_ops_and_reconfig(self, sanitized):
+        c = make_cluster()
+        c.load([(k, f"v{k}") for k in range(64)], warm=True)
+        for k in range(64):
+            c.write(k, "w")
+            assert c.read(k)[0] == "w"
+        c.add_kn()
+        name = next(iter(c.kns))
+        c.fail_kn(name)                      # recovery path: management
+        for k in range(0, 64, 7):
+            assert c.read(k)[0] == "w"
+
+    def test_replication_paths(self, sanitized):
+        c = make_cluster()
+        c.load([(k, f"v{k}") for k in range(32)])
+        c.replicate_key(5, 2)
+        c.write(5, "r")
+        assert c.read(5)[0] == "r"
+        c.dereplicate_key(5)
+        assert c.read(5)[0] == "r"

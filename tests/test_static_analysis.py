@@ -1,0 +1,149 @@
+"""The analyzer analyzed: every pass catches its seeded fixture
+violation with a stable fingerprint, and the real tree is clean.
+
+Fixture mini-trees under ``tests/fixtures/analysis/<case>/`` mirror the
+repo layout (``src/repro/...``, ``tests/...``) so each pass runs
+against them exactly as it runs against the real checkout.  The
+real-tree test is the same check CI's ``analysis`` job enforces
+(``python -m repro.analysis --strict``), kept in tier-1 as a fast
+smoke so a violating change fails locally before it reaches CI.
+"""
+
+import hashlib
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Corpus, Finding, load_baseline, repo_root, \
+    run_passes
+from repro.analysis.passes import (ALL_PASSES, crash_points,
+                                   deprecations, determinism,
+                                   kernel_hygiene, plan_purity)
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+
+
+def fixture_corpus(case: str) -> Corpus:
+    root = FIXTURES / case
+    assert root.is_dir(), f"missing fixture tree {root}"
+    return Corpus(root)
+
+
+def expected_fp(pass_name, file, symbol, detail):
+    """The documented fingerprint recipe, recomputed independently so a
+    silent change to it (which would orphan every baseline entry)
+    fails here."""
+    return hashlib.sha256(
+        f"{pass_name}:{file}:{symbol}:{detail}".encode()).hexdigest()[:12]
+
+
+class TestFingerprint:
+    def test_recipe_is_stable_and_line_independent(self):
+        f1 = Finding("p", "f.py", 10, "error", "sym", "msg", "d")
+        f2 = Finding("p", "f.py", 99, "error", "sym", "other msg", "d")
+        assert f1.fingerprint == f2.fingerprint == \
+            expected_fp("p", "f.py", "sym", "d")
+        assert f1.fingerprint != \
+            Finding("p", "f.py", 10, "error", "sym", "msg", "e").fingerprint
+
+
+class TestPlanPurityPass:
+    def test_catches_alias_store_and_mutating_call(self):
+        fs = plan_purity.run(fixture_corpus("purity"))
+        details = {f.detail for f in fs}
+        assert "call:apply_plan" in details
+        assert "store:kind:kind[0]" in details, details
+        # the local-list store must NOT be flagged
+        assert not any("local" in d for d in details)
+        call = next(f for f in fs if f.detail == "call:apply_plan")
+        assert call.fingerprint == expected_fp(
+            "plan-purity", "src/repro/core/transition.py",
+            "plan_dac_window.apply_plan", "call:apply_plan")
+
+
+class TestCrashPointPass:
+    def test_catches_undeclared_literal_only(self):
+        fs = crash_points.run(fixture_corpus("crashpoints"))
+        assert [f.detail for f in fs] == ["undeclared:log.not_declared"]
+        assert fs[0].fingerprint == expected_fp(
+            "crash-points", "src/repro/core/dpm_pool.py", "take_crash",
+            "undeclared:log.not_declared")
+
+
+class TestDeterminismPass:
+    def test_catches_wall_clock_and_global_rng(self):
+        fs = determinism.run(fixture_corpus("determinism"))
+        details = {f.detail for f in fs}
+        assert details == {"call:time.time", "call:random.random",
+                           "call:np.random.rand"}
+        wall = next(f for f in fs if f.detail == "call:time.time")
+        assert wall.fingerprint == expected_fp(
+            "determinism", "src/repro/core/clock.py", "time.time",
+            "call:time.time")
+
+
+class TestKernelHygienePass:
+    def test_catches_missing_ref_and_hardcoded_interpret(self):
+        fs = kernel_hygiene.run(fixture_corpus("kernels"))
+        details = {f.detail for f in fs}
+        assert details == {"no-ref:badkern", "untested:badkern",
+                           "hardcoded-default:run_kernel",
+                           "hardcoded-kw:launch"}
+        noref = next(f for f in fs if f.detail == "no-ref:badkern")
+        assert noref.fingerprint == expected_fp(
+            "kernel-hygiene", "src/repro/kernels/badkern/__init__.py",
+            "badkern", "no-ref:badkern")
+
+
+class TestDeprecationsPass:
+    def test_catches_deprecated_shim_caller(self):
+        fs = deprecations.run(fixture_corpus("deprecations"))
+        assert len(fs) == 1
+        f = fs[0]
+        assert f.detail.startswith("deprecated:op_latency")
+        assert f.file == "src/repro/core/uses.py"
+        assert f.fingerprint == expected_fp(
+            "deprecations", f.file, "op_latency", f.detail)
+
+    def test_catches_untested_batched_api(self, tmp_path):
+        # strip the coverage docstring: every batched API goes untested
+        src = FIXTURES / "deprecations"
+        root = tmp_path / "tree"
+        (root / "src/repro/core").mkdir(parents=True)
+        (root / "tests").mkdir()
+        (root / "src/repro/core/uses.py").write_text(
+            (src / "src/repro/core/uses.py").read_text())
+        (root / "tests/test_cov.py").write_text("# names nothing\n")
+        fs = deprecations.run(Corpus(root))
+        untested = {f.symbol for f in fs
+                    if f.detail.startswith("untested-api:")}
+        assert untested == {"execute_batch", "insert_batch",
+                            "log_write_batch", "apply_plan",
+                            "apply_merge_plan", "merge_entries_batch",
+                            "write_once"}
+
+
+class TestRealTree:
+    def test_zero_new_findings(self):
+        """The tier-1 smoke mirror of CI's --strict gate: every finding
+        on the real tree must be baselined (and the baseline is
+        expected to be empty)."""
+        findings = run_passes(Corpus(repo_root()), ALL_PASSES)
+        baseline = load_baseline()
+        fresh = [f.render() for f in findings
+                 if f.fingerprint not in baseline]
+        assert not fresh, "new static-analysis findings:\n" + \
+            "\n".join(fresh)
+
+    def test_cli_strict_exits_zero(self):
+        from repro.analysis.__main__ import main
+        assert main(["--strict"]) == 0
+
+    def test_fixtures_do_not_leak_into_real_tree(self):
+        """The real-tree corpus must never pick up the deliberately
+        broken fixture mini-trees."""
+        c = Corpus(repo_root())
+        tests_files = c.py_files("tests", recursive=False)
+        assert all("fixtures" not in f for f in tests_files)
+        assert "tests/test_static_analysis.py" in tests_files
