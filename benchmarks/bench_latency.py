@@ -34,6 +34,7 @@ import json
 import os
 import time
 
+from benchmarks.common import host_fingerprint
 from repro.core import DinomoCluster, VARIANTS
 from repro.core.netmodel import ArrivalProcess, DEFAULT_MODEL
 from repro.core.requestplane import RequestPlane, RequestPlaneConfig
@@ -142,6 +143,7 @@ def main(smoke: bool = False, seed: int = 0):
     payload = {
         "profile": "smoke" if smoke else "full",
         "seed": seed,
+        "host": host_fingerprint(),
         "wall_s": round(wall, 2),
         "mixes": list(MIX_SWEEP),
         "load_sweep": list(LOAD_SWEEP),

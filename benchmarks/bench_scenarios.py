@@ -27,6 +27,7 @@ import json
 import os
 import time
 
+from benchmarks.common import host_fingerprint
 from repro.core.scenarios import (BENCH_VARIANTS, SCENARIOS,
                                   ScenarioConfig, run_suite)
 
@@ -65,6 +66,7 @@ def main(smoke: bool = False, seed: int = 0):
     payload = {
         "profile": "smoke" if smoke else "full",
         "seed": seed,
+        "host": host_fingerprint(),
         "config": dataclasses.asdict(cfg),
         "wall_s": round(wall, 2),
         "rows": [r.row() for r in results],

@@ -13,6 +13,9 @@ DPM), zipf {0.5, 0.99, 2.0}, 16 KNs max. Scale factor here: dataset
 
 from __future__ import annotations
 
+import os
+import platform
+import sys
 import time
 from dataclasses import dataclass
 
@@ -27,6 +30,21 @@ VALUE_BYTES = 1024
 # paper: 1 GB cache/KN vs 32 GB dataset -> per-KN cache ~3.1% of dataset
 CACHE_BYTES = NUM_KEYS * VALUE_BYTES // 32
 DATASET_BYTES_REPRESENTED = 32e9                  # what the scale stands for
+
+
+def host_fingerprint() -> dict:
+    """Provenance stamp for benchmark JSONs.  Absolute numbers from
+    one host mean nothing on another (these records historically came
+    from a drifting 2-vCPU shared box), so every emitted record carries
+    the host it was measured on and gates compare same-run ratios
+    only."""
+    return {
+        "cpu_count": os.cpu_count(),
+        "perf_counter_resolution_s":
+            time.get_clock_info("perf_counter").resolution,
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+    }
 
 
 @dataclass

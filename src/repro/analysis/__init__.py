@@ -31,9 +31,21 @@ from dataclasses import dataclass, field
 from pathlib import Path
 
 __all__ = ["Finding", "Corpus", "run_passes", "load_baseline",
-           "write_baseline", "repo_root", "BASELINE_PATH"]
+           "write_baseline", "repo_root", "BASELINE_PATH",
+           "PLACEHOLDER_JUSTIFICATION", "unjustified"]
 
 BASELINE_PATH = Path(__file__).with_name("baseline.json")
+
+#: the stamp older baselines carried for every grandfathered entry; a
+#: justification equal to it (or blank) is treated as absent
+PLACEHOLDER_JUSTIFICATION = "TODO: justify or fix"
+
+
+def unjustified(entry: dict) -> bool:
+    """True when a baseline entry lacks a real justification (missing,
+    blank, or still the write-baseline placeholder)."""
+    just = str(entry.get("justification", "")).strip()
+    return not just or just == PLACEHOLDER_JUSTIFICATION
 
 
 def repo_root() -> Path:
@@ -135,7 +147,18 @@ def load_baseline(path: Path = BASELINE_PATH) -> dict[str, dict]:
 
 
 def write_baseline(findings: list[Finding],
-                   path: Path = BASELINE_PATH) -> None:
+                   path: Path = BASELINE_PATH,
+                   justification: str = "") -> None:
+    """Grandfather ``findings`` into the baseline.  ``justification``
+    must be a real one-liner: stamping entries with a placeholder just
+    moved the debt somewhere ``--strict`` never looked (entries whose
+    justification is blank or the placeholder now fail strict runs,
+    see :func:`unjustified`)."""
+    just = str(justification).strip()
+    if findings and (not just or just == PLACEHOLDER_JUSTIFICATION):
+        raise ValueError(
+            "baseline entries need a real justification; pass one via "
+            "--justify (placeholder text is rejected)")
     data = {
         "comment": "Grandfathered findings. Every entry needs a one-line"
                    " justification; fix-and-remove beats justifying.",
@@ -143,7 +166,7 @@ def write_baseline(findings: list[Finding],
             f.fingerprint: {
                 "pass": f.pass_name, "file": f.file, "symbol": f.symbol,
                 "message": f.message,
-                "justification": "TODO: justify or fix",
+                "justification": just,
             } for f in findings
         },
     }

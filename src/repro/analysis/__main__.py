@@ -7,7 +7,7 @@ import sys
 from pathlib import Path
 
 from . import (BASELINE_PATH, Corpus, load_baseline, repo_root,
-               run_passes, write_baseline)
+               run_passes, unjustified, write_baseline)
 from .passes import ALL_PASSES, BY_NAME
 
 
@@ -22,7 +22,11 @@ def main(argv=None) -> int:
                     help="exit 1 on any non-baselined finding (CI gate)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="grandfather current findings into the baseline "
-                         "(entries then need justifications)")
+                         "(requires --justify with a real reason)")
+    ap.add_argument("--justify", default="",
+                    help="one-line justification stamped on every entry "
+                         "--write-baseline records (placeholder text is "
+                         "rejected; strict runs fail unjustified entries)")
     ap.add_argument("--pass", dest="passes", action="append",
                     choices=sorted(BY_NAME), default=None,
                     help="run only the named pass (repeatable)")
@@ -34,15 +38,27 @@ def main(argv=None) -> int:
     findings = run_passes(corpus, passes)
 
     if args.write_baseline:
-        write_baseline(findings)
+        try:
+            write_baseline(findings, justification=args.justify)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
         print(f"wrote {len(findings)} finding(s) to {BASELINE_PATH}")
         return 0
 
     baseline = load_baseline()
-    fresh = [f for f in findings if f.fingerprint not in baseline]
-    grandfathered = [f for f in findings if f.fingerprint in baseline]
+    # an entry whose justification is blank or still the placeholder
+    # does not shield its finding: strict treats it as fresh
+    fresh = [f for f in findings
+             if f.fingerprint not in baseline
+             or unjustified(baseline[f.fingerprint])]
+    grandfathered = [f for f in findings
+                     if f.fingerprint in baseline
+                     and not unjustified(baseline[f.fingerprint])]
     for f in fresh:
-        print(f.render())
+        tag = " [baselined without justification]" \
+            if f.fingerprint in baseline else ""
+        print(f.render() + tag)
     for f in grandfathered:
         just = baseline[f.fingerprint].get("justification", "")
         print(f"{f.render()} [baselined: {just}]")

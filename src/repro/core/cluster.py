@@ -33,8 +33,9 @@ from .mnode import PolicyConfig, PolicyEngine
 from .netmodel import NetModel, DEFAULT_MODEL
 from .hashring import stable_hash
 from .ownership import OwnershipMap, ReconfigEvent
-from .transition import (PLAN_STATS, plan_clover_reads, plan_dac_window,
-                         plan_static_window)
+from .transition import (ENGINE_WALL, PLAN_STATS, plan_clover_reads,
+                         plan_dac_window, plan_static_window)
+from time import perf_counter
 
 
 @dataclass(frozen=True)
@@ -334,6 +335,9 @@ class DinomoCluster:
         self.rng = random.Random(seed)
         self._kn_counter = 0
         self._seq = 0
+        # batch engine selection ("host" | "jit"), set per execute_batch
+        self._engine = "host"
+        self._jit = None        # lazy JitEngine (jit_engine.py)
         # Clover: per-key version counters + metadata-server op count
         self.versions: dict[int, int] = {}
         self.ms_ops = 0
@@ -617,7 +621,8 @@ class DinomoCluster:
     # ---------------------------------------------------------------------
     def execute_batch(self, kinds, keys, *, value=None, values=None,
                       blocked_kns=(), collect_values: bool = False,
-                      req_ids=None) -> "BatchResult":
+                      req_ids=None, engine: str | None = None) \
+            -> "BatchResult":
         """Execute a batch of operations in submission order.
 
         kinds: (N,) array, 0 == read, 1 == write, 2 == delete
@@ -630,7 +635,17 @@ class DinomoCluster:
             none); write entries carry them into the durable log so the
             open-loop request plane's retries deduplicate exactly-once
             (DPMPool.req_index)
+        engine: None/"host" -> the host window engine; "jit" -> the
+            compiled batch executor (core.jit_engine): eligible
+            ArrayDAC windows run as single jitted dispatches over
+            device-resident cache state, truncation residuals and
+            everything else replay through the host engine, so the
+            result is decision-for-decision identical (property-tested
+            in tests/test_dataplane.py / test_writeplane.py)
         """
+        if engine not in (None, "host", "jit"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self._engine = engine or "host"
         keys = np.ascontiguousarray(np.asarray(keys, dtype=np.int64))
         kinds = np.asarray(kinds, dtype=np.uint8)
         if req_ids is not None:
@@ -787,6 +802,10 @@ class DinomoCluster:
                 self._advance_windows(windows, p - 1, keys, kinds, plan,
                                       probe_map, dkeys, dbuckets,
                                       out_values)
+                if self._jit is not None:
+                    # rep ops touch caches through the scalar paths:
+                    # scatter device-resident state back first
+                    self._jit.sync_all()
                 self._exec_rep_op(p, kinds, keys, kn_ids, names, plan,
                                   dkeys, out_values)
                 si += 1
@@ -794,6 +813,8 @@ class DinomoCluster:
             self._advance_windows(windows, n - 1, keys, kinds, plan,
                                   probe_map, dkeys, dbuckets, out_values)
         finally:
+            if self._jit is not None:
+                self._jit.end_batch()
             pool.untrack_merge_dirty()
 
         # ----- finalize -----------------------------------------------------
@@ -1012,6 +1033,15 @@ class DinomoCluster:
             return
         w.idx = i1
         full = pos[i0:i1]
+        if self._engine == "jit" and w.is_dac:
+            eng = self._jit
+            if eng is None:
+                from .jit_engine import JitEngine
+                eng = self._jit = JitEngine(self)
+            if eng.run_window(w, full, keys, kinds, plan, probe_map,
+                              dkeys, dbuckets, out_values):
+                return
+            # ineligible window (int32 guards / too small): host engine
         kn, cache = w.kn, w.cache
         is_dac = w.is_dac
         planner = plan_dac_window if is_dac else \
@@ -1048,10 +1078,12 @@ class DinomoCluster:
             # the first op it cannot prove (wp.ops tells how far it
             # got), so planning work stays linear in the window
             end = min(span.size, 512)
+            t0 = perf_counter()
             wp = planner(cache, kn, skeys[:end], sops[:end], span[:end],
                          plan, probe_map, dkeys, dbuckets, self.pool,
                          self.value_bytes, collect) \
                 if planner is not None else None
+            ENGINE_WALL["host_plan"] += perf_counter() - t0
             if wp is not None:
                 end = wp.ops
                 PLAN_STATS["planned_windows"] += 1
@@ -1072,6 +1104,7 @@ class DinomoCluster:
         kind-gather, split into maximal same-class runs, apply
         vectorizable runs in bulk (re-validated against the live cache
         at run boundaries), drop to the exact scalar op otherwise."""
+        t0_wall = perf_counter()
         cls = np.where(sops == 0, cache.kind[skeys],
                        np.where(sops == 1, np.int8(3), np.int8(4)))
         m = span.size
@@ -1119,11 +1152,13 @@ class DinomoCluster:
                 for p_, k in zip(span_l[s:e], keys_l[s:e]):
                     self._scalar_read_dac(kn, cache, k, p_, probe_map,
                                           dkeys, dbuckets, out_values)
+        ENGINE_WALL["host_replay"] += perf_counter() - t0_wall
 
     def _apply_window_plan(self, kn, cache, wp, out_values) -> None:
         """Apply a planned window: bulk cache mutation via apply_plan,
         then the kn-side effects (stats, miss-RT EMA in op order,
         segcache puts/pops, collected read values)."""
+        t0_wall = perf_counter()
         cache.apply_plan(wp)
         st = kn.stats
         st.ops += wp.ops
@@ -1160,6 +1195,7 @@ class DinomoCluster:
         if out_values is not None and wp.out_vals:
             for p, v in wp.out_vals:
                 out_values[p] = v
+        ENGINE_WALL["host_apply"] += perf_counter() - t0_wall
 
     def _vh_run(self, kn, cache, run_pos, run_keys, probe_map, dkeys,
                 dbuckets, out_values) -> None:

@@ -149,6 +149,26 @@ class DPMPool:
         KN-side dedup check a retry pays one RT for."""
         return req_id in self.req_index
 
+    def retire_reqs(self, watermark: int) -> int:
+        """Compact the applied-set: forget request IDs below
+        ``watermark``.  Without this the dedup table grows one entry
+        per write for the life of the pool.
+
+        The caller owns the safety argument: ``watermark`` must be a
+        *retry horizon* -- every request with ``req_id < watermark``
+        has reached a terminal state at its client (completed, shed,
+        or retries exhausted), so no future ``req_applied`` probe for
+        it can ever arrive.  Dropping only such IDs preserves
+        exactly-once across crash/recover: a recovery that discards a
+        torn entry unregisters its ID itself (``recover_kn``), and a
+        retry that could still probe is by definition at or above the
+        watermark.  Returns the number of entries dropped."""
+        ri = self.req_index
+        dead = [r for r in ri if r < watermark]
+        for r in dead:
+            del ri[r]
+        return len(dead)
+
     def fill_segments_batch(self, kn: str, keys, ptrs,
                             req_ids=None) -> list[PySegment]:
         """Append a run of staged (key, ptr) entries to the KN's log,

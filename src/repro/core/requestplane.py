@@ -242,13 +242,19 @@ class RequestPlane:
         self.records: list[OpRecord] = []
         self.latencies: list[float] = []
         self.never_applied_reqs: list[int] = []  # shed / never-dispatched
+        # write requests that could still retry (req_id -> None); the
+        # min is the retry horizon below which the pool's dedup table
+        # can be compacted (DPMPool.retire_reqs) -- see _retire_reqs
+        self._open_writes: set[int] = set()
+        self.retire_horizon = 0                # last _retire_reqs horizon
         self._seq = 0
         self._next_id = 0
         self._round_end = t0
         z = ["offered", "resubmits", "completed", "shed", "deferred",
              "queue_expired", "late_applied", "attempt_timeouts",
              "retries", "dedup_hits", "hedges", "hedge_wins", "failed",
-             "crashes", "executed", "refused", "censored"]
+             "crashes", "executed", "refused", "censored",
+             "retired_reqs"]
         self.counters: dict = {k: 0 for k in z}
         self.counters["shed_by_prio"] = [0] * cfg.priorities
         self.counters["completed_by_prio"] = [0] * cfg.priorities
@@ -342,6 +348,8 @@ class RequestPlane:
                     op.submit_t = op.arrival
                     op.deadline = op.arrival + cfg.deadline_s
                     op.attempts = 1
+                    if kd:
+                        self._open_writes.add(rid)
                     self.counters["offered"] += 1
                     if cfg.keep_records:
                         self.records.append(op)
@@ -363,6 +371,21 @@ class RequestPlane:
         shed = self.counters["shed"] - sheds0
         if shed:
             self._log("shed", t1, count=shed, policy=cfg.policy)
+        self._retire_reqs()
+
+    def _retire_reqs(self) -> None:
+        """Per-round dedup-table compaction.  The retry horizon is the
+        smallest request ID a future ``req_applied`` probe could still
+        carry: the min over writes that are not yet terminal (every
+        probe comes from a retry of such a write).  Everything below it
+        is provably dead to the exactly-once contract and can leave
+        ``DPMPool.req_index`` -- including across crash/recover, since
+        a recovered pool is only ever probed by those same open
+        retries."""
+        horizon = min(self._open_writes) if self._open_writes \
+            else self._next_id
+        self.retire_horizon = horizon
+        self.counters["retired_reqs"] += self.c.pool.retire_reqs(horizon)
 
     # ----- admission ------------------------------------------------------
     def _submit(self, op: OpRecord, per_kn: dict) -> None:
@@ -417,6 +440,7 @@ class RequestPlane:
     def _shed(self, op: OpRecord, t: float) -> None:
         op.status = SHED
         op.done_t = t
+        self._open_writes.discard(op.req_id)
         self.counters["shed"] += 1
         self.counters["shed_by_prio"][op.priority] += 1
         if op.kind != 0 and not op.dispatched_ever:
@@ -604,6 +628,7 @@ class RequestPlane:
     def _complete(self, op: OpRecord, done: float) -> None:
         op.status = COMPLETED
         op.done_t = done
+        self._open_writes.discard(op.req_id)
         self.counters["completed"] += 1
         self.counters["completed_by_prio"][op.priority] += 1
         self.latencies.append(done - op.arrival)
@@ -625,6 +650,7 @@ class RequestPlane:
     def _fail(self, op: OpRecord, t: float) -> None:
         op.status = FAILED
         op.done_t = t
+        self._open_writes.discard(op.req_id)
         self.counters["failed"] += 1
         if op.kind != 0 and not op.dispatched_ever:
             self.never_applied_reqs.append(op.req_id)

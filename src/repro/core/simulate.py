@@ -44,7 +44,8 @@ class TimedSimulation:
                  model: NetModel = DEFAULT_MODEL, dt: float = 1.0,
                  sample_ops: int = 20_000, seed: int = 0,
                  dataset_bytes: float | None = None,
-                 batched: bool = True, faults=None):
+                 batched: bool = True, faults=None,
+                 engine: str | None = None):
         # the sampled working set stands in for a paper-scale dataset;
         # reorganization physics (Dinomo-N) uses the represented bytes
         self.dataset_bytes = dataset_bytes
@@ -62,6 +63,9 @@ class TimedSimulation:
         self.dt = dt
         self.sample_ops = sample_ops
         self.batched = batched
+        # batch-engine selection forwarded to execute_batch (None/"host"
+        # -> host window engine, "jit" -> compiled batch executor)
+        self.engine = engine
         self.rng = np.random.default_rng(seed)
         self.now = 0.0
         self.outages: list[Outage] = []
@@ -233,7 +237,7 @@ class TimedSimulation:
                     break
                 blocked.add(o.node)
         res = c.execute_batch(kinds, keys, value=f"v@{self.now}",
-                              blocked_kns=blocked)
+                              blocked_kns=blocked, engine=self.engine)
         if res.executed:
             u, cnt = np.unique(res.executed_keys, return_counts=True)
             self._freq_add(u, cnt)

@@ -66,6 +66,16 @@ PLAN_STATS = {"planned_windows": 0, "planned_ops": 0,
 MERGE_PLAN_STATS = {"planned_windows": 0, "planned_entries": 0,
                     "replayed_windows": 0, "replayed_entries": 0}
 
+# engine wall-clock accounting (perf_counter seconds) for the
+# host-bookkeeping share gate in benchmarks/bench_dataplane.py: the
+# host engine's window bookkeeping (plan / bulk apply / per-op replay)
+# vs the jit engine's host-side work (arg prep / event fold / state
+# scatter) around the compiled dispatch.  Same-run ratios only --
+# absolute values are host-dependent provenance.
+ENGINE_WALL = {"host_plan": 0.0, "host_apply": 0.0, "host_replay": 0.0,
+               "jit_prep": 0.0, "jit_dispatch": 0.0, "jit_fold": 0.0,
+               "jit_sync": 0.0}
+
 
 def reset_plan_stats() -> None:
     for k in PLAN_STATS:
@@ -75,6 +85,11 @@ def reset_plan_stats() -> None:
 def reset_merge_plan_stats() -> None:
     for k in MERGE_PLAN_STATS:
         MERGE_PLAN_STATS[k] = 0
+
+
+def reset_engine_wall() -> None:
+    for k in ENGINE_WALL:
+        ENGINE_WALL[k] = 0.0
 
 
 def _last_occurrence(keys: np.ndarray):

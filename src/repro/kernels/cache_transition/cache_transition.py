@@ -136,7 +136,7 @@ def cache_transition(ops: jax.Array, victims: jax.Array,
     Returns (dec, nvic, used): (N,) int32 decision per op, victims
     consumed through each op, occupancy after each op.
     """
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="cache_transition")
     n = ops.shape[0]
     assert n % block == 0, "pad ops to a multiple of the block"
     state = jnp.stack([jnp.asarray(used0, jnp.int32),

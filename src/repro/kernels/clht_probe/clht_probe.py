@@ -110,7 +110,7 @@ def kvs_lookup_fused(lines: jax.Array, heap: jax.Array,
     absent), (B,) int32 pointers (-1 if absent from the primary
     bucket), (B,) int32 {0,1} hit flags.
     """
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="clht_probe")
     b = keys.shape[0]
     assert b % block == 0, "pad keys to a multiple of the key block"
     d = heap.shape[1]
@@ -150,7 +150,7 @@ def clht_probe(lines: jax.Array, bucket_ids: jax.Array, keys: jax.Array,
     returns (ptrs, found): (B,) int32 pointer (-1 if absent from the
     primary bucket) and (B,) int32 {0,1} hit flag.
     """
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="clht_probe")
     b = keys.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -24,7 +24,7 @@ def lookup(table: CLHT, keys: jax.Array, *,
     Returns (ptrs, found) like core.clht.clht_lookup (minus the probe
     counter). Keys that miss the primary bucket take the jnp chain walk.
     """
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="clht_probe")
     lines = pack_table(table.keys, table.ptrs, table.nxt)
     bucket_ids = bucket_of(keys, table.num_buckets)
     ptr_fast, found_fast = clht_probe(lines, bucket_ids, keys,
@@ -55,7 +55,7 @@ def kvs_lookup(table: CLHT, heap: ValueHeap, keys: jax.Array, *,
     absent), (B,) int32 heap pointers (-1 absent), (B,) bool flags.
     Matches ``kvs_lookup_ref`` exactly (property-tested).
     """
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="clht_probe")
     b = keys.shape[0]
     pad = (-b) % block
     pkeys = jnp.concatenate(

@@ -95,7 +95,8 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     Returns un-normalized partials (acc, m, l):
       acc (B, H, D) f32, m (B, H) f32, l (B, H) f32
     so that attention = acc / l after merging partials across owners."""
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret,
+                                  kernel="decode_attention")
     b, h, d = q.shape
     np_, ps, kh, _ = k_pages.shape
     assert h % kh == 0

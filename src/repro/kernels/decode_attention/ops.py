@@ -51,7 +51,8 @@ def paged_decode(q, k_pages, v_pages, page_table, page_pos, lengths, *,
         acc, m, l = paged_decode_attention(q, k_pages, v_pages, page_table,
                                            page_pos, lengths,
                                            interpret=resolve_interpret(
-                                               interpret))
+                                               interpret,
+                                               kernel="decode_attention"))
     else:
         acc, m, l = paged_decode_ref(q, k_pages, v_pages, page_table,
                                      page_pos, lengths)

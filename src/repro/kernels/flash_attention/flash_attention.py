@@ -84,7 +84,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     interpret: bool | None = None) -> jax.Array:
     """q: (B, H, Sq, D); k, v: (B, KH, Sk, D) with H % KH == 0.
     Returns (B, H, Sq, D) in q.dtype."""
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="flash_attention")
     b, h, sq, d = q.shape
     _, kh, sk, _ = k.shape
     assert h % kh == 0, "GQA requires H % KH == 0"

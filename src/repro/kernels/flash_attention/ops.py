@@ -47,7 +47,8 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vt = v.transpose(0, 2, 1, 3)
     if use_kernel:
         out = flash_attention(qt, kt, vt, causal=causal, bq=bq, bk=bk,
-                              interpret=resolve_interpret(interpret))
+                              interpret=resolve_interpret(
+                                  interpret, kernel="flash_attention"))
     elif kt.shape[2] > 2048 and kt.shape[2] % 1024 == 0:
         from ...distributed.act_sharding import (constrain_heads,
                                                  head_sharding_active)

@@ -9,9 +9,17 @@ flipped without touching call sites:
     unset / any other value   ->  interpret mode
 
 Backends without compiled-Pallas support (CPU) fall back to interpret
-mode with a one-time warning, so the same env setting is safe across a
+mode with a warning, so the same env setting is safe across a
 heterogeneous fleet -- the CI matrix runs the kernel oracle tests with
 both settings on CPU to keep that plumbing honest.
+
+The fallback warning is deduplicated per process *and* per kernel
+name: the first resolution for each kernel warns (naming the kernel so
+the log says which ops fell back), every later resolution is silent.
+Python's own warning registry can't be relied on for this -- pytest
+and friends reset the filters between tests, which used to drown the
+``REPRO_PALLAS_INTERPRET=0`` CI leg and the compiled-executor
+benchmarks in one warning per kernel call.
 
 The variable is consulted when an op is *traced* (the first call per
 static signature); set it before importing/calling the kernels.  Ops
@@ -23,7 +31,9 @@ from __future__ import annotations
 import os
 import warnings
 
-_warned = False
+# kernel names that already warned about the CPU fallback ("" = a call
+# site that didn't identify itself)
+_warned_kernels: set[str] = set()
 
 
 def env_interpret_default() -> bool:
@@ -39,20 +49,29 @@ def _backend_supports_compiled() -> bool:
         return False
 
 
-def resolve_interpret(interpret) -> bool:
+def reset_fallback_warnings() -> None:
+    """Forget which kernels already warned (test isolation hook)."""
+    _warned_kernels.clear()
+
+
+def resolve_interpret(interpret, kernel: str | None = None) -> bool:
     """None -> the REPRO_PALLAS_INTERPRET default (with a CPU fallback
-    to interpret mode); an explicit bool passes through."""
-    global _warned
+    to interpret mode); an explicit bool passes through.  ``kernel``
+    names the op for the fallback warning, which fires at most once per
+    kernel name per process."""
     if interpret is not None:
         return bool(interpret)
     if env_interpret_default():
         return True
     if _backend_supports_compiled():
         return False
-    if not _warned:
-        _warned = True
-        warnings.warn("REPRO_PALLAS_INTERPRET=0 requested compiled "
-                      "Pallas kernels, but this backend only supports "
-                      "interpret mode; falling back to interpret=True",
+    name = kernel or ""
+    if name not in _warned_kernels:
+        _warned_kernels.add(name)
+        who = f"{kernel}: " if kernel else ""
+        warnings.warn(f"{who}REPRO_PALLAS_INTERPRET=0 requested compiled "
+                      f"Pallas kernels, but this backend only supports "
+                      f"interpret mode; falling back to interpret=True "
+                      f"(warned once for this kernel)",
                       RuntimeWarning, stacklevel=2)
     return True

@@ -82,7 +82,7 @@ def log_merge_sorted(lines: jax.Array, bucket_ids: jax.Array,
     first_flags: (E,) 1 iff entry i starts a new bucket group
     returns (rows, old_ptrs, ok) where rows[i] is the bucket line state
     after entry i (the wrapper writes back each group's last row)."""
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="log_merge")
     e = keys.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -120,7 +120,7 @@ def log_merge(lines: jax.Array, bucket_ids: jax.Array, keys: jax.Array,
     Sorts by bucket (stable -- preserves per-bucket log order), runs the
     kernel, scatters each bucket group's final row back, and un-permutes
     the per-entry results. Returns (lines, old_ptrs, ok)."""
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="log_merge")
     e = keys.shape[0]
     order = jnp.argsort(bucket_ids, stable=True)
     bids_s = bucket_ids[order]

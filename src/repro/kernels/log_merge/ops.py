@@ -41,7 +41,7 @@ def merge_segment_fast(table: CLHT, seg: LogSegment, *,
     Slow path: entries whose bucket was full go through clht_insert,
     preserving order (a failed key's later duplicates also fail fast,
     so relative order is intact). Returns (table, old_ptrs, ok)."""
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="log_merge")
     slots = table.keys.shape[1]
     idx = jnp.arange(seg.keys.shape[0], dtype=jnp.int32)
     todo = (idx >= seg.merged) & (idx < seg.count) & (seg.seal == 1)
@@ -175,7 +175,7 @@ def log_append_merge(table: CLHT, seg: LogSegment, heap: ValueHeap,
                 ok[i] is False only for entries whose CLHT insert
                 failed (table full even via the overflow chain)
     Matches ``log_append_merge_ref`` exactly (property-tested)."""
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="log_merge")
     n = keys.shape[0]
     start = seg.count
     heap2, ptrs = heap_append(heap, values)

@@ -78,5 +78,6 @@ def ssd(x, dt, a, b, c, d, *, chunk: int = 64,
         use_kernel = _on_tpu()
     if use_kernel:
         return ssd_scan(x, dt, a, b, c, d, chunk=chunk,
-                        interpret=resolve_interpret(interpret))
+                        interpret=resolve_interpret(interpret,
+                                                    kernel="ssd_scan"))
     return _ssd_chunked_jnp(x, dt, a, b, c, d, chunk)

@@ -72,7 +72,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
              interpret: bool | None = None) -> jax.Array:
     """x: (B,S,H,P); dt: (B,S,H) (positive, post-softplus); a: (H,)
     (negative); b, c: (B,S,G,N); d: (H,). Returns y: (B,S,H,P)."""
-    interpret = resolve_interpret(interpret)
+    interpret = resolve_interpret(interpret, kernel="ssd_scan")
     bsz, s, h, p = x.shape
     _, _, g, n = b.shape
     assert s % chunk == 0, "seq must divide chunk"

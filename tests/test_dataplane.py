@@ -283,3 +283,88 @@ class TestVectorizedLookups:
             p, pr = pool.index_lookup(k)
             assert (p if p is not None else -1) == bp[k]
             assert pr == bpr[k]
+
+
+# ---------------------------------------------------------------------------
+# compiled batch executor (engine="jit") vs the host window engine
+# ---------------------------------------------------------------------------
+def build_jit_pair(seed, cache_bytes, num_keys=6000):
+    """Two identical array-cache clusters: one runs the host window
+    engine, the other the compiled batch executor."""
+    out = []
+    for _ in range(2):
+        c = DinomoCluster(VARIANTS["dinomo"], num_kns=4,
+                          cache_bytes=cache_bytes, value_bytes=1024,
+                          num_buckets=1 << 13, segment_capacity=256,
+                          seed=seed, reference_cache=False)
+        c.load(((k, f"v{k}") for k in range(num_keys)), warm=True)
+        out.append(c)
+    return out
+
+
+class TestJitEngineEquivalence:
+    """ISSUE 9 tentpole: ``execute_batch(engine="jit")`` must be
+    decision-for-decision identical to the host window engine on the
+    same sweep grid the host engine is pinned against the per-op
+    reference with -- which transitively pins the compiled executor to
+    the scalar path (truncation residuals replay through the host
+    engine, so every config exercises the handoff seam)."""
+
+    @given(st.integers(0, 10**6), st.sampled_from(MIX_NAMES),
+           st.floats(0.4, 2.1), st.integers(14, 21))
+    @settings(max_examples=8, deadline=None)
+    def test_stats_identical(self, seed, mix, zipf, cache_pow):
+        a, b = build_jit_pair(seed % 7, 1 << cache_pow)
+        w = Workload(num_keys=6000, zipf=zipf, mix=mix, seed=seed)
+        kinds, keys = w.ops_arrays(4000)
+        a.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+        b.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                        engine="jit")
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+        assert a.aggregate_stats() == b.aggregate_stats()
+
+    def test_dispatch_and_replay_both_engage(self):
+        """Coverage pin: on a write-heavy trace with a tight cache the
+        compiled engine genuinely dispatches device windows AND hands
+        truncation residuals to host replay -- the equivalence sweep
+        above cannot rot into an always-replay identity."""
+        from repro.core.transition import ENGINE_WALL, reset_engine_wall
+        a, b = build_jit_pair(3, 1 << 15)
+        w = Workload(num_keys=6000, zipf=1.2, mix="write_heavy_update",
+                     seed=3)
+        kinds, keys = w.ops_arrays(6000)
+        a.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+        reset_engine_wall()
+        b.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                        engine="jit")
+        assert ENGINE_WALL["jit_dispatch"] > 0
+        assert ENGINE_WALL["host_replay"] > 0
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+        assert a.aggregate_stats() == b.aggregate_stats()
+
+    def test_collected_values_identical(self):
+        a, b = build_jit_pair(5, 1 << 18)
+        w = Workload(num_keys=6000, zipf=0.99, mix="read_mostly_update",
+                     seed=5)
+        kinds, keys = w.ops_arrays(3000)
+        ra = a.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                             collect_values=True)
+        rb = b.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                             collect_values=True, engine="jit")
+        assert ra.values == rb.values
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+
+    def test_chained_batches_stay_identical(self):
+        """Residency across batches: device state is uploaded once and
+        synced at batch end; a later batch must see exactly the state
+        the host engine would have."""
+        a, b = build_jit_pair(7, 1 << 17)
+        for s in range(3):
+            w = Workload(num_keys=6000, zipf=1.1,
+                         mix="write_heavy_update", seed=s)
+            kinds, keys = w.ops_arrays(2000)
+            a.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+            b.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                            engine="jit")
+            assert cluster_snapshot(a) == cluster_snapshot(b)
+        assert a.aggregate_stats() == b.aggregate_stats()

@@ -421,3 +421,129 @@ def test_env_interpret_default_resolution():
     d2, t2, u2 = cache_transition_ref(rows, vic, 1000, 10, cap=4096)
     np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
     np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+
+
+# ---------------------------------------------------------------- #
+# interpret-mode fallback warning dedup (regression: pytest resets  #
+# the stdlib warning filters between tests, so the old registry-    #
+# based dedup re-warned on every kernel call under the              #
+# REPRO_PALLAS_INTERPRET=0 CI leg)                                  #
+# ---------------------------------------------------------------- #
+
+def test_fallback_warning_fires_once_per_kernel(monkeypatch):
+    import warnings
+
+    from repro.kernels import interpret as itp
+
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    monkeypatch.setattr(itp, "_backend_supports_compiled", lambda: False)
+    itp.reset_fallback_warnings()
+    try:
+        with pytest.warns(RuntimeWarning, match="kvs_lookup"):
+            assert itp.resolve_interpret(None, kernel="kvs_lookup") is True
+        # second resolution of the same kernel: silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert itp.resolve_interpret(None, kernel="kvs_lookup") is True
+        # a different kernel still gets its one warning
+        with pytest.warns(RuntimeWarning, match="log_append_merge"):
+            itp.resolve_interpret(None, kernel="log_append_merge")
+        # explicit interpret= never consults the env or warns
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert itp.resolve_interpret(True) is True
+            assert itp.resolve_interpret(False) is False
+    finally:
+        itp.reset_fallback_warnings()
+
+
+# ---------------------------------------------------------------- #
+# batch_executor: the compiled window engine vs its numpy oracle    #
+# ---------------------------------------------------------------- #
+
+from repro.kernels import batch_executor as be  # noqa: E402
+
+
+def _be_run_chain(seed, nslots=32, w=64, windows=3):
+    """Run ``windows`` chained windows through both engines from an
+    empty state, asserting bit-exact agreement (executed prefix of the
+    event/out_ptr tapes, the cut reason, and all eight state arrays)."""
+    rng = np.random.default_rng(seed)
+    cap = int(rng.integers(40, 2000))
+    wb = int(rng.integers(8, 200))
+    amr = float(rng.choice([0.5, 1.0, 3.7, 10.0, 0.125]))
+    vmax = be.build_promote_table(amr)
+    z = np.zeros(nslots, np.int32)
+    state = be.init_state(z, z.copy(), z.copy(), z.copy(), z.copy(),
+                          np.zeros(be.CNT_HIST_MAX + 1, np.int32),
+                          0, 0, 0, 0, 0)
+    jstate = tuple(np.array(a) for a in state)
+    for _ in range(windows):
+        ops = rng.integers(0, 2, w).astype(np.int32)
+        n = int(rng.integers(1, w + 1))
+        keys = rng.integers(0, nslots, w).astype(np.int32)
+        wptr = rng.integers(0, 10000, w).astype(np.int32)
+        pm_ptr = rng.choice(
+            np.array([be.PM_INVALID, be.PM_ABSENT, 5, 77, 1234],
+                     np.int32), w,
+            p=[0.08, 0.2, 0.24, 0.24, 0.24]).astype(np.int32)
+        pm_len = rng.integers(1, 300, w).astype(np.int32)
+        seg0 = (rng.random(w) < 0.05).astype(np.int32)
+        ne_r, st_r, ev_r, op_r, cut_r = be.fused_window_ref(
+            state, ops, keys, wptr, pm_ptr, pm_len, seg0, n, cap, wb,
+            vmax)
+        j = be.fused_window(jstate, ops, keys, wptr, pm_ptr, pm_len,
+                            seg0, n, cap, wb, vmax)
+        ne_j, st_j = int(j[0]), j[1]
+        assert (ne_r, cut_r) == (ne_j, int(j[4]))
+        np.testing.assert_array_equal(ev_r[:ne_r],
+                                      np.array(j[2])[:ne_r])
+        np.testing.assert_array_equal(op_r[:ne_r],
+                                      np.array(j[3])[:ne_r])
+        for a, b in zip(st_r, st_j):
+            np.testing.assert_array_equal(a, np.array(b))
+        state = st_r
+        jstate = tuple(np.array(a) for a in st_r)
+    return state
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_batch_executor_matches_oracle_chain(seed):
+    """Multi-window chains over a tiny slot space (heavy collisions,
+    evictions, demotions, window cuts) agree bit-for-bit with the
+    numpy oracle -- the fused engine's per-op contract."""
+    _be_run_chain(seed)
+
+
+def test_batch_executor_truncation_residual():
+    """A cut window reports the executed prefix length and a cut
+    reason; state equals the oracle's state after exactly that prefix,
+    so the host can replay the residual ops scalar-for-scalar (the
+    device->host truncation contract execute_batch relies on)."""
+    nslots, w = 16, 64
+    vmax = be.build_promote_table(1.0)
+    z = np.zeros(nslots, np.int32)
+    state = be.init_state(z, z.copy(), z.copy(), z.copy(), z.copy(),
+                          np.zeros(be.CNT_HIST_MAX + 1, np.int32),
+                          0, 0, 0, 0, 0)
+    jstate = tuple(np.array(a) for a in state)
+    # all kind-0 reads; op 10 probes a segcache-backed key, which the
+    # device cannot resolve -> cut there, residual [10, w) to the host
+    ops = np.zeros(w, np.int32)
+    keys = (np.arange(w, dtype=np.int32) % nslots)
+    wptr = np.zeros(w, np.int32)
+    pm_ptr = np.full(w, 500, np.int32)
+    pm_len = np.full(w, 100, np.int32)
+    seg0 = np.zeros(w, np.int32)
+    seg0[10] = 1
+    ne_r, st_r, ev_r, op_r, cut_r = be.fused_window_ref(
+        state, ops, keys, wptr, pm_ptr, pm_len, seg0, w, 1 << 20, 64,
+        vmax)
+    j = be.fused_window(jstate, ops, keys, wptr, pm_ptr, pm_len, seg0,
+                        w, 1 << 20, 64, vmax)
+    assert (ne_r, cut_r) == (10, be.CUT_SEGCACHE)
+    assert (int(j[0]), int(j[4])) == (ne_r, cut_r)
+    np.testing.assert_array_equal(ev_r[:ne_r], np.array(j[2])[:ne_r])
+    np.testing.assert_array_equal(op_r[:ne_r], np.array(j[3])[:ne_r])
+    for a, b in zip(st_r, j[1]):
+        np.testing.assert_array_equal(a, np.array(b))

@@ -447,3 +447,51 @@ class TestMergePlaneSweepSlow:
         assert a.merge_all() == b.merge_all()
         assert_tables_equal(a.index, b.index)
         assert pool_state(a) == pool_state(b)
+
+
+class TestJitClusterMergePlane:
+    """The adversarial cluster merge cases through the compiled batch
+    executor: stall merges dirty keys/buckets mid-batch, so the device
+    engine must invalidate its prefetches and stay identical to the
+    host engine's decisions."""
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=5, deadline=None)
+    def test_stall_merges_jit_identical(self, seed):
+        a, b = build_pair("dinomo", seed % 3, 1 << 19,
+                          segment_capacity=24)[1], \
+               build_pair("dinomo", seed % 3, 1 << 19,
+                          segment_capacity=24)[1]
+        w = Workload(num_keys=4000, zipf=1.2,
+                     mix="write_heavy_update", seed=seed % 101)
+        kinds, keys = w.ops_arrays(2000)
+        reset_merge_plan_stats()
+        a.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+        planned_host = MERGE_PLAN_STATS["planned_entries"]
+        assert planned_host > 0
+        b.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                        engine="jit")
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+        assert MERGE_PLAN_STATS["planned_entries"] == 2 * planned_host
+        assert sum(kn.stats.write_stalls for kn in b.kns.values()) > 0
+
+    def test_contested_index_jit(self):
+        """Chain growth mid-run (2^8 buckets): merge-plan truncation +
+        scalar replay inside stall merges, under the jit engine."""
+        a = build_pair("dinomo", 1, 1 << 19, num_keys=600,
+                       segment_capacity=32, num_buckets=1 << 8)[1]
+        b = build_pair("dinomo", 1, 1 << 19, num_keys=600,
+                       segment_capacity=32, num_buckets=1 << 8)[1]
+        w1 = Workload(num_keys=600, zipf=1.0,
+                      mix="write_heavy_insert", seed=3)
+        w2 = Workload(num_keys=600, zipf=1.0,
+                      mix="write_heavy_insert", seed=3)
+        reset_merge_plan_stats()
+        kinds, keys = w1.ops_arrays(1500)
+        a.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+        kinds, keys = w2.ops_arrays(1500)
+        b.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                        engine="jit")
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+        assert MERGE_PLAN_STATS["planned_entries"] > 0
+        assert MERGE_PLAN_STATS["replayed_entries"] > 0

@@ -239,10 +239,13 @@ class TestExactlyOnceAcrossCrash:
         assert any(e["kind"] == "kn_crash" for e in res.events)
         assert any(e["kind"] == "kn_recovered" for e in res.events)
         assert not list(c.pool.verify_integrity())
-        # every completed write's request ID is durably registered ...
+        # every completed write's request ID is durably registered
+        # until the retry horizon passes it (then retired -- the
+        # dedup-table compaction, tested below)
         for op in res.records:
             if op.kind != 0 and op.status == COMPLETED:
-                assert c.pool.req_applied(op.req_id)
+                assert c.pool.req_applied(op.req_id) \
+                    or op.req_id < plane.retire_horizon
         # ... no shed / never-dispatched write's ID is ...
         assert not any(c.pool.req_applied(r)
                        for r in plane.never_applied_reqs)
@@ -281,6 +284,52 @@ class TestExactlyOnceAcrossCrash:
         bad = [k for k, ok in verdicts.items() if not ok]
         assert not bad, f"non-linearizable keys: {bad}"
         assert not list(c.pool.verify_integrity())
+
+    def test_req_index_retirement_keeps_table_bounded(self):
+        """Regression (ISSUE 9): the exactly-once dedup table
+        (``DPMPool.req_index``) grew one entry per write for the life
+        of the pool.  The plane now retires IDs below the retry
+        horizon each round; the table must end bounded by the open
+        write set, not by total writes -- with retries and a crash in
+        the history, and exactly-once intact."""
+        c = make_cluster(num_keys=800)
+        fp = FaultPlane(seed=5)
+        c.pool.faults = fp
+        fp.arm_crash("log.pre_seal", after=40)
+        cfg = RequestPlaneConfig(max_retries=3, deadline_s=0.05)
+        plane, res = run_plane(c, load_frac=0.7, num_keys=800,
+                               mix="write_heavy_update", cfg=cfg)
+        cnt = res.counters
+        assert cnt["crashes"] >= 1 and cnt["retries"] > 0
+        completed_writes = [op for op in res.records
+                            if op.kind != 0 and op.status == COMPLETED]
+        assert len(completed_writes) > 100
+        # retirement actually ran, and the surviving table is a small
+        # residue (IDs at/above the final horizon), not the full
+        # write history
+        assert cnt["retired_reqs"] > 0
+        assert len(c.pool.req_index) < len(completed_writes) / 2
+        assert cnt["retired_reqs"] + len(c.pool.req_index) >= \
+            len(completed_writes)
+        # exactly-once survived compaction: no request ID has two
+        # sealed log entries
+        per_req = {}
+        for segs in c.pool.segments.values():
+            for seg in segs:
+                for sealed, rid in zip(seg.sealed, seg.reqs):
+                    if sealed and rid >= 0:
+                        per_req[rid] = per_req.get(rid, 0) + 1
+        dups = {r: n for r, n in per_req.items() if n > 1}
+        assert not dups, f"double-applied request IDs: {dups}"
+
+    def test_retire_reqs_drops_only_below_watermark(self):
+        from repro.core.dpm_pool import DPMPool
+        pool = DPMPool(num_buckets=1 << 8, segment_capacity=16)
+        pool.register_reqs([3, 7, 11, -1], [100, 101, 102, 103])
+        assert pool.retire_reqs(8) == 2
+        assert not pool.req_applied(3) and not pool.req_applied(7)
+        assert pool.req_applied(11)
+        assert pool.retire_reqs(8) == 0
 
     def test_failed_never_dispatched_writes_are_noops(self):
         # all KNs dead except none available: route to dead owner

@@ -124,6 +124,80 @@ class TestDeprecationsPass:
                             "write_once"}
 
 
+class TestBaselineJustification:
+    """Regression (ISSUE 9): ``--write-baseline`` used to stamp every
+    entry with a placeholder justification, so the committed baseline
+    silently waived real findings and ``--strict`` never saw them."""
+
+    def _findings(self):
+        return [Finding("p", "f.py", 1, "error", "sym", "msg", "d1"),
+                Finding("p", "g.py", 2, "error", "sym2", "msg2", "d2")]
+
+    def test_write_baseline_rejects_placeholder_and_blank(self, tmp_path):
+        from repro.analysis import (PLACEHOLDER_JUSTIFICATION,
+                                    write_baseline)
+        out = tmp_path / "baseline.json"
+        for bad in ("", "   ", PLACEHOLDER_JUSTIFICATION):
+            with pytest.raises(ValueError, match="justification"):
+                write_baseline(self._findings(), out, justification=bad)
+            assert not out.exists()
+
+    def test_write_baseline_stamps_real_justification(self, tmp_path):
+        import json
+
+        from repro.analysis import unjustified, write_baseline
+        out = tmp_path / "baseline.json"
+        write_baseline(self._findings(), out,
+                       justification="vendored shim, tracked in #12")
+        data = json.loads(out.read_text())
+        assert len(data["findings"]) == 2
+        for entry in data["findings"].values():
+            assert entry["justification"] == \
+                "vendored shim, tracked in #12"
+            assert not unjustified(entry)
+
+    def test_empty_findings_need_no_justification(self, tmp_path):
+        import json
+
+        from repro.analysis import write_baseline
+        out = tmp_path / "baseline.json"
+        write_baseline([], out)
+        assert json.loads(out.read_text())["findings"] == {}
+
+    def test_unjustified_semantics(self):
+        from repro.analysis import PLACEHOLDER_JUSTIFICATION, unjustified
+        assert unjustified({})
+        assert unjustified({"justification": ""})
+        assert unjustified({"justification": "  "})
+        assert unjustified({"justification": PLACEHOLDER_JUSTIFICATION})
+        assert not unjustified({"justification": "real reason"})
+
+    def test_cli_write_baseline_without_justify_errors(self, capsys):
+        # the purity fixture tree has findings; without --justify the
+        # CLI must refuse (exit 2) before writing anything
+        from repro.analysis.__main__ import main
+        rc = main(["--root", str(FIXTURES / "purity"),
+                   "--write-baseline"])
+        assert rc == 2
+        assert "justification" in capsys.readouterr().err
+
+    def test_strict_fails_unjustified_baselined_entry(self, monkeypatch):
+        # a baseline entry without a real justification does not shield
+        # its finding from --strict
+        import repro.analysis.__main__ as cli
+        corpus = Corpus(FIXTURES / "purity")
+        findings = run_passes(corpus, ALL_PASSES)
+        assert findings
+        fake = {f.fingerprint: {"justification": ""} for f in findings}
+        monkeypatch.setattr(cli, "load_baseline", lambda: fake)
+        assert cli.main(["--root", str(FIXTURES / "purity"),
+                         "--strict"]) == 1
+        for f in findings:
+            fake[f.fingerprint]["justification"] = "known fixture"
+        assert cli.main(["--root", str(FIXTURES / "purity"),
+                         "--strict"]) == 0
+
+
 class TestRealTree:
     def test_zero_new_findings(self):
         """The tier-1 smoke mirror of CI's --strict gate: every finding

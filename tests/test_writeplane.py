@@ -607,3 +607,92 @@ class TestHistogramSpill:
         kinds, keys = w2.ops_arrays(2500)
         b.execute_batch(kinds, keys, values=lambda i: f"w{i}")
         assert cluster_snapshot(a) == cluster_snapshot(b)
+
+
+# ---------------------------------------------------------------------------
+# compiled batch executor (engine="jit") through the write plane
+# ---------------------------------------------------------------------------
+def build_jit_pair(seed, cache_bytes, num_keys=4000, segment_capacity=64,
+                   num_buckets=1 << 12, merge_allowance=None):
+    """Two identical array-cache clusters: host engine vs compiled."""
+    out = []
+    for _ in range(2):
+        c = DinomoCluster(VARIANTS["dinomo"], num_kns=4,
+                          cache_bytes=cache_bytes, value_bytes=1024,
+                          num_buckets=num_buckets,
+                          segment_capacity=segment_capacity,
+                          seed=seed, reference_cache=False)
+        c.load(((k, f"v{k}") for k in range(num_keys)), warm=True)
+        c.pool.merge_allowance = merge_allowance
+        out.append(c)
+    return out
+
+
+class TestJitWritePlane:
+    """The compiled executor across the write-plane knob grid (same
+    grid as TestWritePlaneEquivalence): deletes force per-op host
+    handoffs inside device windows, tiny allowances and contested
+    indexes force mid-batch merges that dirty device-resident state."""
+
+    @given(st.integers(0, 10**6), st.sampled_from(MIX_NAMES),
+           st.integers(15, 20),
+           st.sampled_from([None, 24]),          # merge allowance
+           st.sampled_from([1 << 12, 1 << 7]))   # index contestedness
+    @settings(max_examples=10, deadline=None)
+    def test_mixed_batches_identical(self, seed, mix, cache_pow,
+                                     allowance, num_buckets):
+        a, b = build_jit_pair(seed % 5, 1 << cache_pow,
+                              num_buckets=num_buckets,
+                              merge_allowance=allowance)
+        kinds, keys = mixed_ops(seed, 4000, 3000, mix)
+        a.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+        b.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                        engine="jit")
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+        assert a.aggregate_stats() == b.aggregate_stats()
+        probe = np.random.default_rng(seed).integers(0, 4200, 200)
+        va, _ = a.batch_read(probe)
+        vb, _ = b.batch_read(probe)
+        assert va == vb
+
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=6, deadline=None)
+    def test_seal_boundaries_mid_batch(self, seed):
+        """Tiny segments: rotations + stall merges land mid-window and
+        invalidate device-side prefetches (the dirty-key/bucket seam);
+        the compiled run must replay them at exact per-op positions."""
+        a, b = build_jit_pair(seed % 3, 1 << 19, segment_capacity=24)
+        kinds, keys = mixed_ops(seed, 4000, 2500, "write_heavy_update",
+                                delete_frac=0.05)
+        a.execute_batch(kinds, keys, values=lambda i: f"w{i}")
+        b.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                        engine="jit")
+        assert cluster_snapshot(a) == cluster_snapshot(b)
+        assert sum(kn.stats.write_stalls for kn in b.kns.values()) > 0
+
+    def test_linearizable_jit_with_stall_merges(self):
+        """Linearizability over a jit-batched put/get/update run with
+        interleaved stall merges -- the engine="jit" twin of
+        test_linearizable_batched_with_stall_merges."""
+        from repro.core.linearizability import Op, check_history
+        c = DinomoCluster(VARIANTS["dinomo"], num_kns=4,
+                          cache_bytes=1 << 19, value_bytes=1024,
+                          num_buckets=1 << 12, segment_capacity=24,
+                          seed=3)
+        c.load(((k, f"v{k}") for k in range(2000)), warm=True)
+        kinds, keys = mixed_ops(11, 2000, 1500, "write_heavy_update",
+                                delete_frac=0.0)
+        res = c.execute_batch(kinds, keys, values=lambda i: f"w{i}",
+                              collect_values=True, engine="jit")
+        assert sum(kn.stats.write_stalls
+                   for kn in c.kns.values()) > 0    # merges interleaved
+        ops = []
+        for i, (kd, k) in enumerate(zip(kinds.tolist(), keys.tolist())):
+            t = float(i)
+            if kd == 0:
+                ops.append(Op("read", k, res.values[i], t, t + 0.5))
+            else:
+                ops.append(Op("write", k, f"w{i}", t, t + 0.5))
+        verdicts = check_history(
+            ops, initial=lambda k: f"v{k}" if k < 2000 else None)
+        assert verdicts and all(verdicts.values())
