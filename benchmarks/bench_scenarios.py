@@ -14,7 +14,14 @@ The rows double as acceptance gates (asserted here and in CI):
   * DINOMO's crash rows show sub-second recovery windows and no
     zero-throughput epochs, while shared-nothing (dinomo-n) pays a
     reorganization outage orders of magnitude wider -- the Fig. 8
-    contrast, now measured under composed production traffic.
+    contrast, now measured under composed production traffic;
+  * the fencing rows (ISSUE 10, ownership variants only): a kn-dpm
+    partition visibly degrades delivery while open and delivery
+    recovers after the heal (DINOMO back above half; shared-nothing
+    merely nonzero -- it pays a real reorganization); the zombie row
+    fences *every* stale-token flush attempt, keeps the acked history
+    linearizable, and reports an effective detection latency inside
+    the heartbeat-model bound.
 
 Usage:  PYTHONPATH=src python -m benchmarks.bench_scenarios [--smoke]
 """
@@ -28,11 +35,18 @@ import os
 import time
 
 from benchmarks.common import host_fingerprint
+from repro.core.netmodel import DEFAULT_MODEL
 from repro.core.scenarios import (BENCH_VARIANTS, SCENARIOS,
                                   ScenarioConfig, run_suite)
 
 OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                    "BENCH_scenarios.json")
+
+# detection-SLO bound for the zombie row: the calibrated detection
+# timer plus one delayed-and-jittered heartbeat plus scheduling slack
+_CFG = ScenarioConfig()
+DETECT_BOUND_S = (DEFAULT_MODEL.detect_s + _CFG.heartbeat_delay_s
+                  + _CFG.heartbeat_jitter_s + 0.05)
 
 
 def check_slos(results) -> list[str]:
@@ -53,6 +67,35 @@ def check_slos(results) -> list[str]:
         d, n = crash["dinomo"], crash["dinomo-n"]
         if not (n.recovery_window_s or 0) > 5 * (d.recovery_window_s or 1):
             bad.append("crash: dinomo-n window not >5x dinomo's")
+    for r in results:
+        tag = f"{r.scenario}/{r.variant}"
+        e = r.extra
+        if r.scenario == "partition" and "min_delivery_during" in e:
+            during, after = e["min_delivery_during"], \
+                e["mean_delivery_after"]
+            if during is None or during >= 0.97:
+                bad.append(f"{tag}: partition not visible in delivery "
+                           f"(min during={during})")
+            # recovery is variant-aware: DINOMO hands nothing off and
+            # must come back above half; shared-nothing reorganizes the
+            # partitioned range and only has to keep serving
+            floor = 0.5 if r.variant == "dinomo" else 0.0
+            if after is None or after <= floor:
+                bad.append(f"{tag}: delivery did not recover after "
+                           f"heal (mean after={after}, floor={floor})")
+        if r.scenario == "zombie" and "zombie_attempts" in e:
+            if not e["zombie_attempts"]:
+                bad.append(f"{tag}: zombie staged no flush attempts")
+            elif e["zombie_fenced"] != e["zombie_attempts"]:
+                bad.append(f"{tag}: {e['zombie_attempts'] - e['zombie_fenced']}"
+                           f"/{e['zombie_attempts']} stale writes "
+                           "slipped past the fence")
+            if not e.get("linearizable"):
+                bad.append(f"{tag}: acked history not linearizable")
+            detect = e.get("detect_s")
+            if detect is None or not 0 < detect <= DETECT_BOUND_S:
+                bad.append(f"{tag}: detection latency {detect} outside "
+                           f"(0, {DETECT_BOUND_S}]")
     return bad
 
 

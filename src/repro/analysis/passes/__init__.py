@@ -3,11 +3,11 @@
 
 from __future__ import annotations
 
-from . import (crash_points, deprecations, determinism, kernel_hygiene,
-               plan_purity)
+from . import (crash_points, deprecations, determinism, fence_coverage,
+               kernel_hygiene, plan_purity)
 
-ALL_PASSES = (plan_purity, crash_points, determinism, kernel_hygiene,
-              deprecations)
+ALL_PASSES = (plan_purity, crash_points, fence_coverage, determinism,
+              kernel_hygiene, deprecations)
 
 BY_NAME = {m.NAME: m for m in ALL_PASSES}
 

@@ -7,9 +7,10 @@ from .cluster import (CLOVER, DINOMO, DINOMO_N, DINOMO_S, VARIANTS,
                       ArrayCloverCache, BatchResult, CloverCache,
                       DinomoCluster, VariantConfig)
 from .dac import ArrayDAC, ArrayStaticCache, DAC, StaticCache
-from .dpm_pool import DPMPool
+from .dpm_pool import DPMPool, FencedWrite
 from .faults import (ALL_POINTS, ARMABLE_POINTS, CRASH_POINTS,
-                     FaultPlane, KNCrash)
+                     FaultPlane, KNCrash, LOG_MERGE_POINTS, Partition,
+                     SlowSpec)
 from .hashring import HashRing, stable_hash
 from .linearizability import Op, check_history, check_key_history
 from .mnode import Action, EpochStats, PolicyConfig, PolicyEngine
@@ -30,7 +31,8 @@ __all__ = [
     "CLOVER", "VARIANTS", "DAC", "ArrayDAC", "ArrayStaticCache",
     "StaticCache", "CloverCache", "ArrayCloverCache", "DPMPool",
     "FaultPlane", "KNCrash", "CRASH_POINTS", "ALL_POINTS",
-    "ARMABLE_POINTS",
+    "ARMABLE_POINTS", "LOG_MERGE_POINTS", "FencedWrite", "Partition",
+    "SlowSpec",
     "HashRing",
     "stable_hash", "Op", "check_history", "check_key_history", "Action",
     "EpochStats", "PolicyConfig", "PolicyEngine", "NetModel",

@@ -25,10 +25,9 @@ import numpy as np
 
 from .dac import (ArrayDAC, ArrayStaticCache, DAC, StaticCache,
                   CacheStats, CNT_HIST_MAX)
-from .dpm_pool import DPMPool
+from .dpm_pool import DPMPool, FencedWrite
 from .faults import CRASH_POINTS, KNCrash
 from . import sanitize
-from .log import PySegment
 from .mnode import PolicyConfig, PolicyEngine
 from .netmodel import NetModel, DEFAULT_MODEL
 from .hashring import stable_hash
@@ -282,6 +281,11 @@ class KVSNode:
         self.stats = KNStats()
         self.alive = True
         self.available = True      # False while participating in a reconfig
+        # the ownership epoch this KN believes it holds: captured from
+        # the cluster at every reconfiguration, presented with every
+        # DPM mutation.  A partitioned KN keeps its *old* token while
+        # the cluster moves on -- the DPM fence then rejects it.
+        self.fence_token: int | None = None
 
     # ----- helpers ---------------------------------------------------------
     def _segcache_put(self, key: int, ptr: int, length: int):
@@ -360,6 +364,10 @@ class DinomoCluster:
                                  reference_cache=self.reference_cache)
         ev = self.ownership.add_kn(name)
         cost = self._reconfigure(ev) if record else None
+        if not record:
+            # initial construction bypasses _reconfigure; the fence
+            # table still has to reach the pool before any write
+            self._publish_fences()
         return name, ev if record else None
 
     def remove_kn(self, name: str) -> ReconfigEvent:
@@ -391,6 +399,12 @@ class DinomoCluster:
         participants = [p for p in ev.participants if p in self.kns]
         for p in participants:
             self.kns[p].available = False                 # step 2
+        # fence the handoff *before* anyone touches the moved ranges:
+        # the ownership map already bumped the participants' (and a
+        # failed node's) generations, so publishing here invalidates
+        # every token the old owners still hold -- a zombie that heals
+        # after this point can no longer mutate DPM state
+        self._publish_fences()
         merged = 0
         recovery = None
         if failed is not None:
@@ -423,6 +437,15 @@ class DinomoCluster:
             rec["recovery"] = recovery
         self.reconfig_log.append(rec)
         return rec
+
+    def _publish_fences(self) -> None:
+        """Install the ownership map's fence generations at the pool
+        (the store-side fence every DPM mutation validates against) and
+        refresh the tokens live KNs hold in soft state."""
+        self.pool.publish_fences(self.ownership.fence)
+        for nm, kn in self.kns.items():
+            if kn.alive:    # a dead/zombie node keeps its stale token
+                kn.fence_token = self.ownership.fence.get(nm)
 
     # ---------------------------------------------------------------------
     # selective replication mechanics (policy lives in mnode)
@@ -543,16 +566,21 @@ class DinomoCluster:
         logical_key = -key - 1 if delete else key
         replicated = (self.variant.selective_replication
                       and self.ownership.is_replicated(key) and not delete)
-        ptr, rotated = self.pool.log_write(kn.name, logical_key,
-                                           None if delete else value, length,
-                                           req_id=req_id)
+        res = self.pool.log_write(kn.name, logical_key,
+                                  None if delete else value, length,
+                                  req_id=req_id, token=kn.fence_token)
+        if isinstance(res, FencedWrite):
+            kn.stats.refused += 1       # stale epoch: clean no-op
+            return 0.0, False
+        ptr, rotated = res
         if self.pool.write_blocked(kn.name):
             kn.stats.write_stalls += 1
             self.pool.merge_budget(self.pool.segment_capacity)
         if replicated:
             # atomically swing the indirect pointer: one-sided CAS
             expect = self.pool.read_indirect(key)
-            self.pool.cas_indirect(key, expect, ptr)
+            self.pool.cas_indirect(key, expect, ptr,
+                                   kn=kn.name, token=kn.fence_token)
             rts += 1.0
             kn.cache.update_pointer(key, ptr, length)
         elif delete:
@@ -593,9 +621,13 @@ class DinomoCluster:
         kn.stats.writes += 1
         length = 0 if delete else self.value_bytes
         logical_key = -key - 1 if delete else key
-        ptr, _ = self.pool.log_write(kn.name, logical_key,
-                                     None if delete else value, length,
-                                     req_id=req_id)
+        res = self.pool.log_write(kn.name, logical_key,
+                                  None if delete else value, length,
+                                  req_id=req_id, token=kn.fence_token)
+        if isinstance(res, FencedWrite):
+            kn.stats.refused += 1
+            return 0.0, False
+        ptr, _ = res
         self.pool.merge_all(kn.name)    # Clover updates metadata in place
         rts = 2.0                       # out-of-place append + link/CAS
         self.versions[key] = self.versions.get(key, 0) + 1
@@ -901,7 +933,7 @@ class DinomoCluster:
                 # and the event loop never leave one, but an external
                 # caller could) -- mirrors fill_segments_batch
                 pool.merge_backlog.append((active, 0))
-                active = PySegment(cap, nm)
+                active = pool.new_segment(nm)
                 pool.segments[nm].append(active)
                 pool.gc.segments_created += 1
             c0 = len(active.entries)
@@ -916,7 +948,7 @@ class DinomoCluster:
                 lo = hi_
                 if lo >= m:
                     break
-                seg = PySegment(cap, nm)
+                seg = pool.new_segment(nm)
             rotm = (c0 + seq) % cap == 0
             rpos = wpos[sel][rotm]
             # every full range in segq corresponds to one rotation
@@ -955,6 +987,7 @@ class DinomoCluster:
         if segq is None or k >= len(segq):
             return
         seg, lo, hi = segq[k]
+        g = pool._gen_of(nm, self.kns[nm].fence_token)
         fp = pool.faults
         if fp is not None and fp.armed and hi > lo:
             j = fp.take_crash(CRASH_POINTS.LOG_PRE_SEAL, nm, hi - lo)
@@ -966,6 +999,7 @@ class DinomoCluster:
                                        pl[lo:lo + j + 1]))
                 seg.sealed.extend([True] * j + [False])
                 seg.reqs.extend(rq[lo:lo + j + 1])
+                seg.gens.extend([g] * (j + 1))
                 seg.valid += j + 1
                 # only the sealed prefix durably applied; the torn
                 # entry's request stays unregistered so its retry lands
@@ -976,6 +1010,7 @@ class DinomoCluster:
             seg.entries.extend(zip(lk[lo:hi], pl[lo:hi]))
             seg.sealed.extend([True] * (hi - lo))
             seg.reqs.extend(rq[lo:hi])
+            seg.gens.extend([g] * (hi - lo))
             seg.valid += hi - lo
             pool.register_reqs(rq[lo:hi], pl[lo:hi])
             plan.rot_done[nm] = k + 1
@@ -986,7 +1021,7 @@ class DinomoCluster:
                 raise KNCrash(nm, CRASH_POINTS.LOG_ROTATION)
             pool.merge_backlog.append((seg, 0))
             nxt = segq[k + 1][0] if k + 1 < len(segq) \
-                else PySegment(pool.segment_capacity, nm)
+                else pool.new_segment(nm)
             pool.segments[nm].append(nxt)
             pool.gc.segments_created += 1
             return
@@ -996,6 +1031,7 @@ class DinomoCluster:
             seg.entries.extend(zip(lk[lo:hi], pl[lo:hi]))
             seg.sealed.extend([True] * (hi - lo))
             seg.reqs.extend(rq[lo:hi])
+            seg.gens.extend([g] * (hi - lo))
             seg.valid += hi - lo
             pool.register_reqs(rq[lo:hi], pl[lo:hi])
             plan.rot_done[nm] = k + 1
@@ -1746,7 +1782,8 @@ class DinomoCluster:
             if replicated:
                 # atomically swing the indirect pointer: one-sided CAS
                 expect = self.pool.read_indirect(k)
-                self.pool.cas_indirect(k, expect, ptr)
+                self.pool.cas_indirect(k, expect, ptr,
+                                       kn=kn.name, token=kn.fence_token)
                 rts += 1.0
                 kn.cache.update_pointer(k, ptr, length)
                 dkeys.add(k)   # index_lookup(k) now resolves differently
@@ -1879,11 +1916,12 @@ class DinomoCluster:
             heap.append(None if delete
                         else self._value_at(i, value, values))
             heap_len.append(length)
-            seg = PySegment(cap, nm)
+            seg = pool.new_segment(nm)
             seg.entries.append((-k - 1 if delete else k, ptr))
             seg.sealed.append(True)
             rid = -1 if req_ids is None else int(req_ids[i])
             seg.reqs.append(rid)
+            seg.gens.append(pool.fence.get(nm, 0))
             if rid >= 0:
                 pool.req_index[rid] = ptr
             seg.valid = 1
@@ -1923,7 +1961,7 @@ class DinomoCluster:
             # align the version counter with the per-op merge cadence
             pool.index.version = v0 + vbump
         for nm in wrote:
-            pool.segments[nm] = [PySegment(cap, nm)]
+            pool.segments[nm] = [pool.new_segment(nm)]
         self.ms_ops += ms
         idx = np.asarray(exec_idx, dtype=np.int64)
         return BatchResult(len(exec_idx), writes, per_kn, keys[idx],

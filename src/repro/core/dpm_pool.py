@@ -22,6 +22,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from . import sanitize
 from .clht import NumpyCLHT
 from .faults import CRASH_POINTS, KNCrash
 from .log import PySegment
@@ -34,6 +35,24 @@ class GCStats:
     segments_created: int = 0
     segments_collected: int = 0
     entries_merged: int = 0
+
+
+@dataclass
+class FencedWrite:
+    """A DPM mutation rejected by the epoch fence: the caller presented
+    a stale ownership generation (it lost the range since it captured
+    the token -- the zombie-owner case under imperfect failure
+    detection).  The write was a clean no-op: no heap row, no log
+    entry, no index scatter, no accounting change.  Falsy, so callers
+    that treat the result as a success flag fail closed; machine
+    checkable via ``isinstance(r, FencedWrite)``."""
+    kn: str
+    op: str
+    token: int | None
+    current: int | None
+
+    def __bool__(self) -> bool:
+        return False
 
 
 class DPMPool:
@@ -85,6 +104,71 @@ class DPMPool:
         # the write/merge paths below raise KNCrash at named crash
         # points, leaving exactly the torn state a fail-stop would
         self.faults = None
+        # epoch fence table (Sec. 3.5 under imperfect failure
+        # detection): the current ownership generation per KN, published
+        # by the cluster at every reconfiguration.  Every mutation entry
+        # point validates the caller's token against it; stale writers
+        # get a FencedWrite no-op recorded in ``fenced_writes``.
+        self.fence: dict[str, int] = {}
+        self.fenced_writes: list[FencedWrite] = []
+
+    # ----- epoch fencing (zombie-owner protection) ---------------------------
+    def publish_fences(self, fences: dict) -> None:
+        """Install the ownership map's fence generations as the pool's
+        authoritative fence table -- the 'fence word' a real DPM would
+        keep next to each KN's log head.  For every KN whose generation
+        changed, each of its segments records a watermark: entries
+        appended from here on must carry the new generation, so a
+        zombie write that somehow slipped past the fence is detectable
+        forever after (``verify_integrity``).  KNs absent from the new
+        table (failed / removed) are fenced at generation infinity:
+        any token they still hold is stale.  Monotone per KN: a
+        replayed stale ownership snapshot can never wind a fence back
+        and re-validate a zombie's token."""
+        for kn, gen in fences.items():
+            old = self.fence.get(kn)
+            if old is not None and gen <= old:
+                continue
+            for seg in self.segments.get(kn, ()):
+                seg.gen_marks.append((len(seg.entries), gen))
+            self.fence[kn] = gen
+        for kn in [k for k in self.fence if k not in fences]:
+            for seg in self.segments.get(kn, ()):
+                seg.gen_marks.append((len(seg.entries),
+                                      self.fence[kn] + 1))
+            del self.fence[kn]
+
+    def fence_token(self, kn: str) -> int | None:
+        return self.fence.get(kn)
+
+    def _check_fence(self, kn, token, op: str):
+        """Validate a mutation's fence token.  Returns None when the
+        write may proceed, or the FencedWrite no-op record (already
+        logged in ``fenced_writes``) when the caller's generation is
+        stale.  ``token=None`` marks a management-plane caller
+        (reconfiguration, recovery, DPM processors, warm loads) --
+        exempt from fencing, but under REPRO_SANITIZE a KN-context
+        caller mutating fenced state without presenting a token is a
+        fence *bypass* and trips OwnershipViolation at the store."""
+        cur = self.fence.get(kn) if kn is not None else None
+        if token is None:
+            if sanitize.enabled() and cur is not None:
+                ctx = sanitize.current()
+                if ctx is not None and ctx != sanitize.MANAGEMENT:
+                    raise sanitize.OwnershipViolation(
+                        f"{op}: KN context {ctx!r} mutated fenced DPM "
+                        f"state of {kn!r} without a fence token "
+                        f"(fence bypass)")
+            return None
+        if cur is None or token != cur:
+            rec = FencedWrite(kn=kn, op=op, token=token, current=cur)
+            self.fenced_writes.append(rec)
+            return rec
+        return None
+
+    def _gen_of(self, kn: str, token) -> int:
+        """The generation to stamp on entries this write appends."""
+        return token if token is not None else self.fence.get(kn, 0)
 
     # ----- value heap --------------------------------------------------------
     def alloc_value(self, value, length: int,
@@ -99,8 +183,18 @@ class DPMPool:
         return self.heap_val[ptr], self.heap_len[ptr]
 
     # ----- exclusive per-KN logs (one-sided writes) ---------------------------
+    def new_segment(self, kn: str) -> PySegment:
+        """A fresh segment for ``kn``, watermarked with its current
+        fence generation (if fenced) so stale-generation entries are
+        detectable from the segment's first row."""
+        seg = PySegment(self.segment_capacity, kn)
+        g = self.fence.get(kn)
+        if g is not None:
+            seg.gen_marks.append((0, g))
+        return seg
+
     def register_kn(self, kn: str) -> None:
-        self.segments.setdefault(kn, [PySegment(self.segment_capacity, kn)])
+        self.segments.setdefault(kn, [self.new_segment(kn)])
 
     def drop_kn(self, kn: str) -> None:
         self.segments.pop(kn, None)
@@ -170,13 +264,18 @@ class DPMPool:
         return len(dead)
 
     def fill_segments_batch(self, kn: str, keys, ptrs,
-                            req_ids=None) -> list[PySegment]:
+                            req_ids=None, token=None):
         """Append a run of staged (key, ptr) entries to the KN's log,
         creating (but NOT enqueuing) rotated segments: the caller must
         replay the rotation events in global op order, because per-op
         log_write pushes to the *shared* merge backlog at rotation time
         and the backlog is consumed FIFO across KNs. Returns the
-        filled-up segments, in order."""
+        filled-up segments, in order, or a FencedWrite no-op when
+        ``token`` is a stale ownership generation."""
+        fenced = self._check_fence(kn, token, "fill_segments_batch")
+        if fenced is not None:
+            return fenced
+        gen = self._gen_of(kn, token)
         segs = self.segments[kn]
         seg = segs[-1]
         cap = self.segment_capacity
@@ -192,7 +291,7 @@ class DPMPool:
                         fp.take_crash(CRASH_POINTS.LOG_ROTATION, kn, 1) is not None:
                     raise KNCrash(kn, CRASH_POINTS.LOG_ROTATION)
                 rotated.append(seg)
-                seg = PySegment(cap, kn)
+                seg = self.new_segment(kn)
                 segs.append(seg)
                 self.gc.segments_created += 1
             take = min(cap - len(seg.entries), n - i)
@@ -208,6 +307,7 @@ class DPMPool:
                     seg.entries.extend(zip(ki, pi))
                     seg.sealed.extend([True] * j + [False])
                     seg.reqs.extend(ri)
+                    seg.gens.extend([gen] * (j + 1))
                     seg.valid += j + 1
                     for p in pi:
                         hs[p] = seg
@@ -219,6 +319,7 @@ class DPMPool:
             pi = ptrs[i:i + take]
             seg.entries.extend(zip(ki, pi))
             seg.sealed.extend([True] * take)
+            seg.gens.extend([gen] * take)
             seg.valid += take
             for p in pi:
                 hs[p] = seg
@@ -239,40 +340,51 @@ class DPMPool:
                         fp.take_crash(CRASH_POINTS.LOG_ROTATION, kn, 1) is not None:
                     raise KNCrash(kn, CRASH_POINTS.LOG_ROTATION)
                 rotated.append(seg)
-                seg = PySegment(cap, kn)
+                seg = self.new_segment(kn)
                 segs.append(seg)
                 self.gc.segments_created += 1
         return rotated
 
     def log_write_batch(self, kn: str, keys, values, lengths,
-                        req_ids=None):
+                        req_ids=None, token=None):
         """Batched ``log_write``: one heap extension + one segment fill
         for a run of same-KN entries, rotated segments enqueued for
         async merge in order. Element-wise equivalent to per-entry
-        log_write calls. Returns (ptrs, rotations)."""
+        log_write calls. Returns (ptrs, rotations), or a FencedWrite
+        no-op (checked *before* the heap extension: a stale flush
+        leaves no partial scatter)."""
+        fenced = self._check_fence(kn, token, "log_write_batch")
+        if fenced is not None:
+            return fenced
         base = self.alloc_values_batch(values, lengths)
         ptrs = list(range(base, base + len(keys)))
-        rotated = self.fill_segments_batch(kn, keys, ptrs, req_ids=req_ids)
+        rotated = self.fill_segments_batch(kn, keys, ptrs, req_ids=req_ids,
+                                           token=token)
         for seg in rotated:
             self.merge_backlog.append((seg, 0))
         return ptrs, len(rotated)
 
     def log_write(self, kn: str, key: int, value, length: int,
-                  sealed: bool = True, req_id: int = -1) -> tuple[int, bool]:
+                  sealed: bool = True, req_id: int = -1, token=None):
         """Append one entry to the KN's active segment. Returns
         (ptr, rotated): ``rotated`` tells the caller a segment filled up
         and was queued for async merge -- the KN must block if its
-        un-merged backlog now exceeds the threshold (paper Sec. 4)."""
+        un-merged backlog now exceeds the threshold (paper Sec. 4).
+        A stale ``token`` returns a FencedWrite no-op instead."""
+        fenced = self._check_fence(kn, token, "log_write")
+        if fenced is not None:
+            return fenced
+        gen = self._gen_of(kn, token)
         seg = self.active_segment(kn)
         fp = self.faults
         if fp is not None and sealed and \
                 fp.take_crash(CRASH_POINTS.LOG_PRE_SEAL, kn, 1) is not None:
             ptr = self.alloc_value(value, length, seg)
             # seal byte never landed: the request stays retryable
-            seg.append(key, ptr, sealed=False, req=req_id)
+            seg.append(key, ptr, sealed=False, req=req_id, gen=gen)
             raise KNCrash(kn, CRASH_POINTS.LOG_PRE_SEAL)
         ptr = self.alloc_value(value, length, seg)
-        seg.append(key, ptr, sealed=sealed, req=req_id)
+        seg.append(key, ptr, sealed=sealed, req=req_id, gen=gen)
         if sealed and req_id >= 0:
             self.req_index[req_id] = ptr
         rotated = False
@@ -281,7 +393,7 @@ class DPMPool:
                     fp.take_crash(CRASH_POINTS.LOG_ROTATION, kn, 1) is not None:
                 raise KNCrash(kn, CRASH_POINTS.LOG_ROTATION)  # never published
             self.merge_backlog.append((seg, 0))
-            self.segments[kn].append(PySegment(self.segment_capacity, kn))
+            self.segments[kn].append(self.new_segment(kn))
             self.gc.segments_created += 1
             rotated = True
         return ptr, rotated
@@ -290,18 +402,22 @@ class DPMPool:
         return self.unmerged_count(kn) > self.unmerged_threshold
 
     def write_once(self, kn: str, key: int, value, length: int,
-                   req_id: int) -> tuple[int, bool]:
+                   req_id: int, token=None):
         """The retry contract in one call: check-then-write.  A client
         that timed out retries the *same* request ID; if a sealed log
         entry for it already landed (the original attempt was applied,
         only the ack was lost), the write is a dedup no-op -- otherwise
         it applies fresh.  Returns (ptr, applied): ``applied`` False
         means deduplicated.  Exactly-once overall: at most one sealed
-        entry per request ID ever exists."""
+        entry per request ID ever exists.  A stale ``token`` returns
+        the FencedWrite no-op from log_write."""
         if req_id >= 0 and self.req_applied(req_id):
             return self.req_index[req_id], False
-        ptr, _rotated = self.log_write(kn, key, value, length,
-                                       req_id=req_id)
+        r = self.log_write(kn, key, value, length, req_id=req_id,
+                           token=token)
+        if isinstance(r, FencedWrite):
+            return r
+        ptr, _rotated = r
         return ptr, True
 
     # ----- asynchronous merge (DPM processors) --------------------------------
@@ -318,19 +434,22 @@ class DPMPool:
             ops = min(ops, self.merge_allowance)
         done = 0
         t0 = time.perf_counter()
-        while self.merge_backlog and done < ops:
-            seg, _ = self.merge_backlog.popleft()
-            entries = seg.sealed_entries()
-            if seg.merged_upto < len(entries):
-                merged = self.merge_entries_batch(
-                    entries[seg.merged_upto:], seg,
-                    max_ops=ops - done)
-                seg.merged_upto += merged
-                done += merged
-            if seg.merged_upto < len(entries):
-                self.merge_backlog.appendleft((seg, 0))
-            else:
-                self._maybe_collect(seg)
+        # merges run as DPM processors (management plane), even when a
+        # KN's blocked write path invoked them inline
+        with sanitize.management():
+            while self.merge_backlog and done < ops:
+                seg, _ = self.merge_backlog.popleft()
+                entries = seg.sealed_entries()
+                if seg.merged_upto < len(entries):
+                    merged = self.merge_entries_batch(
+                        entries[seg.merged_upto:], seg,
+                        max_ops=ops - done)
+                    seg.merged_upto += merged
+                    done += merged
+                if seg.merged_upto < len(entries):
+                    self.merge_backlog.appendleft((seg, 0))
+                else:
+                    self._maybe_collect(seg)
         if self.merge_allowance is not None:
             self.merge_allowance -= done
         self.merge_wall_s += time.perf_counter() - t0
@@ -345,40 +464,40 @@ class DPMPool:
         DPM-processor budget."""
         done = 0
         t0 = time.perf_counter()
-        # backlog first (order preserved), filtered by KN if given
-        keep: deque = deque()
-        while self.merge_backlog:
-            seg, _ = self.merge_backlog.popleft()
-            if kn is not None and seg.kn != kn:
-                keep.append((seg, 0))
-                continue
-            entries = seg.sealed_entries()
-            todo = entries[seg.merged_upto:]
-            if todo:
-                self.merge_entries_batch(todo, seg)
-                done += len(todo)
-            seg.merged_upto = len(entries)
-            self._maybe_collect(seg)
-        self.merge_backlog = keep
-        # then active segments
-        for owner, segs in self.segments.items():
-            if kn is not None and owner != kn:
-                continue
-            act = segs[-1]
-            entries = act.sealed_entries()
-            todo = entries[act.merged_upto:]
-            if todo:
-                self.merge_entries_batch(todo, act)
-                done += len(todo)
-            act.merged_upto = len(entries)
-            if entries:
-                self.segments[owner] = [PySegment(self.segment_capacity,
-                                                  owner)]
+        with sanitize.management():
+            # backlog first (order preserved), filtered by KN if given
+            keep: deque = deque()
+            while self.merge_backlog:
+                seg, _ = self.merge_backlog.popleft()
+                if kn is not None and seg.kn != kn:
+                    keep.append((seg, 0))
+                    continue
+                entries = seg.sealed_entries()
+                todo = entries[seg.merged_upto:]
+                if todo:
+                    self.merge_entries_batch(todo, seg)
+                    done += len(todo)
+                seg.merged_upto = len(entries)
+                self._maybe_collect(seg)
+            self.merge_backlog = keep
+            # then active segments
+            for owner, segs in self.segments.items():
+                if kn is not None and owner != kn:
+                    continue
+                act = segs[-1]
+                entries = act.sealed_entries()
+                todo = entries[act.merged_upto:]
+                if todo:
+                    self.merge_entries_batch(todo, act)
+                    done += len(todo)
+                act.merged_upto = len(entries)
+                if entries:
+                    self.segments[owner] = [self.new_segment(owner)]
         self.merge_wall_s += time.perf_counter() - t0
         return done
 
     def merge_entries_batch(self, entries, seg: PySegment,
-                            max_ops: int | None = None) -> int:
+                            max_ops: int | None = None, token=None):
         """Merge a run of (key, ptr) entries of one segment in order --
         element-wise equivalent to per-entry ``_merge_entry`` (property
         tested). The run goes through the planned merge plane: each
@@ -391,7 +510,12 @@ class DPMPool:
         before re-planning. ``max_ops`` (the remaining per-epoch merge
         allowance) clamps the plan itself. Returns entries merged --
         the caller's single accounting point, so a truncated plan plus
-        its replay is never double-charged."""
+        its replay is never double-charged.  A stale ``token`` (a
+        zombie trying to push its own window into the index) returns a
+        FencedWrite no-op before anything touches the index."""
+        fenced = self._check_fence(seg.kn, token, "merge_entries_batch")
+        if fenced is not None:
+            return fenced
         n = len(entries)
         if max_ops is not None and max_ops < n:
             n = max_ops
@@ -438,13 +562,20 @@ class DPMPool:
             i += plan.ops
         return n
 
-    def apply_merge_plan(self, plan) -> None:
+    def apply_merge_plan(self, plan, token=None, kn=None):
         """Apply one planned merge window against the pool: bulk index
         scatters (NumpyCLHT.apply_merge_plan), one-pass supersession
         invalidation with per-segment GC accounting, and dirty-key
         tracking for the batch engine's prefetched probes. Planned
         windows never grow bucket chains (overflow truncates the plan),
-        so there are no bucket-growth hazards to record."""
+        so there are no bucket-growth hazards to record.  When the
+        applying caller is a KN (``kn``/``token`` given) the fence is
+        validated first: a stale applier gets a FencedWrite no-op --
+        no scatter, no GC accounting."""
+        if kn is not None or token is not None:
+            fenced = self._check_fence(kn, token, "apply_merge_plan")
+            if fenced is not None:
+                return fenced
         self.gc.entries_merged += plan.ops
         self.index.apply_merge_plan(plan)
         if self._dirty is not None:
@@ -516,9 +647,10 @@ class DPMPool:
             seg.entries.clear()
             seg.sealed.clear()
             seg.reqs.clear()
+            seg.gens.clear()
 
     # ----- crash recovery (paper Sec. 3.6) ------------------------------------
-    def recover_kn(self, kn: str) -> dict:
+    def recover_kn(self, kn: str, token=None):
         """Crash-consistent recovery of one KN's DPM state.  The KN
         fail-stopped at an arbitrary point; its segments survive in PM
         but nothing else can be trusted:
@@ -548,7 +680,12 @@ class DPMPool:
 
         The recovered pool is property-tested equal to a reference pool
         that replayed only acknowledged (sealed-before-crash) ops.
-        Returns a recovery record with per-phase entry counts."""
+        Returns a recovery record with per-phase entry counts, or a
+        FencedWrite no-op when ``token`` is stale (a zombie must not
+        'recover' -- i.e. replay -- ranges it no longer owns)."""
+        fenced = self._check_fence(kn, token, "recover_kn")
+        if fenced is not None:
+            return fenced
         # recovery runs on a surviving peer: armed crash points for the
         # dead KN must not fire inside the recovery replay itself
         fp, self.faults = self.faults, None
@@ -588,7 +725,7 @@ class DPMPool:
             # active segment to land on
             live = self.segments.setdefault(kn, [])
             if not live or live[-1].full():
-                live.append(PySegment(self.segment_capacity, kn))
+                live.append(self.new_segment(kn))
                 self.gc.segments_created += 1
             return {"kn": kn, "discarded": discarded, "replayed": replayed,
                     "repaired_indirect": repaired}
@@ -699,6 +836,22 @@ class DPMPool:
                     problems.append(f"{kn}/seg{si}: request-ID column "
                                     f"misaligned ({len(seg.reqs)} != "
                                     f"{len(seg.entries)} entries)")
+                if len(seg.gens) != len(seg.entries):
+                    problems.append(f"{kn}/seg{si}: fence-generation "
+                                    f"column misaligned ({len(seg.gens)} "
+                                    f"!= {len(seg.entries)} entries)")
+                else:
+                    # no sealed entry may carry a generation older than
+                    # the fence watermark in force at its append: such
+                    # an entry is a zombie write that bypassed the fence
+                    for m, mg in seg.gen_marks:
+                        for i in range(m, len(seg.entries)):
+                            if seg.sealed[i] and seg.gens[i] < mg:
+                                problems.append(
+                                    f"{kn}/seg{si}: sealed entry {i} "
+                                    f"carries stale generation "
+                                    f"{seg.gens[i]} < fence {mg}")
+                                break
         keys = self.index.keys.ravel()
         ptrs = self.index.ptrs.ravel()
         live = keys >= 0
@@ -792,10 +945,48 @@ class DPMPool:
         # the index now names the indirection slot; readers discover
         # 'replicated' status via ownership metadata at RNs/KNs.
 
-    def cas_indirect(self, key: int, expect: int, new: int) -> bool:
+    def cas_indirect(self, key: int, expect: int, new: int,
+                     kn: str | None = None, token=None):
+        """One-sided CAS on a replicated key's indirection slot.  The
+        fence validates *before* the compare (a zombie's CAS must not
+        even read-modify-write the slot); the armed ``rep.post_cas``
+        crash point fires *after* the swing lands but before the
+        superseded pointer's GC accounting runs -- the mid-operation
+        torn state recovery must repair."""
+        fenced = self._check_fence(kn, token, "cas_indirect")
+        if fenced is not None:
+            return fenced
         cur = self.indirect.get(key)
         if cur != expect:
             return False
+        fp = self.faults
+        if fp is not None and fp.armed and kn is not None and \
+                fp.take_crash(CRASH_POINTS.REP_POST_CAS, kn, 1) is not None:
+            # the CAS landed (durable) ...
+            self.indirect[key] = new
+            self._indirect_version += 1
+            seg = self.heap_seg[new] \
+                if 0 <= new < len(self.heap_seg) else None
+            landed = seg is not None and any(
+                p == new and s
+                for (_k, p), s in zip(seg.entries, seg.sealed))
+            if not landed:
+                # ... but the batched plane's log entry for ``new``
+                # never did: the slot names a value whose seal byte is
+                # missing.  Materialize that exact torn state -- an
+                # unsealed entry in the KN's active segment -- so
+                # verify_integrity sees 'unsealed target' and recovery
+                # rewinds the slot (same shape force_crash leaves).
+                act = self.segments[kn][-1]
+                act.entries.append((key, new))
+                act.sealed.append(False)
+                act.reqs.append(-1)
+                act.gens.append(self._gen_of(kn, token))
+                act.valid += 1
+                self.heap_seg[new] = act
+            # either way the superseded pointer's invalidation (GC
+            # accounting) never ran
+            raise KNCrash(kn, CRASH_POINTS.REP_POST_CAS)
         self.indirect[key] = new
         self._indirect_version += 1
         if expect is not None and expect != new:

@@ -25,18 +25,34 @@ cluster.py; units say what an armed countdown counts):
                     the merge cursor / allowance accounting advanced --
                     recovery replays the window, so tombstone GC
                     accounting must be recomputed, never trusted
-  rep.post_cas      (forced only)  a replicated write's CAS swung the
-                    indirection slot to a not-yet-sealed log entry and
-                    the KN died before the seal and the superseded-
-                    pointer GC landed (the one-sided CAS and the seal
-                    write are separate verbs -- nothing orders them)
+  rep.post_cas      [events]   a replicated write's CAS swung the
+                    indirection slot but the KN died before the
+                    superseded-pointer GC (and, on the batched plane,
+                    the entry's seal byte) landed -- the one-sided CAS
+                    and the seal write are separate verbs, nothing
+                    orders them.  Armed inside ``DPMPool.cas_indirect``
+                    (the fenced indirection-CAS path); ``force_crash``
+                    remains the fallback when the victim performs no
+                    CAS in the observed step
 
-Network faults (consumed by the scenario harness):
+Network faults (consumed by the scenario harness and request plane):
 
   dropped flush RTs   a one-sided log-flush ack is lost; the KN retries,
                       costing one extra RT per drop
   delayed heartbeats  failure detection takes longer than the calibrated
                       ``NetModel.detect_s``
+  partitions          a KN loses connectivity to the DPM pool
+                      (``kn-dpm``: its ops stall, queues stop draining)
+                      or to the M-node (``kn-mnode``: heartbeats are
+                      lost, so a perfectly healthy KN is eventually
+                      declared dead -- the false-positive detection the
+                      fencing plane exists to survive); windows are
+                      explicit or drawn from seeded onset/heal schedules
+  fail-slow / gray    a KN serves at a degraded rate (``fail_slow``):
+                      its measured RTs inflate by ``factor``, which the
+                      request plane's live EWMA turns into a lower
+                      drain rate and earlier hedging -- degraded, never
+                      dead, the classic gray failure
 
 Two injection mechanisms share these definitions: *armed* crashes
 (``arm_crash`` + the ``take_crash`` hooks inside the write/merge paths
@@ -80,9 +96,14 @@ class CRASH_POINTS(str, enum.Enum):
 
 # declaration-ordered tuple (the enum class itself indexes by *name*)
 ALL_POINTS = tuple(CRASH_POINTS)
-# points the take_crash hooks can fire mid-operation (rep.post_cas is
-# only ever forced: the CAS race needs state the hooks don't see)
-ARMABLE_POINTS = ALL_POINTS[:4]
+# every declared point can fire mid-operation: rep.post_cas gained its
+# armed hook when the indirection-CAS path became a fenced DPM entry
+# point (DPMPool.cas_indirect) -- before that it was forced-only
+ARMABLE_POINTS = ALL_POINTS
+# the subset whose hooks sit on the log/merge paths every write-heavy
+# driver exercises; rep.post_cas only fires when the victim actually
+# performs an indirection CAS, so fire-guaranteed sweeps use this
+LOG_MERGE_POINTS = ALL_POINTS[:4]
 
 
 def _as_point(point: str) -> CRASH_POINTS:
@@ -113,6 +134,37 @@ class CrashSpec:
     after: int              # units to let pass before the crash fires
 
 
+PARTITION_KINDS = ("kn-dpm", "kn-mnode")
+
+
+@dataclass
+class Partition:
+    """One network-partition window: during [start_s, end_s) the KN
+    cannot reach the DPM pool (``kn-dpm``) or the M-node
+    (``kn-mnode``).  The node itself stays perfectly healthy -- that is
+    the point: a ``kn-mnode`` partition makes a live KN look dead."""
+    kn: str
+    kind: str               # one of PARTITION_KINDS
+    start_s: float
+    end_s: float
+
+    def active(self, t: float) -> bool:
+        return self.start_s <= t < self.end_s
+
+
+@dataclass
+class SlowSpec:
+    """A fail-slow (gray) window: the KN's measured service RTs inflate
+    by ``factor`` during [start_s, end_s) -- degraded, never dead."""
+    kn: str
+    factor: float           # RT multiplier, >= 1.0
+    start_s: float
+    end_s: float
+
+    def active(self, t: float) -> bool:
+        return self.start_s <= t < self.end_s
+
+
 class FaultPlane:
     """Deterministic fault injector.
 
@@ -131,6 +183,8 @@ class FaultPlane:
         self._armed: list[CrashSpec] = []
         self.crash_log: list[dict] = []
         self.flush_rts_dropped = 0
+        self.partitions: list[Partition] = []
+        self.slow: list[SlowSpec] = []
 
     # ----- armed crashes (raise KNCrash inside the guarded paths) ---------
     def arm_crash(self, point: str, kn: str | None = None,
@@ -221,7 +275,8 @@ class FaultPlane:
             if key is not None and segs and not segs[-1].full():
                 seg = segs[-1]
                 ptr = pool.alloc_value(f"torn@{key}", 0, seg)
-                seg.append(key, ptr, sealed=False)
+                seg.append(key, ptr, sealed=False,
+                           gen=pool.fence.get(kn, 0))
                 # CAS landed, seal + superseded-pointer GC never did
                 pool.indirect[key] = ptr
                 pool._indirect_version += 1
@@ -254,3 +309,66 @@ class FaultPlane:
         if self.heartbeat_jitter_s > 0.0:
             d += float(self.rng.random()) * self.heartbeat_jitter_s
         return d
+
+    # ----- partitions & gray failures --------------------------------------
+    def partition(self, kn: str, kind: str, start_s: float,
+                  end_s: float = float("inf")) -> Partition:
+        """Register one partition window.  Composable with armed crash
+        points and every other fault: the lists are independent."""
+        if kind not in PARTITION_KINDS:
+            raise ValueError(f"unknown partition kind {kind!r}; "
+                             f"choose from {PARTITION_KINDS}")
+        p = Partition(kn, kind, float(start_s), float(end_s))
+        self.partitions.append(p)
+        return p
+
+    def schedule_partition(self, kn: str, kind: str, horizon_s: float,
+                           mean_onset_s: float,
+                           mean_outage_s: float) -> Partition | None:
+        """Seeded onset/heal schedule: onset ~ Exp(mean_onset_s),
+        outage ~ Exp(mean_outage_s), clipped to the horizon.  Returns
+        None when the drawn onset falls past the horizon (no partition
+        this run) -- deterministic per (seed, call order)."""
+        onset = float(self.rng.exponential(mean_onset_s))
+        if onset >= horizon_s:
+            return None
+        heal = min(onset + float(self.rng.exponential(mean_outage_s)),
+                   horizon_s)
+        return self.partition(kn, kind, onset, heal)
+
+    def partitioned(self, kn: str, kind: str, t: float) -> bool:
+        return any(p.kn == kn and p.kind == kind and p.active(t)
+                   for p in self.partitions)
+
+    def partitioned_kns(self, kind: str, t: float) -> set[str]:
+        return {p.kn for p in self.partitions
+                if p.kind == kind and p.active(t)}
+
+    def heal_partitions(self, kn: str | None = None, t: float = 0.0) -> int:
+        """Force-heal open partitions (all of ``kn``'s, or everyone's):
+        their windows close at ``t``.  Returns how many were healed."""
+        healed = 0
+        for p in self.partitions:
+            if (kn is None or p.kn == kn) and p.end_s > t:
+                p.end_s = t
+                healed += 1
+        return healed
+
+    def fail_slow(self, kn: str, factor: float, start_s: float = 0.0,
+                  end_s: float = float("inf")) -> SlowSpec:
+        """Register a gray-failure window: ``factor`` >= 1 multiplies
+        the KN's measured RTs while active (visible to the request
+        plane's live EWMA, hence its drain credits and hedging)."""
+        s = SlowSpec(kn, max(float(factor), 1.0), float(start_s),
+                     float(end_s))
+        self.slow.append(s)
+        return s
+
+    def slow_factor(self, kn: str, t: float) -> float:
+        """The RT inflation for ``kn`` at time ``t`` (1.0 = healthy);
+        overlapping windows take the worst factor."""
+        f = 1.0
+        for s in self.slow:
+            if s.kn == kn and s.active(t):
+                f = max(f, s.factor)
+        return f

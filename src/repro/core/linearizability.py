@@ -18,7 +18,16 @@ landed after invocation) or exclude it entirely (it never applied) --
 the standard treatment of info/timeout ops in Jepsen-style checkers.
 Shed operations are guaranteed clean no-ops and should simply be left
 out of the history (the request plane asserts their request IDs never
-registered)."""
+registered).
+
+Fenced operations (``status="fenced"``) are writes a stale-epoch owner
+attempted after an ownership handoff: the DPM fence rejected them as
+guaranteed no-ops (``FencedWrite``), so the checker *drops* them from
+the history before searching.  This is deliberately stronger than
+``"maybe"``: if a fence ever leaked and a reader observed a zombie's
+value, no linearization can explain the read and the history fails --
+whereas an indeterminate op could legally be linearized, masking the
+leak."""
 
 from __future__ import annotations
 
@@ -35,7 +44,9 @@ class Op:
     invoke: float
     respond: float
     client: str = "c0"
-    status: str = "ok"   # "ok" (definite) | "maybe" (indeterminate)
+    # "ok" (definite) | "maybe" (indeterminate) | "fenced" (guaranteed
+    # no-op: a stale-epoch write the DPM fence rejected)
+    status: str = "ok"
 
 
 def _eff_respond(op: Op) -> float:
@@ -68,8 +79,10 @@ def _respects_realtime(order: list[Op]) -> bool:
 def check_key_history(ops: list[Op], initial=None,
                       max_exhaustive: int = 8) -> bool:
     """True iff the per-key history is linearizable.  Ops with
-    ``status="maybe"`` may be included or excluded by the search."""
-    ops = sorted(ops, key=lambda o: o.invoke)
+    ``status="maybe"`` may be included or excluded by the search;
+    ``status="fenced"`` ops are guaranteed no-ops and are dropped."""
+    ops = sorted((o for o in ops if o.status != "fenced"),
+                 key=lambda o: o.invoke)
     if any(o.status != "ok" for o in ops) or len(ops) > max_exhaustive:
         return _dfs(ops, initial)
     for perm in permutations(ops):

@@ -146,15 +146,26 @@ class PySegment:
     durable log entry, so 'was this request applied?' is answered by the
     log itself -- a retry deduplicates against sealed entries, and a
     crash-discarded torn entry takes its request ID with it (the retry
-    then applies fresh, still exactly once overall)."""
+    then applies fresh, still exactly once overall).
 
-    __slots__ = ("entries", "sealed", "reqs", "capacity", "valid", "kn",
-                 "merged_upto")
+    Entries also carry the writer's *fence generation* (``gens``): the
+    ownership epoch the writing KN held when it appended.  When the
+    pool publishes a new generation for a KN (ownership handoff), every
+    segment records a watermark in ``gen_marks`` -- ``(entry_index,
+    min_gen)`` meaning entries at or after ``entry_index`` must carry a
+    generation >= ``min_gen``.  A sealed entry below its watermark is a
+    zombie write that slipped past the fence; ``verify_integrity``
+    flags it."""
+
+    __slots__ = ("entries", "sealed", "reqs", "gens", "gen_marks",
+                 "capacity", "valid", "kn", "merged_upto")
 
     def __init__(self, capacity: int, kn: str):
         self.entries: list[tuple[int, int]] = []   # (key, ptr)
         self.sealed: list[bool] = []
         self.reqs: list[int] = []                  # request IDs (-1 = none)
+        self.gens: list[int] = []                  # writer fence generations
+        self.gen_marks: list[tuple[int, int]] = []  # (entry_index, min_gen)
         self.capacity = capacity
         self.valid = 0          # live values still pointed to by the index
         self.kn = kn
@@ -164,11 +175,12 @@ class PySegment:
         return len(self.entries) >= self.capacity
 
     def append(self, key: int, ptr: int, sealed: bool = True,
-               req: int = -1) -> None:
+               req: int = -1, gen: int = 0) -> None:
         assert not self.full()
         self.entries.append((key, ptr))
         self.sealed.append(sealed)
         self.reqs.append(req)
+        self.gens.append(gen)
         self.valid += 1
 
     def sealed_entries(self) -> list[tuple[int, int]]:
@@ -201,6 +213,7 @@ class PySegment:
         del self.entries[cut:]
         del self.sealed[cut:]
         del self.reqs[cut:]
+        del self.gens[cut:]
         self.valid -= len(dropped)
         if self.merged_upto > cut:
             self.merged_upto = cut

@@ -39,6 +39,12 @@ class OwnershipMap:
         self.threads_per_kn = threads_per_kn
         self.replicated: dict[int, list[str]] = {}
         self.version = 0
+        # fence generation per KN: the map version at which that KN's
+        # ownership interval last changed.  A KN's writes are only valid
+        # while it holds the current generation; after a handoff the old
+        # owner's token is stale and the DPM fence rejects it (Sec. 3.5
+        # made safe under imperfect failure detection).
+        self.fence: dict[str, int] = {}
         self._rep_cache: tuple[int, np.ndarray] | None = None
 
     # ----- lookup --------------------------------------------------------
@@ -82,6 +88,7 @@ class OwnershipMap:
         self.ring.add(name)
         participants = {name} | self._changed_owners(old)
         self.version += 1
+        self._bump_fences(participants)
         self._repair_replicas()
         return ReconfigEvent("add", name, participants,
                              self.version - 1, self.version)
@@ -92,9 +99,26 @@ class OwnershipMap:
         participants = ({name} if not failed else set()) \
             | self._changed_owners(old)
         self.version += 1
+        self.fence.pop(name, None)
+        self._bump_fences(participants)
         self._repair_replicas(gone=name)
         return ReconfigEvent("fail" if failed else "remove", name,
                              participants, self.version - 1, self.version)
+
+    def _bump_fences(self, participants: set[str]) -> None:
+        """Stamp every participant of a membership change with a fresh
+        fence generation (the new map version).  Monotone per KN: the
+        version only grows, so an old owner's token can never become
+        valid again."""
+        for p in participants:
+            if p in self.ring:
+                self.fence[p] = self.version
+
+    def fence_token(self, kn: str) -> int | None:
+        """The current fence generation for ``kn`` (None if not a
+        member).  KNs capture this at reconfiguration time and present
+        it with every DPM write."""
+        return self.fence.get(kn)
 
     def _changed_owners(self, old: HashRing) -> set[str]:
         """KNs (in the *new* ring) whose owned ranges changed.
@@ -167,6 +191,7 @@ class OwnershipMap:
             "vnodes": self.ring.vnodes,
             "replicated": {k: list(v) for k, v in self.replicated.items()},
             "version": self.version,
+            "fence": dict(self.fence),
         }
 
     @classmethod
@@ -177,4 +202,6 @@ class OwnershipMap:
         m.replicated = {int(k): list(v)
                         for k, v in blob["replicated"].items()}
         m.version = blob["version"]
+        m.fence = {str(k): int(v)
+                   for k, v in blob.get("fence", {}).items()}
         return m

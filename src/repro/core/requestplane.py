@@ -564,10 +564,16 @@ class RequestPlane:
             return
         # measured RTs/op per KN this round (Table 5 reconciliation:
         # service times come from the live RT counters, not a constant)
+        fp = getattr(self.c.pool, "faults", None)
         for nm, kn in self.c.kns.items():
             st = kn.stats
             if st.ops:
                 meas = st.rts / st.ops
+                if fp is not None:
+                    # a gray (fail-slow) KN serves correctly but slowly:
+                    # its measured RTs inflate, so the EWMA -> credits ->
+                    # hedging machinery sees the degradation organically
+                    meas *= fp.slow_factor(nm, self._round_end)
                 prev = self.rts_est.get(nm)
                 self.rts_est[nm] = meas if prev is None \
                     else 0.7 * prev + 0.3 * meas

@@ -25,6 +25,18 @@ the paper's robustness claims into SLO rows:
   composed  all of the above at once: churn plus a storm window plus a
             crash at the storm's peak.
 
+Two fencing scenarios (ownership variants only) exercise the epoch
+fence under imperfect failure detection:
+
+  partition a KN loses its DPM link mid-run (its requests block), a
+            second KN goes gray (fail-slow); the partition heals on
+            schedule and delivery must recover -- no false failure.
+  zombie    the false-positive story: a partitioned-but-alive KN is
+            declared dead, ownership hands off, the zombie heals and
+            flushes its staged oplog with its stale fence token.  Every
+            flush must no-op (``FencedWrite``), the acked history must
+            stay linearizable, and detection latency is gated.
+
 ``violations`` in a result row collects integrity failures
 (DPMPool.verify_integrity), an emptied ring, or a dead cluster at the
 end of a run -- a healthy variant reports zero.  Network faults
@@ -44,8 +56,10 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .cluster import DinomoCluster, VARIANTS
+from .dpm_pool import FencedWrite
 from .faults import (ALL_POINTS, ARMABLE_POINTS, CRASH_POINTS,
                      FaultPlane, KNCrash)
+from .linearizability import Op, check_history
 from .mnode import PolicyConfig
 from .netmodel import (ArrivalProcess, DEFAULT_MODEL, NetModel,
                        PhasedArrival)
@@ -54,6 +68,9 @@ from .simulate import TimedSimulation
 from ..data.ycsb import MIXES, Workload
 
 SCENARIOS = ("churn", "storm", "crash", "composed")
+# fencing scenarios: meaningful only for variants with logical
+# ownership (a shared-everything plane has no epochs to fence)
+FENCE_SCENARIOS = ("partition", "zombie")
 BENCH_VARIANTS = ("dinomo", "dinomo-n", "clover")
 
 
@@ -86,6 +103,11 @@ class ScenarioConfig:
     storm_hot: int = 4
     # crash
     crash_at_s: float = 60.0
+    # partition / zombie (fencing scenarios)
+    partition_at_s: float = 30.0
+    partition_heal_s: float = 20.0       # outage length before heal
+    gray_slow_factor: float = 4.0        # fail-slow RT multiplier
+    zombie_staged_ops: int = 24          # oplog the zombie flushes at heal
     # background network faults
     drop_flush_rt_rate: float = 0.01
     heartbeat_delay_s: float = 0.01
@@ -100,7 +122,9 @@ class ScenarioConfig:
         return cls(num_keys=3000, num_buckets=1 << 13, sample_ops=400,
                    duration_s=40.0, churn_period_s=16.0,
                    storm_start_s=10.0, storm_end_s=28.0,
-                   crash_at_s=18.0, epoch_s=4.0, grace_period_s=8.0)
+                   crash_at_s=18.0, partition_at_s=10.0,
+                   partition_heal_s=12.0, zombie_staged_ops=12,
+                   epoch_s=4.0, grace_period_s=8.0)
 
 
 @dataclass
@@ -119,6 +143,9 @@ class ScenarioResult:
     recovery: dict | None
     violations: list[str] = field(default_factory=list)
     events: list[str] = field(default_factory=list)
+    # scenario-specific observables (fence scenarios: zombie attempt /
+    # fenced counts, detection latency, delivery through a partition)
+    extra: dict = field(default_factory=dict)
 
     def row(self) -> dict:
         return {
@@ -133,6 +160,7 @@ class ScenarioResult:
             "flush_rts_dropped": self.flush_rts_dropped,
             "recovery": self.recovery,
             "violations": self.violations,
+            "extra": self.extra,
         }
 
 
@@ -181,12 +209,12 @@ def _offered_fn(scenario: str, cfg: ScenarioConfig):
     return lambda t: cfg.base_load
 
 
-def _pick_victim(c: DinomoCluster) -> str | None:
+def _pick_victim(c: DinomoCluster, skip=()) -> str | None:
     """The alive KN with the most unmerged log state -- the most
     interesting crash victim -- ties broken by name for determinism."""
     best, best_pending = None, -1
     for name in sorted(c.kns):
-        if not c.kns[name].alive:
+        if not c.kns[name].alive or name in skip:
             continue
         pending = sum(len(s.entries) - s.merged_upto
                       for s in c.pool.segments.get(name, ()))
@@ -196,7 +224,8 @@ def _pick_victim(c: DinomoCluster) -> str | None:
 
 
 def _crash_and_recover(sim: TimedSimulation, faults: FaultPlane,
-                       point: str, offered, result: ScenarioResult):
+                       point: str, offered, result: ScenarioResult,
+                       skip=()):
     """Crash a KN at ``point`` mid-run: arm the crash point so it fires
     inside the next step's batched write/merge paths when it can (the
     mid-batch flavor), force the equivalent state corruption when the
@@ -204,8 +233,8 @@ def _crash_and_recover(sim: TimedSimulation, faults: FaultPlane,
     or a point the victim never hits), then fail the KN through the
     timed reconfiguration path and verify pool integrity."""
     c = sim.c
-    victim = _pick_victim(c)
-    if victim is None or len(sim._alive_kns()) <= 1:
+    victim = _pick_victim(c, skip=skip)
+    if victim is None or len(sim._alive_kns()) <= 1 + len(skip):
         result.events.append("crash skipped: no eligible victim")
         return
     armed = point in ARMABLE_POINTS and c.variant.name != "clover"
@@ -234,14 +263,186 @@ def _crash_and_recover(sim: TimedSimulation, faults: FaultPlane,
         f"post-recovery: {v}" for v in c.pool.verify_integrity())
 
 
+def _keys_owned_by(c: DinomoCluster, kn: str, start: int,
+                   count: int) -> list[int]:
+    """``count`` sentinel keys (outside the workload key range) whose
+    ring owner is ``kn`` -- a key timeline the background traffic never
+    touches, so linearizability can be checked exactly."""
+    out: list[int] = []
+    k = start
+    while len(out) < count and k < start + 500_000:
+        if c.ownership.primary(k) == kn:
+            out.append(k)
+        k += 1
+    return out
+
+
+def _run_partition(sim: TimedSimulation, faults: FaultPlane,
+                   cfg: ScenarioConfig, offered,
+                   result: ScenarioResult,
+                   point: str | None = None) -> None:
+    """A KN loses its DPM link for ``partition_heal_s`` seconds while a
+    second KN goes gray (fail-slow).  No failure is injected for the
+    partitioned KN: the partition must degrade delivery while open and
+    delivery must recover once it heals.  With ``point`` set (the chaos
+    matrix), a *different* KN crashes at that armed crash point while
+    the partition is still open -- recovery must stay clean with the
+    partition degrading the cluster underneath it."""
+    c = sim.c
+    sim.run(cfg.partition_at_s, offered)
+    t0 = sim.now
+    victim = _pick_victim(c)
+    if victim is None:
+        result.events.append("partition skipped: no eligible victim")
+        sim.run(cfg.duration_s, offered)
+        return
+    t1 = t0 + cfg.partition_heal_s
+    faults.partition(victim, "kn-dpm", start_s=t0, end_s=t1)
+    gray = next((n for n in sorted(c.kns)
+                 if n != victim and c.kns[n].alive), None)
+    if gray is not None:
+        faults.fail_slow(gray, cfg.gray_slow_factor, start_s=t0, end_s=t1)
+    sim.log_event("partition", node=victim, net="kn-dpm",
+                  heal_s=round(t1, 6))
+    if point is not None:
+        sim.run(min(t0 + cfg.partition_heal_s / 2, cfg.duration_s),
+                offered)
+        _crash_and_recover(sim, faults, point, offered, result,
+                           skip=(victim,))
+    sim.run(cfg.duration_s, offered)
+    healed = faults.heal_partitions(victim, t=sim.now)
+    sim.log_event("partition_healed", node=victim, open_windows=healed)
+    during = [p.throughput / p.offered for p in sim.trace
+              if t0 <= p.t < t1 and p.offered > 0]
+    after = [p.throughput / p.offered for p in sim.trace
+             if p.t >= t1 and p.offered > 0]
+    result.extra = {
+        "partitioned_kn": victim, "gray_kn": gray,
+        "min_delivery_during": min(during) if during else None,
+        "mean_delivery_after": (sum(after) / len(after)) if after else None,
+    }
+    if victim in c.kns and not c.kns[victim].alive:
+        result.violations.append(
+            "partition: healed KN was permanently failed (false positive)")
+
+
+def _run_zombie(sim: TimedSimulation, faults: FaultPlane,
+                cfg: ScenarioConfig, offered,
+                result: ScenarioResult) -> None:
+    """The false-positive detection story (paper Sec. 3.5/3.6 made safe
+    under imperfect detection):
+
+      1. a KN is partitioned from the M-node (alive, still serving);
+      2. missed heartbeats declare it dead -> ownership hands off and
+         the fence generation bumps;
+      3. the partition heals and the zombie flushes its staged oplog
+         (writes it accepted while partitioned) with its stale token.
+
+    Every flush -- log writes, a batched fill, an indirection CAS, even
+    a replayed recovery -- must come back ``FencedWrite`` without
+    touching pool state, and the acked history (pre-handoff writes +
+    new-owner writes + final reads) must stay linearizable with the
+    fenced ops dropped."""
+    c = sim.c
+    pool = c.pool
+    sim.run(cfg.partition_at_s, offered)
+    victim = _pick_victim(c)
+    if victim is None or len(sim._alive_kns()) <= 1:
+        result.events.append("zombie skipped: no eligible victim")
+        sim.run(cfg.duration_s, offered)
+        return
+    stale_token = c.kns[victim].fence_token
+    zkeys = _keys_owned_by(c, victim, cfg.num_keys, cfg.zombie_staged_ops)
+    history: list[Op] = []
+    t = sim.now
+    # acked writes through the still-legitimate owner (durable at ack)
+    for i, k in enumerate(zkeys):
+        inv = t + i * 1e-6
+        _rts, ok = c.write(k, f"pre@{k}", victim)
+        if ok:
+            history.append(Op("write", k, f"pre@{k}", inv, inv + 1e-7))
+    # the zombie accepts (but cannot ack) staged ops while partitioned
+    t1 = t + cfg.partition_heal_s
+    faults.partition(victim, "kn-mnode", start_s=t, end_s=t1)
+    sim.log_event("partition", node=victim, net="kn-mnode",
+                  heal_s=round(t1, 6))
+    for i, k in enumerate(zkeys):
+        history.append(Op("write", k, f"zombie@{k}",
+                          t + 1e-3 + i * 1e-6, t1, status="fenced"))
+    # missed heartbeats: the M-node declares the zombie dead and hands
+    # ownership off (this bumps the fence generation past stale_token)
+    window = sim.inject_failure(victim)
+    result.recovery_window_s = window
+    detect_s = next((e.get("detect_s") for e in reversed(sim.event_log)
+                     if e["kind"] == "kn_failed"), None)
+    # the new owners overwrite half the keys before the zombie returns
+    t2 = t + 1e-2
+    for i, k in enumerate(zkeys[::2]):
+        inv = t2 + i * 1e-6
+        _rts, ok = c.write(k, f"own2@{k}")
+        if ok:
+            history.append(Op("write", k, f"own2@{k}", inv, inv + 1e-7))
+    sim.run(min(t1, cfg.duration_s), offered)
+    # heal: the zombie flushes its staged oplog with the stale token --
+    # every DPM entry point must reject it as a clean no-op
+    faults.heal_partitions(victim, t=sim.now)
+    sim.log_event("partition_healed", node=victim)
+    before = pool.verify_integrity()
+    attempts, fenced = 0, 0
+    for k in zkeys:
+        r = pool.log_write(victim, k, f"zombie@{k}", cfg.value_bytes,
+                           token=stale_token)
+        attempts += 1
+        fenced += isinstance(r, FencedWrite)
+    nb = min(4, len(zkeys))
+    for op_res in (
+        pool.log_write_batch(victim, zkeys[:nb],
+                             [f"zombie@{k}" for k in zkeys[:nb]],
+                             [cfg.value_bytes] * nb, token=stale_token),
+        pool.cas_indirect(zkeys[0], None, 0, kn=victim,
+                          token=stale_token),
+        pool.recover_kn(victim, token=stale_token),
+    ):
+        attempts += 1
+        fenced += isinstance(op_res, FencedWrite)
+    sim.log_event("zombie_flush", node=victim, attempts=attempts,
+                  fenced=fenced, token=stale_token)
+    result.violations.extend(
+        f"zombie: {v}" for v in pool.verify_integrity()
+        if v not in before)
+    if fenced != attempts:
+        result.violations.append(
+            f"zombie: {attempts - fenced}/{attempts} stale writes "
+            "slipped past the fence")
+    sim.run(cfg.duration_s, offered)
+    # final reads through the current owners close the history
+    t3 = sim.now
+    for i, k in enumerate(zkeys):
+        inv = t3 + i * 1e-6
+        val, _rts, ok = c.read(k)
+        if ok:
+            history.append(Op("read", k, val, inv, inv + 1e-7))
+    verdicts = check_history(history, initial=None)
+    bad = sorted(k for k, ok in verdicts.items() if not ok)
+    if bad:
+        result.violations.append(
+            f"zombie: non-linearizable acked history for keys {bad}")
+    result.extra = {
+        "victim": victim, "stale_token": stale_token,
+        "zombie_attempts": attempts, "zombie_fenced": fenced,
+        "fenced_write_records": len(pool.fenced_writes),
+        "linearizable": not bad, "detect_s": detect_s,
+    }
+
+
 def run_scenario(scenario: str, variant: str, seed: int = 0,
                  smoke: bool = False, model: NetModel | None = None,
                  crash_point: str | None = None,
                  cfg: ScenarioConfig | None = None) -> ScenarioResult:
     """Run one scenario against one variant; returns the SLO row."""
-    if scenario not in SCENARIOS:
+    if scenario not in SCENARIOS + FENCE_SCENARIOS:
         raise ValueError(f"unknown scenario {scenario!r}; "
-                         f"choose from {SCENARIOS}")
+                         f"choose from {SCENARIOS + FENCE_SCENARIOS}")
     cfg = cfg or (ScenarioConfig.smoke() if smoke else ScenarioConfig())
     model = model or DEFAULT_MODEL
     faults = FaultPlane(seed=seed,
@@ -277,15 +478,23 @@ def run_scenario(scenario: str, variant: str, seed: int = 0,
     if point is None:
         point = ALL_POINTS[int(faults.rng.integers(0, len(ALL_POINTS)))]
     with_crash = scenario in ("crash", "composed")
+    # the partition chaos matrix composes an explicit armed crash point
+    # with the open partition; a plain partition run injects no failure
+    composed_partition = scenario == "partition" and crash_point is not None
     result = ScenarioResult(
         scenario=scenario, variant=variant, seed=seed,
-        crash_point=point if with_crash else None,
+        crash_point=point if (with_crash or composed_partition) else None,
         duration_s=cfg.duration_s, recovery_window_s=None,
         min_tput_during_frac=None, zero_tput_epochs=0,
         membership_changes=0, replication_actions=0,
         flush_rts_dropped=0, recovery=None)
 
-    if with_crash:
+    if scenario == "partition":
+        _run_partition(sim, faults, cfg, offered, result,
+                       point=crash_point)
+    elif scenario == "zombie":
+        _run_zombie(sim, faults, cfg, offered, result)
+    elif with_crash:
         sim.run(cfg.crash_at_s, offered)
         t_crash = sim.now
         _crash_and_recover(sim, faults, point, offered, result)
@@ -529,7 +738,14 @@ def run_overload(variant: str = "dinomo", seed: int = 0,
 def run_suite(variants=BENCH_VARIANTS, scenarios=SCENARIOS, seed: int = 0,
               smoke: bool = False,
               crash_point: str | None = None) -> list[ScenarioResult]:
-    """The bench matrix: every scenario x every variant, one seed."""
-    return [run_scenario(s, v, seed=seed, smoke=smoke,
+    """The bench matrix: every scenario x every variant, one seed,
+    plus the fencing scenarios for every variant with logical
+    ownership (epoch fences are an ownership-plane construct)."""
+    rows = [run_scenario(s, v, seed=seed, smoke=smoke,
                          crash_point=crash_point)
             for s in scenarios for v in variants]
+    owned = [v for v in variants
+             if VARIANTS[v].architecture != "shared_everything"]
+    rows.extend(run_scenario(s, v, seed=seed, smoke=smoke)
+                for s in FENCE_SCENARIOS for v in owned)
+    return rows

@@ -129,6 +129,9 @@ class TimedSimulation:
         for o in self.outages:
             if o.until > self.now and (o.node is None or o.node == name):
                 return False
+        if self.faults is not None and \
+                self.faults.partitioned(name, "kn-dpm", self.now):
+            return False    # cannot reach the DPM pool: ops don't serve
         return True
 
     def _blocked_fraction(self) -> float:
@@ -148,6 +151,11 @@ class TimedSimulation:
             elif o.node in names:
                 total += frac * self.c.ownership.ring.share(o.node,
                                                             samples=512)
+        if self.faults is not None:
+            seen = {o.node for o in self.outages if o.until > self.now}
+            for nm in self.faults.partitioned_kns("kn-dpm", self.now):
+                if nm in names and nm not in seen:
+                    total += self.c.ownership.ring.share(nm, samples=512)
         return min(total, 1.0)
 
     # ------------------------------------------------------------------
@@ -206,9 +214,15 @@ class TimedSimulation:
             rts, queue_depth=queue * stale_penalty - 1.0)
         p99 = avg_lat * (4.0 + 8.0 * max(util - 0.8, 0.0) * 5.0)
         if blocked > 0:
-            # requests to blocked owners wait for the outage to clear
-            rem = max(o.until - self.now for o in self.outages
-                      if o.until > self.now)
+            # requests to blocked owners wait for the outage (or the
+            # partition window) to clear
+            rems = [o.until - self.now for o in self.outages
+                    if o.until > self.now]
+            if self.faults is not None:
+                rems.extend(p.end_s - self.now
+                            for p in self.faults.partitions
+                            if p.kind == "kn-dpm" and p.active(self.now))
+            rem = max(rems, default=self.dt)
             avg_lat = avg_lat + blocked * min(rem, 0.5)
             p99 = max(p99, min(rem, 0.5) * 2.0)
         self.trace.append(TimePoint(self.now, tput, avg_lat, p99,
@@ -236,6 +250,12 @@ class TimedSimulation:
                     blocked.update(c.kns)
                     break
                 blocked.add(o.node)
+        if self.faults is not None:
+            # a KN partitioned from the DPM pool cannot serve: one-sided
+            # reads/writes have nowhere to go (kn-mnode partitions only
+            # hide heartbeats -- the data path keeps working)
+            blocked.update(self.faults.partitioned_kns("kn-dpm", self.now)
+                           & set(c.kns))
         res = c.execute_batch(kinds, keys, value=f"v@{self.now}",
                               blocked_kns=blocked, engine=self.engine)
         if res.executed:
@@ -437,5 +457,8 @@ class TimedSimulation:
                     self.outages.append(Outage(p, self.now + window,
                                                "failover"))
         self.c.mnode.note_failure(self.now)
-        self.log_event("kn_failed", node=name, window_s=window)
+        # detect_s = effective detection latency (heartbeat miss + any
+        # FaultPlane heartbeat delay): scenarios gate on a detection SLO
+        self.log_event("kn_failed", node=name, window_s=window,
+                       detect_s=round(detect_s, 6))
         return window

@@ -1,0 +1,13 @@
+"""Fixture: a _reconfigure that never publishes fence generations."""
+
+
+class DinomoCluster:
+    def _reconfigure(self, plan):
+        # BUG: moves ownership but never calls _publish_fences /
+        # publish_fences, so the pool keeps validating stale tokens
+        for kn in plan:
+            self.ownership.add_kn(kn)
+        self.rebalance()
+
+    def rebalance(self):
+        pass

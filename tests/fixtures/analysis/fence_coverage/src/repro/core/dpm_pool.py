@@ -1,0 +1,53 @@
+"""Fixture: a mini DPMPool with seeded fence-coverage violations.
+
+- log_write: token + check          -> clean
+- fill_segments_batch: token, no check -> unfenced
+- log_write_batch: no token, no check  -> no-token-param + unfenced
+- merge_entries_batch: delegates to apply_merge_plan with the token
+  forwarded                         -> clean (delegation rule)
+- apply_merge_plan / cas_indirect: token + check -> clean
+- recover_kn: missing entirely      -> missing-entry
+"""
+
+
+class DPMPool:
+    def _check_fence(self, kn, token, op):
+        cur = self.fence.get(kn)
+        if token != cur:
+            return ("fenced", kn, op, token, cur)
+        return None
+
+    def log_write(self, kn, key, value, length, sealed=True, req_id=-1,
+                  token=None):
+        fenced = self._check_fence(kn, token, "log_write")
+        if fenced is not None:
+            return fenced
+        return (key, value)
+
+    def fill_segments_batch(self, kn, keys, ptrs, req_ids=None,
+                            token=None):
+        # BUG: token accepted but never validated
+        for k, p in zip(keys, ptrs):
+            self.store[k] = p
+
+    def log_write_batch(self, kn, keys, values, lengths):
+        # BUG: no token parameter at all
+        for k, v in zip(keys, values):
+            self.store[k] = v
+
+    def merge_entries_batch(self, entries, seg, max_ops=None, token=None):
+        plan = list(entries)
+        return self.apply_merge_plan(plan, token=token)
+
+    def apply_merge_plan(self, plan, token=None, kn=None):
+        fenced = self._check_fence(kn, token, "apply_merge_plan")
+        if fenced is not None:
+            return fenced
+        return len(plan)
+
+    def cas_indirect(self, key, expect, new, kn=None, token=None):
+        fenced = self._check_fence(kn, token, "cas_indirect")
+        if fenced is not None:
+            return fenced
+        self.indirect[key] = new
+        return True

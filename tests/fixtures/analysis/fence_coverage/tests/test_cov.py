@@ -1,0 +1,6 @@
+# Deliberately never names the fenced no-op result type, so the
+# untested-coverage rule fires.
+
+
+def test_nothing():
+    pass

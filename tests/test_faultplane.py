@@ -21,7 +21,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import (ARMABLE_POINTS, CRASH_POINTS, DPMPool, FaultPlane,
-                        KNCrash, Op, check_history)
+                        KNCrash, LOG_MERGE_POINTS, Op, check_history)
 from repro.core.log import (PySegment, SEALED, log_append, recover_segment,
                             segment_init)
 
@@ -158,12 +158,15 @@ def crash_recover_check(point: str, after: int, seed: int,
 
 
 class TestArmedCrashRecovery:
-    """Every armable crash point, deterministic offsets."""
+    """Every log/merge crash point, deterministic offsets.  These
+    drivers never CAS, so they sweep LOG_MERGE_POINTS (the
+    fire-guaranteed subset); the armed ``rep.post_cas`` flavor gets its
+    own CAS-shaped driver in TestArmedPostCas."""
 
     # rotation / post_apply count *events* (far rarer than entries), so
     # their offsets stay small; entry-counted points get deep ones too
     @pytest.mark.parametrize("point,after", [
-        (p, a) for p in ARMABLE_POINTS for a in (0, 1, 3)
+        (p, a) for p in LOG_MERGE_POINTS for a in (0, 1, 3)
     ] + [("log.pre_seal", 17), ("merge.mid_apply", 17)])
     def test_recovered_equals_acked_replay(self, point, after):
         fired = any(crash_recover_check(point, after, seed, tombstones=True)
@@ -175,7 +178,7 @@ class TestArmedCrashRecovery:
         assert crash_recover_check("log.rotation", after=10_000,
                                    seed=0, tombstones=False) is False
 
-    @given(point=st.sampled_from(ARMABLE_POINTS),
+    @given(point=st.sampled_from(LOG_MERGE_POINTS),
            after=st.integers(min_value=0, max_value=40),
            seed=st.integers(min_value=0, max_value=2 ** 16),
            tombstones=st.booleans())
@@ -185,7 +188,7 @@ class TestArmedCrashRecovery:
         crash_recover_check(point, after, seed, tombstones)
 
     @pytest.mark.chaos
-    @given(point=st.sampled_from(ARMABLE_POINTS),
+    @given(point=st.sampled_from(LOG_MERGE_POINTS),
            after=st.integers(min_value=0, max_value=200),
            seed=st.integers(min_value=0, max_value=2 ** 32 - 1),
            tombstones=st.booleans(),
@@ -293,13 +296,13 @@ def retry_exactly_once_check(point: str, after: int, seed: int,
 class TestRetryIdempotency:
     """Satellite: exactly-once retries across crash points."""
 
-    @pytest.mark.parametrize("point", ARMABLE_POINTS)
+    @pytest.mark.parametrize("point", LOG_MERGE_POINTS)
     def test_each_point_fires_and_holds(self, point):
         fired = any(retry_exactly_once_check(point, after, seed)
                     for after in (0, 1, 3) for seed in range(3))
         assert fired, f"{point} never fired"
 
-    @given(point=st.sampled_from(ARMABLE_POINTS),
+    @given(point=st.sampled_from(LOG_MERGE_POINTS),
            after=st.integers(min_value=0, max_value=60),
            seed=st.integers(min_value=0, max_value=2 ** 16))
     @settings(max_examples=25, deadline=None)
@@ -307,7 +310,7 @@ class TestRetryIdempotency:
         retry_exactly_once_check(point, after, seed)
 
     @pytest.mark.chaos
-    @given(point=st.sampled_from(ARMABLE_POINTS),
+    @given(point=st.sampled_from(LOG_MERGE_POINTS),
            after=st.integers(min_value=0, max_value=250),
            seed=st.integers(min_value=0, max_value=2 ** 32 - 1),
            segment_capacity=st.sampled_from([4, 8, 32]))
@@ -317,6 +320,89 @@ class TestRetryIdempotency:
         retry_exactly_once_check(point, after, seed, writes=200,
                                  key_space=60,
                                  segment_capacity=segment_capacity)
+
+
+class TestArmedPostCas:
+    """``rep.post_cas`` is armable (ISSUE 10 satellite): the crash
+    fires *inside* ``DPMPool.cas_indirect`` right after the CAS swings,
+    so the torn state is produced by the real code path instead of
+    ``force_crash``'s imposed mutation."""
+
+    def _pool(self, seed=0):
+        pool = DPMPool(num_buckets=1 << 8, segment_capacity=8)
+        pool.register_kn("a")
+        pool.log_write("a", 5, "v0", 2)
+        pool.merge_all()
+        pool.install_indirect(5)
+        fp = FaultPlane(seed=seed)
+        pool.faults = fp
+        return pool, fp
+
+    @pytest.mark.parametrize("after", [0, 1, 3])
+    def test_dangling_cas_detected_and_rewound(self, after):
+        """The CAS lands on a target whose log entry never sealed: the
+        armed crash leaves the dangling-pointer hazard, detection names
+        it, recovery rewinds the slot to the last acked CAS."""
+        pool, fp = self._pool()
+        # an acked CAS establishes the rewind target in the log (the
+        # original v0 entry is already merged and GC-collected)
+        seg = pool.segments["a"][-1]
+        first = pool.alloc_value("v_acked", 7, seg)
+        seg.append(5, first, sealed=True)
+        assert pool.cas_indirect(5, pool.indirect[5], first, kn="a")
+        acked, acked_val = first, "v_acked"
+        fp.arm_crash("rep.post_cas", kn="a", after=after)
+        for i in range(after):
+            seg = pool.segments["a"][-1]
+            new = pool.alloc_value(f"v{i + 1}", 4, seg)
+            seg.append(5, new, sealed=True)
+            assert pool.cas_indirect(5, pool.indirect[5], new, kn="a")
+            acked, acked_val = new, f"v{i + 1}"
+        seg = pool.segments["a"][-1]
+        dangling = pool.alloc_value("v_dangling", 10, seg)
+        with pytest.raises(KNCrash) as ei:
+            pool.cas_indirect(5, pool.indirect[5], dangling, kn="a")
+        assert ei.value.kn == "a" and ei.value.point == "rep.post_cas"
+        assert pool.indirect[5] == dangling     # the CAS physically swung
+        assert any("unsealed target" in v for v in pool.verify_integrity())
+
+        out = pool.recover_kn("a")
+        pool.faults = None
+        assert pool.verify_integrity() == [], pool.verify_integrity()
+        assert out["repaired_indirect"] >= 1
+        assert pool.indirect[5] == acked
+        assert observed_value(pool, 5) == acked_val
+
+    def test_sealed_target_cas_is_durable(self):
+        """When the crashed CAS's target had already sealed, the CAS is
+        durable: recovery keeps it (only the superseded pointer's GC
+        accounting needed repair)."""
+        pool, fp = self._pool()
+        fp.arm_crash("rep.post_cas", kn="a", after=0)
+        seg = pool.segments["a"][-1]
+        new = pool.alloc_value("v1", 2, seg)
+        seg.append(5, new, sealed=True)
+        with pytest.raises(KNCrash):
+            pool.cas_indirect(5, pool.indirect[5], new, kn="a")
+        assert pool.indirect[5] == new
+        pool.recover_kn("a")
+        pool.faults = None
+        assert pool.verify_integrity() == [], pool.verify_integrity()
+        assert pool.indirect[5] == new
+        pool.merge_all()
+        assert observed_value(pool, 5) == "v1"
+
+    def test_unarmed_cas_never_fires(self):
+        """Without ``kn=`` (or without arming) cas_indirect stays
+        crash-free -- pre-existing callers are unaffected."""
+        pool, fp = self._pool()
+        fp.arm_crash("rep.post_cas", kn="a", after=0)
+        seg = pool.segments["a"][-1]
+        new = pool.alloc_value("v1", 2, seg)
+        seg.append(5, new, sealed=True)
+        assert pool.cas_indirect(5, pool.indirect[5], new)  # no kn: no hook
+        fp.disarm()
+        assert pool.verify_integrity() == []
 
 
 class TestForcedCrashes:
@@ -387,8 +473,6 @@ class TestForcedCrashes:
         fp = FaultPlane()
         with pytest.raises(ValueError):
             fp.force_crash(DPMPool(), "a", "log.bogus")
-        with pytest.raises(ValueError):
-            fp.arm_crash("rep.post_cas")        # forced-only point
 
 
 class TestTornTailSemantics:
@@ -446,7 +530,7 @@ class TestCrashPointRegistry:
         "log.rotation": "events",
         "merge.mid_apply": "entries",
         "merge.post_apply": "events",
-        "rep.post_cas": "forced only",
+        "rep.post_cas": "events",
     }
 
     @staticmethod
@@ -466,8 +550,9 @@ class TestCrashPointRegistry:
         assert {p.value for p in CRASH_POINTS} == set(self.EXPECTED)
         from repro.core import ALL_POINTS
         assert tuple(p.value for p in ALL_POINTS) == tuple(self.EXPECTED)
-        assert tuple(ARMABLE_POINTS) == tuple(ALL_POINTS[:4])
-        assert "rep.post_cas" not in ARMABLE_POINTS
+        assert tuple(ARMABLE_POINTS) == tuple(ALL_POINTS)
+        assert "rep.post_cas" in ARMABLE_POINTS
+        assert tuple(LOG_MERGE_POINTS) == tuple(ALL_POINTS[:4])
 
     def test_roadmap_table_matches_enum(self):
         rows = self._roadmap_fault_table()
@@ -487,8 +572,8 @@ class TestCrashPointRegistry:
         fp = FaultPlane(seed=0)
         with pytest.raises(ValueError, match="unknown crash point"):
             fp.arm_crash("log.not_a_point")
-        with pytest.raises(ValueError, match="cannot arm"):
-            fp.arm_crash("rep.post_cas")
+        fp.arm_crash("rep.post_cas")    # armable since ISSUE 10
+        fp.disarm()
         with pytest.raises(ValueError, match="unknown crash point"):
             fp.force_crash(DPMPool(), "kn1", "merge.not_a_point")
 

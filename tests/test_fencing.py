@@ -1,0 +1,398 @@
+"""Epoch fencing plane (ISSUE 10 tentpole): zombie owners cannot write.
+
+Under imperfect failure detection a partitioned-but-alive KN can be
+declared dead while it still holds one-sided write credentials -- the
+false-positive story of paper Sec. 3.5/3.6.  The fence makes that safe:
+``OwnershipMap`` stamps a monotone fence generation per ownership
+interval, ``DinomoCluster._reconfigure`` publishes it into the pool's
+authoritative fence table on every handoff, and every DPM mutation
+entry point validates the caller's token before touching anything.
+
+Covered here:
+
+- fence-generation bookkeeping: monotone bumps on membership changes,
+  durable across the ownership snapshot blob, removal fencing in the
+  pool table;
+- the purity property (hypothesis): a stale-generation write at *any*
+  entry point leaves pool state, GC accounting, and the exactly-once
+  ``req_index`` bit-identical to never having issued it -- including
+  across a subsequent crash + recovery;
+- REPRO_SANITIZE: a KN-context mutation of fenced state without a
+  token is a fence *bypass* and trips OwnershipViolation at the store;
+- gray KNs: a fail-slow spec inflates the request plane's live RT EWMA
+  (the signal hedging keys off);
+- the partition / zombie scenarios end to end (smoke profile), plus
+  the chaos matrix composing a partition with an armed crash point.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (DINOMO, DinomoCluster, FaultPlane, FencedWrite,
+                        KNCrash, OwnershipMap)
+from repro.core import sanitize
+from repro.core.dpm_pool import DPMPool
+from repro.core.faults import LOG_MERGE_POINTS, PARTITION_KINDS
+from repro.core.netmodel import DEFAULT_MODEL
+from repro.core.scenarios import run_scenario
+
+# every DPM mutation entry point, exercised with a stale token below --
+# the same surface the fence-coverage static pass pins
+ENTRY_POINTS = ("log_write", "log_write_batch", "fill_segments_batch",
+                "merge_entries_batch", "apply_merge_plan",
+                "cas_indirect", "recover_kn")
+
+KN = "a"
+
+
+def make_pool(seed_keys=(1, 2, 3), gen=1):
+    pool = DPMPool(num_buckets=1 << 10, segment_capacity=8)
+    pool.register_kn(KN)
+    pool.publish_fences({KN: gen})
+    tok = pool.fence_token(KN)
+    for i, k in enumerate(seed_keys):
+        pool.log_write(KN, k, f"v{k}", 8, req_id=100 + i, token=tok)
+    return pool
+
+
+def pool_state(pool):
+    """Everything a write could touch, in comparable form: index
+    arrays, heap, per-segment logs (entries/seals/reqs/gens/marks/GC
+    cursors), the exactly-once table, indirection, GC counters."""
+    segs = {
+        kn: [(list(s.entries), list(s.sealed), list(s.reqs),
+              list(s.gens), list(s.gen_marks), s.valid, s.merged_upto)
+             for s in lst]
+        for kn, lst in pool.segments.items()
+    }
+    return (
+        pool.index.keys.tobytes(), pool.index.ptrs.tobytes(),
+        pool.index.nxt.tobytes(), pool.index.size, pool.index.version,
+        list(pool.heap_val), list(pool.heap_len),
+        [None if s is None else (s.kn, id(s)) for s in pool.heap_seg],
+        segs, dict(pool.req_index), dict(pool.indirect),
+        pool._indirect_version,
+        (pool.gc.segments_created, pool.gc.segments_collected,
+         pool.gc.entries_merged),
+        len(pool.merge_backlog),
+    )
+
+
+def stage_stale_op(pool, name, stale, keys):
+    """Stage one stale-token mutation at ``name`` and return the
+    zero-arg callable that issues it.  Any setup a real caller would
+    do first (value allocation for a staged oplog) happens *now*, so
+    the caller snapshots after it -- mirroring a zombie that staged
+    its oplog while still alive."""
+    if name == "log_write":
+        return lambda: pool.log_write(KN, keys[0], "z", 8, req_id=999,
+                                      token=stale)
+    if name == "log_write_batch":
+        return lambda: pool.log_write_batch(
+            KN, keys, [f"z{k}" for k in keys], [8] * len(keys),
+            token=stale)
+    if name == "fill_segments_batch":
+        base = pool.alloc_values_batch([f"z{k}" for k in keys],
+                                       [8] * len(keys))
+        ptrs = list(range(base, base + len(keys)))
+        return lambda: pool.fill_segments_batch(KN, keys, ptrs,
+                                                token=stale)
+    if name == "merge_entries_batch":
+        seg = pool.active_segment(KN)
+        entries = list(seg.entries)
+        return lambda: pool.merge_entries_batch(entries, seg,
+                                                token=stale)
+    if name == "apply_merge_plan":
+        # the fence validates before the plan is touched, so the
+        # stale path never dereferences it
+        return lambda: pool.apply_merge_plan(None, token=stale, kn=KN)
+    if name == "cas_indirect":
+        return lambda: pool.cas_indirect(keys[0], None, 0, kn=KN,
+                                         token=stale)
+    if name == "recover_kn":
+        return lambda: pool.recover_kn(KN, token=stale)
+    raise AssertionError(name)
+
+
+class TestFenceBookkeeping:
+    def test_membership_changes_bump_participants_monotonically(self):
+        m = OwnershipMap()
+        for kn in ("a", "b", "c"):
+            m.add_kn(kn)
+        toks = {kn: m.fence_token(kn) for kn in ("a", "b", "c")}
+        assert all(t is not None for t in toks.values())
+        m.add_kn("d")
+        # the joiner is stamped with the new version; every bumped
+        # participant only ever moves forward
+        assert m.fence_token("d") == m.version
+        for kn in ("a", "b", "c"):
+            assert m.fence_token(kn) >= toks[kn]
+        m.remove_kn("b", failed=True)
+        assert m.fence_token("b") is None
+
+    def test_snapshot_blob_round_trips_fences(self):
+        m = OwnershipMap()
+        for kn in ("a", "b", "c"):
+            m.add_kn(kn)
+        m.remove_kn("c", failed=True)
+        m2 = OwnershipMap.from_blob(m.snapshot_blob())
+        assert m2.fence == m.fence
+        assert m2.version == m.version
+
+    def test_pool_removal_fences_at_generation_infinity(self):
+        pool = make_pool(gen=3)
+        tok = pool.fence_token(KN)
+        pool.publish_fences({})          # KN removed from the table
+        assert pool.fence_token(KN) is None
+        r = pool.log_write(KN, 9, "z", 8, token=tok)
+        assert isinstance(r, FencedWrite)
+        assert r.current is None         # fenced at infinity, not 0
+
+    def test_publish_never_regresses_a_generation(self):
+        pool = make_pool(gen=5)
+        pool.publish_fences({KN: 3})     # stale ownership snapshot
+        assert pool.fence_token(KN) == 5
+
+    def test_cluster_reconfigure_refreshes_live_tokens(self):
+        c = DinomoCluster(DINOMO, num_kns=3, cache_bytes=1 << 14,
+                          num_buckets=1 << 10, seed=7)
+        c.load((k, f"v{k}") for k in range(64))
+        for nm, kn in c.kns.items():
+            assert kn.fence_token == c.pool.fence_token(nm)
+            assert kn.fence_token == c.ownership.fence_token(nm)
+        old = {nm: kn.fence_token for nm, kn in c.kns.items()}
+        c.add_kn()
+        assert any(kn.fence_token != old.get(nm)
+                   for nm, kn in c.kns.items())
+        for nm, kn in c.kns.items():
+            if kn.alive:
+                assert kn.fence_token == c.pool.fence_token(nm)
+
+
+class TestStaleWriteIsPureNoOp:
+    """The tentpole property: a rejected write is a *clean* no-op --
+    no torn state, no partial scatter, no accounting drift."""
+
+    @given(name=st.sampled_from(ENTRY_POINTS),
+           keys=st.lists(st.integers(0, 500), min_size=1, max_size=6),
+           bumps=st.integers(1, 4))
+    @settings(max_examples=120, deadline=None)
+    def test_state_bit_identical(self, name, keys, bumps):
+        keys = list(dict.fromkeys(keys))
+        pool = make_pool(seed_keys=keys)
+        stale = pool.fence_token(KN)
+        pool.publish_fences({KN: stale + bumps})   # ownership moved on
+        op = stage_stale_op(pool, name, stale, keys)
+        before = pool_state(pool)
+        nfenced = len(pool.fenced_writes)
+        r = op()
+        assert isinstance(r, FencedWrite) and not r
+        assert r.op == name and r.token == stale
+        assert pool_state(pool) == before
+        assert len(pool.fenced_writes) == nfenced + 1
+        assert pool.verify_integrity() == []
+
+    @given(name=st.sampled_from(ENTRY_POINTS),
+           raw=st.lists(st.integers(0, 500), min_size=1, max_size=6))
+    @settings(max_examples=40, deadline=None)
+    def test_identical_across_crash_and_recovery(self, name, raw):
+        """Two identically-built pools; one absorbs a stale write.
+        After the same crash + recovery on both, they are still
+        bit-identical: the fenced no-op left nothing for recovery to
+        see.  (heap_seg identities differ across pools, so the aligned
+        raw columns are compared instead of ``pool_state``.)"""
+        keys = list(dict.fromkeys(raw))
+        pools = [make_pool(seed_keys=keys) for _ in range(2)]
+        stale = pools[0].fence_token(KN)
+        for p in pools:
+            p.publish_fences({KN: stale + 1})
+        # both zombies stage the oplog; only the first issues the flush
+        ops = [stage_stale_op(p, name, stale, keys) for p in pools]
+        assert isinstance(ops[0](), FencedWrite)
+        for p in pools:
+            # fail-stop: tear the active tail, then recover
+            act = p.active_segment(KN)
+            if act.entries:
+                act.sealed[-1] = False
+            p.recover_kn(KN)
+            assert p.verify_integrity() == []
+
+        def comparable(p):
+            segs = {kn: [(list(s.entries), list(s.sealed), list(s.reqs),
+                          list(s.gens), s.valid, s.merged_upto)
+                         for s in lst]
+                    for kn, lst in p.segments.items()}
+            return (p.index.keys.tobytes(), p.index.ptrs.tobytes(),
+                    list(p.heap_val), list(p.heap_len), segs,
+                    dict(p.req_index), dict(p.indirect),
+                    (p.gc.segments_created, p.gc.segments_collected,
+                     p.gc.entries_merged))
+
+        assert comparable(pools[0]) == comparable(pools[1])
+
+    def test_valid_token_still_writes(self):
+        pool = make_pool()
+        tok = pool.fence_token(KN)
+        ptr, _rotated = pool.log_write(KN, 9, "z", 8, token=tok)
+        assert pool.heap_val[ptr] == "z"
+        assert pool.active_segment(KN).gens[-1] == tok
+
+
+class TestFenceBypassSanitizer:
+    """REPRO_SANITIZE integration: a KN-context caller mutating fenced
+    state without presenting a token is a bypass, not a management
+    write, and trips OwnershipViolation at the store."""
+
+    @pytest.fixture
+    def sanitized(self):
+        was = sanitize.enabled()
+        sanitize.enable()
+        yield
+        if not was:
+            sanitize.disable()
+
+    def test_kn_context_bypass_trips(self, sanitized):
+        pool = make_pool()
+        with sanitize.owned(KN):
+            with pytest.raises(sanitize.OwnershipViolation,
+                               match="fence bypass"):
+                pool.log_write(KN, 9, "z", 8)      # no token presented
+        with sanitize.owned("other"):
+            with pytest.raises(sanitize.OwnershipViolation,
+                               match="fence bypass"):
+                pool.recover_kn(KN)
+
+    def test_management_and_unfenced_paths_pass(self, sanitized):
+        pool = make_pool()
+        with sanitize.management():
+            pool.log_write(KN, 9, "z", 8)          # reconfig/recovery
+        pool.register_kn("unfenced")
+        with sanitize.owned("unfenced"):
+            pool.log_write("unfenced", 10, "z", 8)  # no fence installed
+        assert pool.verify_integrity() == []
+
+    def test_disabled_sanitizer_keeps_legacy_path(self):
+        was = sanitize.enabled()
+        sanitize.disable()
+        try:
+            pool = make_pool()
+            ptr, _ = pool.log_write(KN, 9, "z", 8)  # management-style
+            assert pool.heap_val[ptr] == "z"
+        finally:
+            if was:
+                sanitize.enable()
+
+
+class TestGrayKNVisibility:
+    """Satellite: a fail-slow (gray) KN is visible to the request
+    plane's live RT EWMA -- the signal hedged reads key off."""
+
+    def test_slow_factor_windows(self):
+        fp = FaultPlane(seed=0)
+        fp.fail_slow("a", 4.0, start_s=10.0, end_s=20.0)
+        fp.fail_slow("a", 6.0, start_s=15.0, end_s=25.0)
+        assert fp.slow_factor("a", 5.0) == 1.0
+        assert fp.slow_factor("a", 12.0) == 4.0
+        assert fp.slow_factor("a", 17.0) == 6.0    # max over overlaps
+        assert fp.slow_factor("a", 30.0) == 1.0
+        assert fp.slow_factor("b", 12.0) == 1.0
+
+    def test_ewma_sees_gray_kn(self):
+        from repro.core.netmodel import ArrivalProcess
+        from repro.core.requestplane import RequestPlane, \
+            RequestPlaneConfig
+        from repro.core.scenarios import estimated_capacity
+        from repro.data import Workload
+        c = DinomoCluster(DINOMO, num_kns=4, cache_bytes=1 << 18,
+                          value_bytes=256, num_buckets=1 << 11,
+                          segment_capacity=64, model=DEFAULT_MODEL,
+                          seed=0)
+        c.load((k, f"v{k}") for k in range(1500))
+        gray = sorted(c.kns)[0]
+        fp = FaultPlane(seed=0)
+        fp.fail_slow(gray, 8.0, start_s=0.0, end_s=1e9)
+        c.pool.faults = fp
+        wl = Workload(num_keys=1500, zipf=0.99,
+                      mix="read_mostly_update", value_bytes=256, seed=1)
+        cap = estimated_capacity(DEFAULT_MODEL, len(c.kns),
+                                 "read_mostly_update", value_bytes=256)
+        plane = RequestPlane(c, ArrivalProcess(rate=0.5 * cap),
+                             wl.timed_batched, cfg=RequestPlaneConfig(),
+                             model=DEFAULT_MODEL, seed=1)
+        plane.run(0.25)
+        others = [v for nm, v in plane.rts_est.items() if nm != gray]
+        assert gray in plane.rts_est and others
+        assert plane.rts_est[gray] > 3.0 * max(others)
+
+
+class TestFenceScenarios:
+    """The false-positive detection story end to end (smoke profile;
+    the full matrix is the nightly chaos sweep)."""
+
+    def test_partition_degrades_then_recovers(self):
+        r = run_scenario("partition", "dinomo", seed=0, smoke=True)
+        assert r.violations == []
+        assert r.crash_point is None               # no failure injected
+        assert r.extra["partitioned_kn"]
+        assert r.extra["min_delivery_during"] < 0.97
+        assert r.extra["mean_delivery_after"] > 0.5
+
+    def test_zombie_flush_fences_and_stays_linearizable(self):
+        r = run_scenario("zombie", "dinomo", seed=0, smoke=True)
+        assert r.violations == []
+        e = r.extra
+        assert e["zombie_attempts"] > 0
+        assert e["zombie_fenced"] == e["zombie_attempts"]
+        assert e["fenced_write_records"] >= e["zombie_attempts"]
+        assert e["linearizable"]
+        assert e["detect_s"] is not None and e["detect_s"] < 1.0
+
+    def test_zombie_detection_latency_logged_per_failure(self):
+        r = run_scenario("zombie", "dinomo", seed=1, smoke=True)
+        assert r.violations == []
+        # the satellite contract: every kn_failed event carries its
+        # effective detection latency for detection-SLO gating
+        assert r.extra["detect_s"] > 0
+
+    @pytest.mark.chaos
+    @pytest.mark.parametrize("scenario", ("partition", "zombie"))
+    @pytest.mark.parametrize("variant", ("dinomo", "dinomo-n"))
+    @pytest.mark.parametrize("seed", range(3))
+    def test_chaos_fence_matrix(self, scenario, variant, seed):
+        r = run_scenario(scenario, variant, seed=seed, smoke=True)
+        assert r.violations == [], (scenario, variant, seed,
+                                    r.violations)
+
+    @pytest.mark.chaos
+    @pytest.mark.parametrize("point", LOG_MERGE_POINTS)
+    @pytest.mark.parametrize("seed", range(2))
+    def test_chaos_partition_composes_armed_crash(self, point, seed):
+        """The satellite matrix: a KN crashes at an armed crash point
+        while a *different* KN's DPM link is partitioned."""
+        r = run_scenario("partition", "dinomo", seed=seed, smoke=True,
+                         crash_point=point)
+        assert r.violations == [], (point, seed, r.violations)
+        assert r.crash_point == point
+
+
+class TestPartitionKinds:
+    def test_kn_dpm_blocks_data_path_kn_mnode_does_not(self):
+        fp = FaultPlane(seed=0)
+        fp.partition("a", "kn-dpm", start_s=0.0, end_s=10.0)
+        fp.partition("b", "kn-mnode", start_s=0.0, end_s=10.0)
+        assert fp.partitioned("a", "kn-dpm", 5.0)
+        assert not fp.partitioned("a", "kn-dpm", 15.0)   # healed
+        assert fp.partitioned_kns("kn-dpm", 5.0) == {"a"}
+        assert fp.partitioned_kns("kn-mnode", 5.0) == {"b"}
+        with pytest.raises(ValueError):
+            fp.partition("a", "kn-rack", 0.0, 1.0)
+        assert set(PARTITION_KINDS) == {"kn-dpm", "kn-mnode"}
+
+    def test_heal_closes_open_windows_early(self):
+        fp = FaultPlane(seed=0)
+        fp.partition("a", "kn-dpm", start_s=0.0, end_s=100.0)
+        healed = fp.heal_partitions("a", t=5.0)
+        assert healed == 1
+        assert not fp.partitioned("a", "kn-dpm", 6.0)

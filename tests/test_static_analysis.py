@@ -19,7 +19,8 @@ from repro.analysis import Corpus, Finding, load_baseline, repo_root, \
     run_passes
 from repro.analysis.passes import (ALL_PASSES, crash_points,
                                    deprecations, determinism,
-                                   kernel_hygiene, plan_purity)
+                                   fence_coverage, kernel_hygiene,
+                                   plan_purity)
 
 FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
 
@@ -69,6 +70,44 @@ class TestCrashPointPass:
         assert fs[0].fingerprint == expected_fp(
             "crash-points", "src/repro/core/dpm_pool.py", "take_crash",
             "undeclared:log.not_declared")
+
+
+class TestFenceCoveragePass:
+    def test_catches_seeded_fence_gaps(self):
+        fs = fence_coverage.run(fixture_corpus("fence_coverage"))
+        details = {f.detail for f in fs}
+        assert details == {
+            "unfenced:fill_segments_batch",
+            "no-token-param:log_write_batch",
+            "unfenced:log_write_batch",
+            "missing-entry:recover_kn",
+            "no-publish",
+            "untested:FencedWrite",
+        }, details
+        # the delegation rule: merge_entries_batch forwards the token
+        # to apply_merge_plan, so it must NOT be flagged
+        assert not any("merge_entries_batch" in d for d in details)
+        unfenced = next(f for f in fs
+                        if f.detail == "unfenced:fill_segments_batch")
+        assert unfenced.fingerprint == expected_fp(
+            "fence-coverage", "src/repro/core/dpm_pool.py",
+            "DPMPool.fill_segments_batch",
+            "unfenced:fill_segments_batch")
+        pub = next(f for f in fs if f.detail == "no-publish")
+        assert pub.file == "src/repro/core/cluster.py"
+        assert pub.symbol == "DinomoCluster._reconfigure"
+
+    def test_registered_and_real_tree_entry_points_exist(self):
+        # the pass is wired into the registry CI runs
+        from repro.analysis.passes import BY_NAME
+        assert BY_NAME["fence-coverage"] is fence_coverage
+        # and on the real tree no structural finding fires (the clean
+        # state itself is asserted by TestRealTree over ALL_PASSES)
+        fs = fence_coverage.run(Corpus(repo_root()))
+        structural = [f for f in fs
+                      if f.detail.startswith(("missing", "no-token",
+                                              "unfenced", "no-publish"))]
+        assert not structural, [f.render() for f in structural]
 
 
 class TestDeterminismPass:
